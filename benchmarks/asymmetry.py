@@ -1,0 +1,39 @@
+"""Paper Figure 2: the two asymmetric regimes.
+
+(a) Communication dominates (4090): int8 wire traffic halves the comm share.
+(b) Computation dominates (A800): the in-flight-collective compute penalty eats
+    part of the ISO win; the table quantifies the sensitivity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import get_model_config
+from repro.perf.model import HW_PROFILES, layer_costs, prefill_time
+
+
+def run(emit):
+    cfg30 = get_model_config("paper-30b")
+    seq = 8192
+    # (a) comm share, fp16 vs int8, 4090 tp=4
+    hw = HW_PROFILES["4090"]
+    for mode, int8 in (("fp16", False), ("int8", True)):
+        c = layer_costs(cfg30, 0, seq, hw, 4, int8_comm=int8)
+        share = 2 * c["comm"] / (c["attn"] + c["mlp"] + 2 * c["comm"])
+        emit(f"asym/comm_share/4090/{mode}", c["comm"] * 1e6,
+             f"share={share:.2f};paper={'~0.75' if mode == 'fp16' else '~0.5'}")
+    # (b) penalty sweep on a800-like parts (paper: 15-20% compute slowdown)
+    cfg70 = get_model_config("paper-70b")
+    base = prefill_time(cfg70, seq, "a800", 8, iso=False)
+    for pen in (0.0, 0.10, 0.18, 0.25):
+        hw_p = dataclasses.replace(HW_PROFILES["a800"], comm_penalty=pen)
+        import repro.perf.model as pm
+        old = pm.HW_PROFILES["a800"]
+        pm.HW_PROFILES["a800"] = hw_p
+        try:
+            t = prefill_time(cfg70, seq, "a800", 8,
+                             lengths=[seq // 2, seq // 2])
+        finally:
+            pm.HW_PROFILES["a800"] = old
+        emit(f"asym/penalty/a800/{pen:.2f}", t * 1e6,
+             f"reduction={100 * (1 - t / base):.1f}%")

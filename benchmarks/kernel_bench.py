@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks.
+
+Wall-clock on this container measures the XLA path of the pure-jnp references
+(the Pallas kernels run in interpret mode here — Python-speed, TPU-only for real
+timing), so the derived column carries what a dry run CAN measure: achieved
+FLOPs of the reference path and the kernels' VMEM working-set per BlockSpec
+tile, checked against the 128-multiple MXU alignment rule."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import ref
+
+
+def run(emit):
+    key = jax.random.PRNGKey(0)
+    # flash attention reference path
+    B, Hq, Hkv, Sq, Sk, hd = 1, 8, 2, 1024, 1024, 128
+    q = jax.random.normal(key, (B, Hq, Sq, hd), jnp.bfloat16)
+    k = jax.random.normal(key, (B, Hkv, Sk, hd), jnp.bfloat16)
+    v = jax.random.normal(key, (B, Hkv, Sk, hd), jnp.bfloat16)
+    fa = jax.jit(lambda a, b, c: ref.flash_prefill_ref(a, b, c))
+    us = time_fn(fa, q, k, v)
+    flops = 4.0 * B * Hq * Sq * Sk * hd / 2
+    emit("kernel/flash_ref_1k", us, f"gflops={flops / us / 1e3:.1f}")
+    # BlockSpec working sets (bytes in VMEM per tile) — the structural check
+    for bq, bk in ((128, 128), (256, 512)):
+        ws = (bq * hd + 2 * bk * hd + bq * hd) * 4 + bq * (hd + 2) * 4
+        emit(f"kernel/flash_vmem_bq{bq}_bk{bk}", 0.0,
+             f"vmem_bytes={ws};fits_16MB={ws < 16 * 2**20};aligned="
+             f"{bq % 128 == 0 and bk % 128 == 0 and hd % 128 == 0}")
+    # quantize
+    x = jax.random.normal(key, (4096, 4096), jnp.bfloat16)
+    qf = jax.jit(lambda a: ref.quantize_int8_ref(a))
+    us = time_fn(qf, x)
+    emit("kernel/int8_quant_16M", us,
+         f"gbps={x.size * 2 / us / 1e3:.1f}")
+    # rmsnorm + swiglu
+    g = jax.random.normal(key, (8192, 2048), jnp.bfloat16)
+    us = time_fn(jax.jit(lambda a: ref.rms_norm_ref(a, jnp.ones(2048))), g)
+    emit("kernel/rmsnorm_16M", us, f"gbps={g.size * 2 / us / 1e3:.1f}")
+    u = jax.random.normal(key, (8192, 2048), jnp.bfloat16)
+    us = time_fn(jax.jit(ref.swiglu_ref), g, u)
+    emit("kernel/swiglu_16M", us, f"gbps={2 * g.size * 2 / us / 1e3:.1f}")

@@ -1,0 +1,44 @@
+"""Reproduce the EXPERIMENTS.md §Perf hillclimb ledgers (H1/H2/H3).
+
+Standalone (takes ~10 min of compiles; not part of `benchmarks.run`):
+
+    PYTHONPATH=src python -m benchmarks.perf_ledger
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+LEDGERS = [
+    ("H1: kimi-k2-1t-a32b x train_4k", "kimi-k2-1t-a32b", "train_4k", [
+        ("baseline (paper-faithful ISO n=2)", {}),
+        ("int8 DP grads", {"grad_int8": True}),
+        ("+ int8 TP collectives", {"grad_int8": True, "quantized": True}),
+        ("ZeRO-1 + int8 TP", {"zero1": True, "quantized": True}),
+    ]),
+    ("H2: qwen3-32b x prefill_32k", "qwen3-32b", "prefill_32k", [
+        ("baseline", {}),
+        ("XLA blockwise attention", {"blockwise_attn": True}),
+        ("int8 TP collectives", {"quantized": True}),
+    ]),
+    ("H3: qwen3-8b x prefill_32k", "qwen3-8b", "prefill_32k", [
+        ("baseline", {}),
+        ("int8 TP collectives", {"quantized": True}),
+        ("+ blockwise attention", {"quantized": True, "blockwise_attn": True}),
+    ]),
+]
+
+
+def main():
+    from repro.launch.dryrun import lower_shape
+    for title, arch, shape, variants in LEDGERS:
+        print(f"\n=== {title} ===")
+        print(f"{'variant':38s} {'compute':>10s} {'memory<=':>10s} "
+              f"{'collective':>11s}")
+        for label, kw in variants:
+            r = lower_shape(arch, shape, verbose=False, **kw)
+            ro = r["roofline"]
+            print(f"{label:38s} {ro['compute_s']:10.3g} {ro['memory_s']:10.3g} "
+                  f"{ro['collective_s']:11.3g}")
+
+
+if __name__ == "__main__":
+    main()

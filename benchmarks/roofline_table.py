@@ -1,0 +1,29 @@
+"""Roofline table (EXPERIMENTS.md §Roofline source): reads the dry-run sweep
+JSON (launch/dryrun.py --out) and prints per-(arch x shape x mesh) terms."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+def run(emit):
+    if not os.path.exists(RESULTS):
+        emit("roofline/missing", 0.0,
+             "run: python -m repro.launch.dryrun --both-meshes --out dryrun_results.json")
+        return
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for r in data["reports"]:
+        ro = r["roofline"]
+        total = ro["compute_s"] + 0  # terms are independent ceilings, not a sum
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             max(ro["compute_s"], ro["memory_s"], ro["collective_s"]) * 1e6,
+             f"compute={ro['compute_s']:.2e};memory={ro['memory_s']:.2e};"
+             f"collective={ro['collective_s']:.2e};bneck={ro['bottleneck']};"
+             f"useful={ro['useful_flops_ratio']:.3f}")
+    n = len(data["reports"])
+    nf = len(data.get("failures", []))
+    emit("roofline/summary", 0.0, f"pairs_ok={n};failures={nf}")
+    assert nf == 0

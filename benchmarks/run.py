@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run [names]``"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    from benchmarks import (asymmetry, engine_bench, kernel_bench,
+                            overlap_micro, roofline_table, split_policies,
+                            table1_prefill)
+    suites = {
+        "table1": table1_prefill.run,        # paper Table 1
+        "asymmetry": asymmetry.run,          # paper Figure 2
+        "split": split_policies.run,         # paper Figure 3 / §6
+        "overlap": overlap_micro.run,        # Figure 1 structure (HLO-level)
+        "roofline": roofline_table.run,      # §Roofline source table
+        "kernels": kernel_bench.run,
+        "engine": engine_bench.run,
+    }
+    names = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            suites[n](emit)
+        except Exception:  # noqa: BLE001
+            failed.append(n)
+            traceback.print_exc()
+            emit(f"{n}/FAILED", 0.0, "see stderr")
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""Paper §6 / Figure 3: split-policy comparison through the analytic model —
+even vs asymmetric (60/40) vs adaptive (cost-balancing) vs auto (simulated
+search), per platform.  Derived column = simulated prefill time reduction vs
+baseline for each policy."""
+from __future__ import annotations
+
+from repro.config import ISOConfig, get_model_config
+from repro.core.chunking import split_chunks
+from repro.perf.model import prefill_time
+
+
+def run(emit):
+    seq = 16384
+    results = {}
+    for hw, tp in (("4090", 8), ("a800", 8), ("v5e", 16)):
+        cfg = get_model_config("paper-70b")
+        base = prefill_time(cfg, seq, hw, tp, iso=False)
+        for policy in ("even", "asymmetric", "adaptive", "auto"):
+            iso = ISOConfig(enabled=True, num_chunks=2, split_policy=policy)
+            lengths = split_chunks(seq, iso, cfg, tp=tp, hw_name=hw)
+            t = prefill_time(cfg, seq, hw, tp, lengths=lengths)
+            red = 100 * (1 - t / base)
+            results[(hw, policy)] = red
+            emit(f"split/{hw}/{policy}", t * 1e6,
+                 f"lengths={lengths};reduction={red:.1f}%")
+    # adaptive/auto must never lose to even (they can fall back to it)
+    for hw in ("4090", "a800", "v5e"):
+        assert results[(hw, "auto")] >= results[(hw, "even")] - 0.2, hw
+    return results

@@ -1,0 +1,70 @@
+"""Paper Table 1: % reduction in prefill duration, model x platform x prompt
+length — reproduced through the analytic pipeline model (perf/model.py), since
+this container has no GPUs.  The model carries the paper's two frictions
+(compute penalty under concurrent comm on A800-class parts; int8 wire on 4090)
+and must land in the paper's bands: ~35% avg on 4090, ~15% avg on A800 for
+prompts >= 4k."""
+from __future__ import annotations
+
+from repro.config import get_model_config
+from repro.perf.model import speedup_table
+
+ROWS = [
+    ("4090-4c", "paper-30b", "4090", 4, True,
+     [1024, 2048, 4096, 8192, 16384, 32768]),
+    ("4090-4c", "paper-70b", "4090", 4, True,
+     [1024, 2048, 4096, 8192, 16384, 32768]),
+    ("4090-8c", "paper-30b", "4090", 8, True,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536]),
+    ("4090-8c", "paper-70b", "4090", 8, True,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536]),
+    ("a800-4c", "paper-30b", "a800", 4, False,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072]),
+    ("a800-4c", "paper-70b", "a800", 4, False,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072]),
+    ("a800-8c", "paper-30b", "a800", 8, False,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072]),
+    ("a800-8c", "paper-70b", "a800", 8, False,
+     [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072]),
+]
+
+# paper Table 1 (percent), for side-by-side comparison
+PAPER = {
+    ("4090-4c", "paper-30b"): {1024: 38, 2048: 42, 4096: 43, 8192: 44,
+                               16384: 47, 32768: 48},
+    ("4090-4c", "paper-70b"): {1024: 43, 2048: 44, 4096: 45, 8192: 46,
+                               16384: 47, 32768: 46},
+    ("4090-8c", "paper-30b"): {1024: 11, 2048: 10, 4096: 18, 8192: 21,
+                               16384: 30, 32768: 33, 65536: 36},
+    ("4090-8c", "paper-70b"): {1024: 14, 2048: 19, 4096: 22, 8192: 23,
+                               16384: 35, 32768: 42, 65536: 39},
+    ("a800-4c", "paper-30b"): {1024: 0, 2048: 8, 4096: 18, 8192: 11,
+                               16384: 12, 32768: 9, 65536: 10, 131072: 5},
+    ("a800-4c", "paper-70b"): {1024: -6, 2048: 2, 4096: 8, 8192: 10,
+                               16384: 9, 32768: 8, 65536: 8, 131072: 3},
+    ("a800-8c", "paper-30b"): {1024: 8, 2048: 24, 4096: 22, 8192: 20,
+                               16384: 16, 32768: 25, 65536: 11, 131072: 10},
+    ("a800-8c", "paper-70b"): {1024: 3, 2048: 9, 4096: 14, 8192: 15,
+                               16384: 16, 32768: 15, 65536: 14, 131072: 7},
+}
+
+
+def run(emit):
+    band_4090, band_a800 = [], []
+    for platform, model, hw, tp, int8, lengths in ROWS:
+        cfg = get_model_config(model)
+        ours = speedup_table(cfg, hw, tp, lengths, int8_comm=int8)
+        paper = PAPER[(platform, model)]
+        for s in lengths:
+            emit(f"table1/{platform}/{model}/{s}", 0.0,
+                 f"ours={ours[s]:.1f}%;paper={paper.get(s, float('nan'))}%")
+            if s >= 4096:
+                (band_4090 if hw == "4090" else band_a800).append(ours[s])
+    avg4090 = sum(band_4090) / len(band_4090)
+    avga800 = sum(band_a800) / len(band_a800)
+    emit("table1/avg_4090_ge4k", 0.0,
+         f"ours={avg4090:.1f}%;paper~35%;band=[25,50]")
+    emit("table1/avg_a800_ge4k", 0.0,
+         f"ours={avga800:.1f}%;paper~15%;band=[5,25]")
+    assert 25 <= avg4090 <= 50, avg4090
+    assert 5 <= avga800 <= 25, avga800

@@ -1,0 +1,47 @@
+"""ISO deep-dive demo: split policies, multi-chunk pipelines, int8 comm, and
+the structural overlap evidence from lowered HLO.
+
+    PYTHONPATH=src python examples/iso_prefill_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import ISOConfig, ModelConfig, get_model_config
+from repro.core.chunking import split_chunks
+from repro.core.overlap import AxisCtx
+from repro.models import api
+from repro.perf.model import prefill_time
+
+cfg = ModelConfig(name="demo", family="dense", num_layers=2, d_model=128,
+                  num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=1024,
+                  qk_norm=True)
+key = jax.random.PRNGKey(0)
+params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+ctx = AxisCtx()
+batch = api.make_inputs(cfg, 768, 1, key=key, dtype=jnp.float32)
+ref = api.prefill(params, cfg, ctx, ISOConfig(enabled=False), batch)
+
+print("=== split policies (all exact) ===")
+for policy in ("even", "asymmetric", "adaptive"):
+    for n in (2, 3, 4):
+        iso = ISOConfig(enabled=True, num_chunks=n, split_policy=policy,
+                        min_chunk_tokens=32, chunk_align=32)
+        out = api.prefill(params, cfg, ctx, iso, batch)
+        d = float(jnp.max(jnp.abs(ref["logits_local"] - out["logits_local"])))
+        print(f"  {policy:10s} n={n}: chunks={out['chunk_lengths']} "
+              f"maxdiff={d:.1e}")
+        assert d < 1e-4
+
+print("\n=== analytic pipeline times, paper-70b @ 32k prefill ===")
+p70 = get_model_config("paper-70b")
+for hw, tp in (("4090", 8), ("a800", 8), ("v5e", 16)):
+    base = prefill_time(p70, 32768, hw, tp, iso=False)
+    rows = []
+    for n in (2, 3, 4):
+        iso = ISOConfig(enabled=True, num_chunks=n)
+        lengths = split_chunks(32768, iso, p70, tp=tp)
+        t = prefill_time(p70, 32768, hw, tp, lengths=lengths)
+        rows.append(f"n={n}: -{100 * (1 - t / base):.1f}%")
+    print(f"  {hw:5s} tp={tp:2d}  base={base * 1e3:7.1f}ms  " + "  ".join(rows))
+print("\n(multi-chunk n>2 is this repo's beyond-paper extension: deeper "
+      "pipeline, smaller exposed head/tail bubbles)")

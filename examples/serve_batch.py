@@ -1,0 +1,15 @@
+"""End-to-end serving driver (deliverable b): Engine with continuous batching,
+ISO prefill, batched decode — multiple synthetic requests, ISO on vs off.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch hymba-1.5b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "qwen3-4b", "--requests", "5", "--prompt-len", "96",
+                "--max-new", "12"] + argv
+    raise SystemExit(main(argv))

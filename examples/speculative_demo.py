@@ -1,0 +1,44 @@
+"""Speculative decoding demo (paper §Discussion): self-drafted K-token verify
+cuts model calls per generated token while the output stream stays exactly
+greedy.  On comm-bound platforms the K-token verify step also moves decode into
+the regime where ISO-style overlap pays (the paper's motivation).
+
+    PYTHONPATH=src python examples/speculative_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Config, ISOConfig, ModelConfig, ParallelConfig
+from repro.models import api
+from repro.serving import Engine, Request
+from repro.serving.requests import SamplingParams
+
+cfg = ModelConfig(name="spec-demo", family="dense", num_layers=2, d_model=128,
+                  num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=64,
+                  qk_norm=True)
+config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                iso=ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=16,
+                              chunk_align=8))
+params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1, dtype=jnp.float32)
+
+rng = np.random.default_rng(1)
+base = rng.integers(2, 64, 6).astype(np.int32)
+prompt = np.tile(base, 6)                  # repetitive -> draftable
+
+for spec_k in (0, 3):
+    eng = Engine(config, params, mesh=None, max_batch=1, max_len=256,
+                 bucket=16, spec_k=spec_k)
+    rid = eng.add_request(Request(prompt=prompt.copy(),
+                                  sampling=SamplingParams(max_new_tokens=24,
+                                                          eos_id=-1)))
+    outs = eng.run_until_complete()
+    m = eng.metrics
+    label = f"spec_k={spec_k}" if spec_k else "plain  "
+    print(f"{label}: 24 tokens in {m['decode_calls']} model calls "
+          f"(accepted drafts: {m['spec_accepted']})")
+    if spec_k == 0:
+        plain = outs[rid]
+    else:
+        assert outs[rid] == plain, "speculative stream diverged!"
+        print("output streams identical — speculation is exact")

@@ -1,0 +1,19 @@
+"""End-to-end training driver (deliverable b): trains a reduced qwen3-family
+model on the synthetic LM pipeline with the full distributed train step
+(AdamW, grad clip, cosine schedule, checkpointing).
+
+Defaults are sized for this single-CPU container; on a real mesh use
+``--preset 100m --steps 300 --data 16 --model 16``.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 40]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "qwen3-4b", "--preset", "tiny", "--steps", "40",
+                "--seq-len", "128", "--batch", "4", "--log-every", "5"] + argv
+    raise SystemExit(main(argv))

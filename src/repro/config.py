@@ -1,0 +1,272 @@
+"""Configuration system for the ISO reproduction framework.
+
+Frozen dataclasses so configs are hashable (usable as jit static args) and a
+string registry so launchers can select ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/decoder.py.
+BLOCK_ATTN_MLP = "attn_mlp"          # classic transformer block
+BLOCK_ATTN_MOE = "attn_moe"          # attention + MoE FFN
+BLOCK_HYBRID = "hybrid"              # parallel attention + mamba heads (hymba)
+BLOCK_MLSTM = "mlstm"                # xLSTM matrix-memory block
+BLOCK_SLSTM = "slstm"                # xLSTM scalar-memory block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # experts padded up so the expert axis shards over the model axis
+    shared_expert_d_ff: int = 0      # optional dense shared expert (granite/kimi style)
+
+    def padded_experts(self, shards: int) -> int:
+        return int(math.ceil(self.num_experts / shards) * shards)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16              # per-channel recurrent state (mamba N)
+    conv_dim: int = 4                # depthwise conv width (stubbed as identity-ish proj)
+    expand: int = 2                  # inner expansion factor
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    block_pattern: Tuple[str, ...] = (BLOCK_ATTN_MLP,)  # tiled over layers
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    rms_eps: float = 1e-6
+    norm_type: str = "rms"           # rms | ln
+    mlp_type: str = "swiglu"         # swiglu | gelu
+    pos_type: str = "rope"           # rope | sinusoidal | none
+    tie_embeddings: bool = False
+    sliding_window: int = 0          # 0 = full attention; >0 enables window variant
+    attn_impl: str = "dense"         # dense | blockwise (flash-style XLA scan)
+    attn_block_k: int = 1024
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500       # stub frontend sequence length
+    # vlm
+    num_patches: int = 0             # stub vision tokens prepended to text
+    source: str = ""                 # citation bracket from the assignment
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def block_kind(self, layer_idx: int) -> str:
+        return self.block_pattern[layer_idx % len(self.block_pattern)]
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    # ---- parameter counting (for roofline MODEL_FLOPS = 6 N D) ----
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        mlp_mats = 3 if self.mlp_type == "swiglu" else 2
+        for l in range(self.num_layers):
+            kind = self.block_kind(l)
+            if kind in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE, BLOCK_HYBRID,
+                        "dec_block"):
+                attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+                total += attn
+            if kind == "dec_block":         # cross-attention + MLP
+                total += d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+                total += mlp_mats * d * self.d_ff
+            if kind == BLOCK_ATTN_MLP:
+                total += mlp_mats * d * self.d_ff
+            elif kind == BLOCK_ATTN_MOE:
+                m = self.moe
+                n_e = m.top_k if active_only else m.num_experts
+                total += 3 * d * m.d_ff_expert * n_e
+                total += d * m.num_experts            # router
+                if m.shared_expert_d_ff:
+                    total += 3 * d * m.shared_expert_d_ff
+            elif kind == BLOCK_HYBRID:
+                s = self.ssm
+                inner = s.expand * d
+                total += d * inner * 2 + inner * d + inner * (2 * s.state_dim + 1)
+                total += 3 * d * self.d_ff
+            elif kind == BLOCK_MLSTM:
+                inner = 2 * d
+                total += d * inner * 3 + inner * d + 3 * d * inner // 2
+            elif kind == BLOCK_SLSTM:
+                total += 4 * d * d + 4 * d * d  # recurrent + input gates
+            total += 2 * d  # norms
+        for _ in range(self.encoder_layers):
+            total += 4 * d * d + 2 * d * self.d_ff + 2 * d
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / runtime configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1                    # >1 adds the leading "pod" axis
+    seq_parallel: bool = False       # beyond-paper: RS+AG instead of AR
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        if self.pods > 1:
+            return (self.pods, self.data, self.model)
+        return (self.data, self.model)
+
+    @property
+    def batch_axes(self):
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+    @property
+    def num_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+@dataclass(frozen=True)
+class ISOConfig:
+    """The paper's technique, as a first-class runtime feature."""
+    enabled: bool = True
+    num_chunks: int = 2              # paper: 2; >2 is our beyond-paper extension
+    split_fractions: Tuple[float, ...] = ()   # empty -> policy decides
+    split_policy: str = "even"       # even | asymmetric | adaptive | auto
+    quantized_comm: bool = False     # int8 collectives (paper's 4090 path)
+    min_chunk_tokens: int = 256      # below this, ISO is skipped (decode etc.)
+    chunk_align: int = 128           # chunk-length multiple (MXU alignment)
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    mode: str = "serve"              # serve | train
+    dtype: str = "bfloat16"
+    seq_len: int = 4096
+    global_batch: int = 256
+    # training
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    max_steps: int = 1000
+    grad_clip: float = 1.0
+    remat: bool = True
+    grad_comm_int8: bool = False     # int8 data-parallel gradient all-reduce
+    zero1: bool = False              # shard optimizer state over the data axis
+    unroll_layers: bool = False      # unroll the layer loop (dry-run cost probes)
+    # serving
+    max_decode_steps: int = 64
+    page_size: int = 256
+
+
+@dataclass(frozen=True)
+class Config:
+    model: ModelConfig
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    iso: ISOConfig = field(default_factory=ISOConfig)
+    runtime: RuntimeConfig = field(default_factory=RuntimeConfig)
+
+    def replace(self, **kw) -> "Config":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Padding helpers (TP divisibility — see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return int(math.ceil(x / m) * m) if m > 1 else x
+
+
+def padded_vocab(cfg: ModelConfig, shards: int) -> int:
+    return pad_to_multiple(cfg.vocab_size, max(shards * 128, 2048))
+
+
+def padded_heads(n_heads: int, shards: int) -> int:
+    return pad_to_multiple(n_heads, shards)
+
+
+def effective_kv_heads(n_kv: int, shards: int) -> int:
+    """vLLM GQA rule: replicate KV heads up to the TP degree when tp > kv."""
+    if n_kv >= shards:
+        return pad_to_multiple(n_kv, shards)
+    return shards
+
+
+def padded_ff(d_ff: int, shards: int) -> int:
+    return pad_to_multiple(d_ff, shards * 128) if d_ff else 0
+
+
+# ---------------------------------------------------------------------------
+# Input shape assignments
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_model_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,26 @@
+"""Assigned-architecture registry: importing this package registers every config.
+
+10 assigned archs (public pool, citations in each file) + the paper's own two
+evaluation models (30B MHA / 70B GQA dense, Table 1).
+"""
+from repro.configs import (  # noqa: F401
+    codeqwen1_5_7b,
+    granite_moe_3b_a800m,
+    hymba_1_5b,
+    internvl2_2b,
+    kimi_k2_1t_a32b,
+    paper_30b,
+    paper_70b,
+    qwen3_32b,
+    qwen3_4b,
+    qwen3_8b,
+    whisper_medium,
+    xlstm_350m,
+)
+
+ASSIGNED = [
+    "granite-moe-3b-a800m", "qwen3-4b", "hymba-1.5b", "kimi-k2-1t-a32b",
+    "xlstm-350m", "qwen3-8b", "whisper-medium", "qwen3-32b", "internvl2-2b",
+    "codeqwen1.5-7b",
+]
+PAPER = ["paper-30b", "paper-70b"]

@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm] — 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553;
+InternViT vision encoder + projector STUBBED per the assignment carve-out
+(input_specs feeds 256 pre-projected patch embeddings prepended to the text);
+the InternLM2 language backbone is implemented in full.  [arXiv:2404.16821]
+
+``long_500k`` is SKIPPED (full-attention InternLM2, no windowed variant in the
+source model) — DESIGN.md §Arch-applicability.
+"""
+from repro.config import ModelConfig, register
+
+
+@register("internvl2-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b",
+        family="vlm",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=92553,
+        num_patches=256,
+        rope_theta=1e6,
+        source="arXiv:2404.16821",
+    )

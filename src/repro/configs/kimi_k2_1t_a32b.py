@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) d_ff=2048(/expert)
+vocab=163840, MoE 384 experts top-8 + 1 shared expert — trillion-param MoE
+(paper-table scale).  [arXiv:2501.kimi2]
+
+Experts shard 384/16 = 24 per device under TP=16 expert parallelism; the
+capacity-based index dispatch (layers/moe.py) is what keeps this config's
+dispatch memory bounded (the GShard one-hot would be O(T*384*C)).
+"""
+from repro.config import ModelConfig, MoEConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        num_layers=61,
+        d_model=7168,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=0,
+        vocab_size=163840,
+        block_pattern=("attn_moe",),
+        moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                      shared_expert_d_ff=2048),
+        rope_theta=5e4,
+        source="arXiv:2501.kimi2",
+    )

@@ -1,0 +1,30 @@
+"""whisper-medium [audio] — enc-dec, 24+24L d_model=1024 16H d_ff=4096
+vocab=51865; conv/mel frontend STUBBED per the assignment carve-out
+(input_specs feeds (B, 1500, 1024) frame embeddings).  [arXiv:2212.04356]
+
+decode shapes exercise the decoder's serve_step (self-KV + cross-KV caches);
+``long_500k`` is SKIPPED for this arch (full-attention decoder, 500k tokens is
+out of distribution for the backbone) — DESIGN.md §Arch-applicability.
+"""
+from repro.config import ModelConfig, register
+
+
+@register("whisper-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=51865,
+        block_pattern=("dec_block",),
+        norm_type="ln",
+        mlp_type="gelu",
+        pos_type="sinusoidal",
+        encoder_layers=24,
+        encoder_frames=1500,
+        source="arXiv:2212.04356",
+    )

@@ -1,0 +1,26 @@
+"""xlstm-350m [ssm] — 24L d_model=1024 4H d_ff=0 vocab=50304; sLSTM + mLSTM
+blocks (7:1-ish -> 3 mLSTM : 1 sLSTM per period here).  [arXiv:2405.04517]
+
+TP note (DESIGN.md §4): 4 heads don't shard 16 ways; the mLSTM value/output
+feature dim (256/head) shards instead, so mLSTM blocks still end in the TP
+all-reduce ISO overlaps.  sLSTM blocks are replicated + sequential — the recorded
+ISO-inapplicable case.
+"""
+from repro.config import ModelConfig, register
+
+
+@register("xlstm-350m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        family="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+        pos_type="none",
+        source="arXiv:2405.04517",
+    )

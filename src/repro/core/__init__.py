@@ -1,0 +1,4 @@
+# The paper's primary contribution: ISO — intra-sequence overlap of computation
+# and communication for LLM inference (Xiao & Su, Baichuan 2024).
+from repro.core.overlap import AxisCtx, Pending, psum_now, psum_start, psum_wait  # noqa: F401
+from repro.core.chunking import split_chunks  # noqa: F401

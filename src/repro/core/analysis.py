@@ -1,0 +1,329 @@
+"""HLO-text analysis: collective wire bytes + structural overlap verification.
+
+This is the dry-run "profiler" (no real TPU): it parses lowered/compiled HLO,
+sums operand sizes of every collective (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), converts them to per-device *wire* bytes with
+the standard ring-algorithm factors, and — for the overlap check — builds the
+def-use graph of each computation to count dot-FLOPs that are neither ancestors
+nor descendants of a given collective (= work the latency-hiding scheduler can
+hide it behind).  Baseline TP prefill has ~0 hideable FLOPs per collective; ISO
+has about one chunk's worth.  EXPERIMENTS.md reports both.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)(\(.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    first = m.group(1)
+    return max(2, len([x for x in first.split(",") if x.strip() != ""]))
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    buffer_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    wire_bytes: float = 0.0
+
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    """Per-device wire bytes using ring-algorithm factors."""
+    st = CollectiveStats()
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        _, type_str, opname, rest = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or \
+                    opname == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(type_str)
+        n = _group_size(stripped)
+        st.counts[kind] += 1
+        st.buffer_bytes[kind] += b
+        if kind == "all-reduce":
+            st.wire_bytes += 2.0 * (n - 1) / n * b
+        elif kind == "all-gather":
+            st.wire_bytes += (n - 1) / n * b          # b = gathered result
+        elif kind == "reduce-scatter":
+            st.wire_bytes += (n - 1) * b              # b = scattered result
+        elif kind == "all-to-all":
+            st.wire_bytes += (n - 1) / n * b
+        else:                                         # collective-permute
+            st.wire_bytes += b
+    return st
+
+
+# ---------------------------------------------------------------------------
+# overlap structure: hideable dot-FLOPs per collective
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    type_str: str
+    operands: List[str]
+    line: str
+
+
+# ---------------------------------------------------------------------------
+# StableHLO (lowered, PRE-optimization) overlap metric.
+#
+# The post-optimization CPU HLO drops ``optimization_barrier`` (the CPU backend
+# has no latency-hiding scheduler to protect), which lets the all-reduce
+# combiner merge ISO's deliberately-serialised chunk collectives — so the
+# compiled CPU module misrepresents what the TPU scheduler would see.  The
+# LOWERED StableHLO preserves barriers and per-chunk collectives exactly, so
+# the structural overlap check runs there.
+# ---------------------------------------------------------------------------
+
+_MLIR_DEF_RE = re.compile(r"^\s*%([\w#]+)(?::\d+)?\s*=\s*(.*)$")
+_MLIR_REF_RE = re.compile(r"%([\w#]+)")
+_MLIR_COLL = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+              "collective_permute")
+
+
+def overlap_metric_stablehlo(text: str) -> Dict[str, float]:
+    """Per-collective hideable dot_generals, from lowered StableHLO MLIR."""
+    # split into func bodies
+    funcs: Dict[str, List[Tuple[str, str, List[str]]]] = {}
+    current, depth = None, 0
+    for line in text.splitlines():
+        if "func.func" in line:
+            m = re.search(r"@([\w\.]+)", line)
+            current = m.group(1) if m else "anon"
+            funcs[current] = []
+            continue
+        if current is None:
+            continue
+        m = _MLIR_DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        base = name.split("#")[0]
+        kind = "other"
+        if "dot_general" in rest or "convolution" in rest:
+            kind = "dot"
+        else:
+            for c in _MLIR_COLL:
+                if f"stablehlo.{c}" in rest:
+                    kind = c
+                    break
+            if "optimization_barrier" in rest:
+                kind = "barrier"
+            elif "stablehlo.while" in rest:
+                kind = "while"
+        refs = [r.split("#")[0] for r in _MLIR_REF_RE.findall(rest)]
+        funcs[current].append((base, kind, refs))
+
+    best_name, best = None, []
+    for fname, ops in funcs.items():
+        n_c = sum(1 for _, k, _ in ops if k in _MLIR_COLL)
+        if n_c > sum(1 for _, k, _ in best if k in _MLIR_COLL):
+            best_name, best = fname, ops
+    if not best:
+        return {"collectives": 0, "avg_hideable_dots": 0.0,
+                "hideable_fraction": 0.0, "total_dots": 0}
+
+    by_name = {o[0]: i for i, o in enumerate(best)}
+    preds = [[by_name[r] for r in refs if r in by_name] for _, _, refs in best]
+    n = len(best)
+    succs = [[] for _ in range(n)]
+    for i, ps in enumerate(preds):
+        for p in ps:
+            succs[p].append(i)
+    dots = [i for i, o in enumerate(best) if o[1] == "dot"]
+    colls = [i for i, o in enumerate(best) if o[1] in _MLIR_COLL]
+    if not colls:
+        return {"collectives": 0, "avg_hideable_dots": 0.0,
+                "hideable_fraction": 0.0, "total_dots": len(dots)}
+
+    def reach(start_edges, i):
+        out, stack = set(), list(start_edges[i])
+        while stack:
+            j = stack.pop()
+            if j in out:
+                continue
+            out.add(j)
+            stack.extend(start_edges[j])
+        return out
+
+    counts = []
+    for a in colls:
+        anc = reach(preds, a)
+        desc = reach(succs, a)
+        counts.append(sum(1 for d in dots if d not in anc and d not in desc))
+    avg = sum(counts) / len(counts)
+    return {"collectives": len(colls), "avg_hideable_dots": avg,
+            "hideable_fraction": avg / max(len(dots), 1),
+            "computation": best_name, "total_dots": len(dots),
+            "per_collective": counts}
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    current = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY") or (line.rstrip().endswith("{")
+                                        and ("(" in line) and "=" not in line.split("(")[0]):
+            header = line.split("(")[0].strip().lstrip("%")
+            current = header.split()[-1] if header else "anon"
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        name, type_str, opname, rest = m.groups()
+        args_part = rest.split("(", 1)[1] if "(" in rest else ""
+        args_part = args_part.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(args_part)
+        comps[current].append(_Op(name, opname, type_str, operands, line))
+    return comps
+
+
+def _dot_flops(op: _Op) -> float:
+    """Rough: 2 * prod(result dims) * contraction dim (from first operand)."""
+    shapes = _SHAPE_RE.findall(op.type_str)
+    if not shapes:
+        return 0.0
+    dims = [int(x) for x in shapes[0][1].split(",") if x]
+    out = math.prod(dims) if dims else 1
+    return 2.0 * out * 128.0  # contraction dim unknown from type alone; proxy
+
+
+def overlap_metric(hlo: str) -> Dict[str, float]:
+    """For the computation with the most all-reduces: fraction of dot ops that
+    are dataflow-independent of each collective (hideable), averaged."""
+    comps = _parse_computations(hlo)
+    best_name, best = None, []
+    for name, ops in comps.items():
+        n_ar = sum(1 for o in ops if o.kind.startswith("all-reduce"))
+        if n_ar > sum(1 for o in best if o.kind.startswith("all-reduce")):
+            best_name, best = name, ops
+    if not best:
+        return {"collectives": 0, "avg_hideable_dots": 0.0,
+                "hideable_fraction": 0.0}
+
+    by_name = {o.name: i for i, o in enumerate(best)}
+    n = len(best)
+    # ancestors via bitsets would be heavy; use reachability with memo on DAG
+    preds = [[by_name[x] for x in o.operands if x in by_name] for o in best]
+    succs = [[] for _ in range(n)]
+    for i, ps in enumerate(preds):
+        for p in ps:
+            succs[p].append(i)
+
+    import functools
+    import sys
+    sys.setrecursionlimit(100000)
+
+    anc_memo: Dict[int, set] = {}
+
+    def ancestors(i: int) -> set:
+        if i in anc_memo:
+            return anc_memo[i]
+        out = set()
+        stack = list(preds[i])
+        while stack:
+            j = stack.pop()
+            if j in out:
+                continue
+            out.add(j)
+            stack.extend(preds[j])
+        anc_memo[i] = out
+        return out
+
+    # post-optimization HLO wraps dots in fusion ops: weight each fusion call by
+    # the dot count of its fused computation
+    _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+    dots_per_comp = {cname: sum(1 for o in ops
+                                if o.kind in ("dot", "convolution"))
+                     for cname, ops in comps.items()}
+
+    def dot_weight(op: _Op) -> int:
+        if op.kind in ("dot", "convolution"):
+            return 1
+        if op.kind == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                return dots_per_comp.get(m.group(1), 0)
+        return 0
+
+    weights = [dot_weight(o) for o in best]
+    dots = [i for i, w in enumerate(weights) if w > 0]
+    ars = [i for i, o in enumerate(best) if o.kind.startswith("all-reduce")
+           or o.kind in _COLLECTIVES]
+    if not ars:
+        return {"collectives": 0, "avg_hideable_dots": 0.0,
+                "hideable_fraction": 0.0}
+
+    hideable_counts = []
+    for a in ars:
+        a_anc = ancestors(a)
+        desc = set()
+        stack = list(succs[a])
+        while stack:
+            j = stack.pop()
+            if j in desc:
+                continue
+            desc.add(j)
+            stack.extend(succs[j])
+        h = sum(weights[d] for d in dots
+                if d not in a_anc and d not in desc and d != a)
+        hideable_counts.append(h)
+    avg = sum(hideable_counts) / len(hideable_counts)
+    total_dots = sum(weights)
+    frac = avg / max(total_dots, 1)
+    return {"collectives": len(ars), "avg_hideable_dots": avg,
+            "hideable_fraction": frac, "computation": best_name,
+            "total_dots": total_dots}

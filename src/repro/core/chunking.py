@@ -1,0 +1,112 @@
+"""Sequence-split policies (paper §3.2 and §6 "Discussion").
+
+All splits are static Python ints (jit shape requirement).  Policies:
+
+  even        two equal halves (paper's default);
+  asymmetric  fixed fractions, default (0.6, 0.4) — paper's fix for the second
+              chunk's heavier attention (it attends to the whole prefix);
+  adaptive    cost-balanced split: solve for the boundary where the two chunks'
+              (attention + MLP) FLOPs match, using the quadratic attention term
+              (paper Figure 3's idea, in closed form);
+  auto        pick the fraction that minimises simulated pipeline time under the
+              analytic performance model (beyond-paper: ties into perf/model.py);
+  multi-chunk any policy generalises to num_chunks > 2 (beyond-paper — deeper
+              pipeline, smaller exposed head/tail bubbles).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+from repro.config import ISOConfig, ModelConfig
+
+
+def _round_to(x: int, m: int) -> int:
+    return max(m, int(round(x / m)) * m)
+
+
+def _normalize(lengths: Sequence[int], seq_len: int, align: int) -> Tuple[int, ...]:
+    out = [max(align, _round_to(l, align)) for l in lengths[:-1]]
+    used = sum(out)
+    if used >= seq_len:                      # degenerate: fall back to even
+        n = len(lengths)
+        base = seq_len // n
+        if base >= align:                    # keep alignment when possible
+            base = (base // align) * align
+        out = [base] * (n - 1)
+        used = base * (n - 1)
+    return tuple(out) + (seq_len - used,)
+
+
+def even_split(seq_len: int, n: int, align: int = 128) -> Tuple[int, ...]:
+    return _normalize([seq_len / n] * n, seq_len, align)
+
+
+def fraction_split(seq_len: int, fractions: Sequence[float], align: int = 128
+                   ) -> Tuple[int, ...]:
+    return _normalize([f * seq_len for f in fractions], seq_len, align)
+
+
+def adaptive_split(seq_len: int, n: int, cfg: ModelConfig, align: int = 128
+                   ) -> Tuple[int, ...]:
+    """Equalise per-chunk cost  c(a,b) = alpha*(b^2-a^2)/2 + beta*(b-a)  where the
+    quadratic term is attention over the prefix and the linear term is the dense
+    (QKV/O + MLP) compute per token."""
+    d, hq = cfg.d_model, cfg.num_heads
+    hd = cfg.resolved_head_dim
+    # per-token-pair attention flops ~ 2 * 2 * Hq * hd ; per-token dense flops:
+    alpha = 4.0 * hq * hd
+    ff = cfg.d_ff or (cfg.moe.d_ff_expert * cfg.moe.top_k if cfg.moe else d * 4)
+    beta = 2.0 * d * (hq * hd * 2 + cfg.num_kv_heads * hd * 2) + 6.0 * d * ff
+    total = alpha * seq_len ** 2 / 2 + beta * seq_len
+    per = total / n
+    bounds = [0]
+    for _ in range(n - 1):
+        a = bounds[-1]
+        # solve alpha*(b^2-a^2)/2 + beta*(b-a) = per  for b
+        A, B, C = alpha / 2, beta, -(per + alpha * a * a / 2 + beta * a)
+        b = (-B + math.sqrt(B * B - 4 * A * C)) / (2 * A)
+        bounds.append(min(b, seq_len))
+    lengths = [bounds[i + 1] - bounds[i] for i in range(n - 1)] + [seq_len - bounds[-1]]
+    return _normalize(lengths, seq_len, align)
+
+
+def auto_split(seq_len: int, n: int, cfg: ModelConfig, hw_name: str = "v5e",
+               tp: int = 16, align: int = 128) -> Tuple[int, ...]:
+    """Search fractions minimising the simulated ISO pipeline time."""
+    from repro.perf.model import simulate_iso_fractions
+    best, best_t = even_split(seq_len, n, align), float("inf")
+    if n != 2:
+        cands = [even_split(seq_len, n, align), adaptive_split(seq_len, n, cfg, align)]
+    else:
+        cands = [fraction_split(seq_len, (f, 1 - f), align)
+                 for f in (0.35, 0.4, 0.45, 0.5, 0.55, 0.6, 0.65, 0.7)]
+        cands.append(adaptive_split(seq_len, 2, cfg, align))
+    for c in cands:
+        t = simulate_iso_fractions(cfg, c, hw_name=hw_name, tp=tp)
+        if t < best_t:
+            best, best_t = c, t
+    return best
+
+
+def split_chunks(seq_len: int, iso: ISOConfig, cfg: ModelConfig, *,
+                 align: int = 0, tp: int = 16, hw_name: str = "v5e"
+                 ) -> Tuple[int, ...]:
+    """Main entry: chunk lengths for a prefill of ``seq_len`` tokens."""
+    if (not iso.enabled or iso.num_chunks <= 1
+            or seq_len < iso.min_chunk_tokens * iso.num_chunks):
+        return (seq_len,)
+    align = align or iso.chunk_align
+    n = iso.num_chunks
+    if iso.split_fractions:
+        return fraction_split(seq_len, iso.split_fractions, align)
+    if iso.split_policy == "even":
+        return even_split(seq_len, n, align)
+    if iso.split_policy == "asymmetric":
+        fr = [0.6, 0.4] if n == 2 else [1.0 / n] * n
+        return fraction_split(seq_len, fr, align)
+    if iso.split_policy == "adaptive":
+        return adaptive_split(seq_len, n, cfg, align)
+    if iso.split_policy == "auto":
+        return auto_split(seq_len, n, cfg, hw_name=hw_name, tp=tp, align=align)
+    raise ValueError(f"unknown split policy {iso.split_policy!r}")

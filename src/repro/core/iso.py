@@ -1,0 +1,240 @@
+"""The ISO scheduler — interleaved per-chunk execution of a transformer stack.
+
+Baseline TP prefill executes, per layer:   compute -> all-reduce -> compute -> …
+with nothing to hide the collectives behind.  ISO splits the sequence into chunks
+and walks the (stage x chunk) grid in the order of paper Figure 1(d):
+
+    unit order:  (s1,c0) (s1,c1) (s2,c0) (s2,c1) | next layer (s1,c0) …
+
+At every unit we FIRST compute the unit's partial (dataflow-independent of the
+previous unit's pending collective — that's the overlap), THEN complete the pending
+collective via ``psum_wait`` (which barrier-pins the ordering, see core/overlap.py)
+and apply its residual.  The pending collective crosses layer boundaries, so the
+last chunk's MLP all-reduce hides behind the next layer's first attention.
+
+Sequential cross-chunk state (KV prefix, SSM/mLSTM/sLSTM carries) is threaded
+chunk-to-chunk within each layer — the paper's "preserve the order of attention
+calculations between the two micro-batches".
+
+The same machinery with ``chunks=1`` IS the baseline — benchmarked against ISO in
+benchmarks/overlap_micro.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.overlap import AxisCtx, Pending, psum_start, psum_wait
+from repro.models.blocks import BLOCK_STAGES, StageCtx
+from repro.layers import attention as attn_lib
+
+
+@dataclass
+class PipeState:
+    """Scan-carry of the layer pipeline."""
+    xs: Tuple[jnp.ndarray, ...]            # per-chunk hidden states
+    pend_partial: Optional[jnp.ndarray]    # unreduced partial of the last unit
+    pend_base: Optional[jnp.ndarray]       # its residual base
+
+    def tree(self):
+        return (self.xs, self.pend_partial, self.pend_base)
+
+
+def _init_seq_state(kind: str) -> Any:
+    return (None, None) if kind == "hybrid" else None
+
+
+def run_layer(p_layer, kind: str, state: PipeState, sctx: StageCtx,
+              ctx: AxisCtx, layer_cache=None,
+              pattern_ends_reduce: bool = True,
+              starts: Sequence[int] = (0,)) -> Tuple[PipeState, Dict]:
+    """Run one layer over all chunks in ISO order; returns extras for caches."""
+    stages = BLOCK_STAGES[kind]
+    n_chunks = len(state.xs)
+    xs = list(state.xs)
+    pend_partial, pend_base = state.pend_partial, state.pend_base
+    pend_chunk = n_chunks - 1                 # invariant at layer entry
+
+    kv_chunks: List = [None] * n_chunks
+    extras_out: Dict[str, Any] = {}
+    seq_state = _init_seq_state(kind)
+
+    # whisper-style bidirectional attention: chunks attend to the FULL sequence,
+    # so K/V are projected once per layer from all chunks before the unit loop.
+    if sctx.mode == "encode" and kind in ("attn_mlp",):
+        from repro.layers.norms import norm as _norm
+        xn_full = jnp.concatenate(
+            [_norm(p_layer["norm1"], xc, sctx.cfg.norm_type, sctx.cfg.rms_eps)
+             for xc in xs], axis=1)
+        seq_state = attn_lib.cross_kv(p_layer["attn"], xn_full, sctx.cfg)
+
+    for s_idx, (fn, reduces) in enumerate(stages):
+        for c in range(n_chunks):
+            # baseline (1 chunk) — or any unit whose own chunk still owes a
+            # residual: resolve the pending collective FIRST (serial schedule,
+            # paper Figure 1(a)).  With >=2 chunks this branch never triggers:
+            # the interleave resolves (s-1,c) during unit (s-1,c+1).
+            if pend_partial is not None and pend_chunk == c:
+                pend = psum_start(pend_partial, ctx)
+                reduced, _ = psum_wait(pend)
+                xs[pend_chunk] = pend_base + reduced
+                pend_partial = pend_base = None
+            out, seq_state_new, extras = fn(
+                p_layer, xs[c], starts[c], seq_state, sctx, layer_cache)
+            # resolve the pending collective, hidden behind this unit's compute
+            if pend_partial is not None:
+                pend = psum_start(pend_partial, ctx)
+                reduced, rebound = psum_wait(pend, (out, seq_state_new))
+                out, seq_state_new = rebound
+                xs[pend_chunk] = pend_base + reduced
+                pend_partial = pend_base = None
+            seq_state = seq_state_new
+            if "kv" in extras:
+                kv_chunks[c] = extras["kv"]
+            for k in ("ssm", "mlstm", "slstm", "moe_aux"):
+                if k in extras:
+                    if k == "moe_aux":
+                        extras_out[k] = extras_out.get(k, 0.0) + extras[k]
+                    else:
+                        extras_out[k] = extras[k]
+            if reduces:
+                pend_partial, pend_base, pend_chunk = out, xs[c], c
+            else:
+                xs[c] = xs[c] + out
+        # stage boundary: reset only per-stage state kinds that don't carry over
+        if s_idx + 1 < len(stages):
+            seq_state = _init_seq_state(kind)
+
+    if kv_chunks[0] is not None:
+        ks = jnp.concatenate([kv[0] for kv in kv_chunks], axis=1)
+        vs = jnp.concatenate([kv[1] for kv in kv_chunks], axis=1)
+        extras_out["kv_k"], extras_out["kv_v"] = ks, vs
+
+    if not pattern_ends_reduce:
+        # flush within the layer so the scan carry stays typed (xlstm periods
+        # ending in sLSTM carry pending=None naturally; mixed cases flush here)
+        if pend_partial is not None and not _kind_reduces_last(kind):
+            pend = psum_start(pend_partial, ctx)
+            reduced, _ = psum_wait(pend)
+            xs[pend_chunk] = pend_base + reduced
+            pend_partial = pend_base = None
+
+    new_state = PipeState(tuple(xs), pend_partial, pend_base)
+    return new_state, extras_out
+
+
+def _kind_reduces_last(kind: str) -> bool:
+    return BLOCK_STAGES[kind][-1][1]
+
+
+def flush_pending(state: PipeState, ctx: AxisCtx) -> Tuple[jnp.ndarray, ...]:
+    """Complete the trailing collective after the last layer."""
+    xs = list(state.xs)
+    if state.pend_partial is not None:
+        pend = psum_start(state.pend_partial, ctx)
+        reduced, _ = psum_wait(pend)
+        xs[-1] = state.pend_base + reduced
+    return tuple(xs)
+
+
+def init_pipe_state(x_chunks: Sequence[jnp.ndarray], pattern: Sequence[str]
+                    ) -> PipeState:
+    """Zero pending (exact no-op: x += psum(0)) when the pattern ends in a
+    reducing stage; None pending otherwise."""
+    if _kind_reduces_last(pattern[-1]):
+        z = jnp.zeros_like(x_chunks[-1])
+        return PipeState(tuple(x_chunks), z, x_chunks[-1] * 0 + x_chunks[-1])
+    return PipeState(tuple(x_chunks), None, None)
+
+
+# ---------------------------------------------------------------------------
+# whole-stack drivers
+# ---------------------------------------------------------------------------
+
+def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
+                      starts: Sequence[int], sctx: StageCtx, ctx: AxisCtx,
+                      layer_statics=None, remat: bool = False,
+                      unroll: bool = False):
+    """Scan over pattern periods.
+
+    params_periods: pytree list, one entry per position in ``pattern``; each leaf
+      stacked over periods: (P, ...).
+    layer_statics: optional per-position scanned inputs (e.g. whisper cross-KV,
+      stacked (P, ...)).
+    Returns (x_chunks_final, per_layer_extras list-of-dicts (stacked over P)).
+    """
+    n_pos = len(pattern)
+
+    def period_body(carry, scanned):
+        xs, pend_p, pend_b = carry
+        p_layers, statics = scanned
+        state = PipeState(xs, pend_p, pend_b)
+        extras_list = []
+        for i, kind in enumerate(pattern):
+            cache_i = statics[i] if statics is not None else None
+            state, extras = run_layer(
+                p_layers[i], kind, state, sctx, ctx, layer_cache=cache_i,
+                pattern_ends_reduce=_kind_reduces_last(pattern[-1]),
+                starts=starts)
+            extras_list.append(extras)
+        return (state.xs, state.pend_partial, state.pend_base), tuple(extras_list)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    state0 = init_pipe_state(x_chunks, pattern)
+    carry0 = (state0.xs, state0.pend_partial, state0.pend_base)
+    scanned = (params_periods, layer_statics)
+    carry, extras = jax.lax.scan(body, carry0, scanned, unroll=unroll or 1)
+    final = flush_pending(PipeState(*carry), ctx)
+    return final, extras
+
+
+def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
+                     sctx: StageCtx, ctx: AxisCtx, unroll: bool = False):
+    """One-token decode: sequential collectives (paper: overlap doesn't pay at
+    decode), cache read+update per layer.  caches: per-position pytrees stacked
+    over periods, each with optional k/v (+pos handled by caller), ssm/mlstm/slstm
+    states, cross_k/v."""
+    from repro.core.overlap import psum_now
+    n_pos = len(pattern)
+
+    def period_body(x, scanned):
+        p_layers, caches_in = scanned
+        caches_out = []
+        for i, kind in enumerate(pattern):
+            cache_i = caches_in[i]
+            new_cache = dict(cache_i) if cache_i is not None else None
+            for fn, reduces in BLOCK_STAGES[kind]:
+                out, _, extras = fn(p_layers[i], x, 0, _init_seq_state(kind),
+                                    sctx, cache_i)
+                if reduces:
+                    out = psum_now(out, ctx)
+                x = x + out
+                if "kv" in extras and new_cache is not None and "k" in new_cache:
+                    # insert the K new tokens (K=1 decode / K>1 speculative
+                    # verify; multi-token inserts must not straddle the ring
+                    # boundary — the engine aligns slots)
+                    k_new, v_new = extras["kv"]
+                    K = k_new.shape[1]
+                    slot = (sctx.lengths % new_cache["k"].shape[1]).astype(jnp.int32)
+                    upd = lambda c, n, s: jax.vmap(
+                        lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+                            cb, nb.astype(cb.dtype), (sb, 0, 0)))(c, n, s)
+                    new_cache["k"] = upd(new_cache["k"], k_new, slot)
+                    new_cache["v"] = upd(new_cache["v"], v_new, slot)
+                    if "pos" in new_cache:
+                        new_cache["pos"] = jax.vmap(
+                            lambda pb, sb, lb: jax.lax.dynamic_update_slice(
+                                pb, (lb + jnp.arange(K)).astype(pb.dtype),
+                                (sb,)))(new_cache["pos"], slot, sctx.lengths)
+                for sk in ("ssm", "mlstm", "slstm"):
+                    if sk in extras and new_cache is not None:
+                        new_cache[sk] = extras[sk]
+            caches_out.append(new_cache)
+        return x, tuple(caches_out)
+
+    x, new_caches = jax.lax.scan(period_body, x, (params_periods, caches),
+                                 unroll=unroll or 1)
+    return x, new_caches

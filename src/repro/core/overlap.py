@@ -1,0 +1,102 @@
+"""Deferred TP collectives — the mechanism behind ISO.
+
+In XLA-land there is no ``ncclAllReduceAsync``: collectives become
+``all-reduce-start/done`` pairs and the latency-hiding scheduler overlaps an
+in-flight collective with any *dataflow-independent* compute.  The baseline TP
+transformer has no such independent compute (the residual add right after o_proj /
+down_proj consumes the all-reduce result).  ISO creates it, by interleaving a second
+sequence chunk.  This module packages the pattern:
+
+    pend = psum_start(partial_c0, ctx)            # defer the collective
+    other = attn(chunk1)                          # independent overlap work
+    reduced, (other,) = psum_wait(pend, (other,)) # collective + ordering pin
+
+``psum_wait`` performs the actual ``lax.psum`` and then ties its result to the
+overlap outputs with ``jax.lax.optimization_barrier``.  The barrier does two jobs:
+
+  1. it stops XLA's all-reduce *combiner* pass from merging consecutive chunk
+     collectives into one (a merged collective would wait for both chunks' compute,
+     destroying the pipeline) — after the barrier, chunk 1's collective input
+     depends on chunk 0's collective result, which also matches the serial
+     communication channel of real hardware;
+  2. it pins the program-order the paper's Figure 1(d) prescribes, so the schedule
+     survives CSE/motion passes.
+
+The caller MUST thread the re-bound overlap outputs (second return value) into
+downstream uses — that is what establishes the cross-chunk dependency chain.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AxisCtx:
+    """Names/sizes of the mesh axes as seen inside shard_map.
+
+    ``tp_axis=None`` means single-device execution (unit tests, oracles): all
+    collectives degrade to identity.
+    """
+    tp_axis: Optional[str] = None
+    tp: int = 1
+    dp_axes: Tuple[str, ...] = ()
+    quantized_comm: bool = False
+
+    def axis_index(self):
+        if self.tp_axis is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.tp_axis)
+
+
+@dataclass
+class Pending:
+    """A collective that has been *issued* (dataflow-wise) but not awaited."""
+    partial: jnp.ndarray
+    ctx: AxisCtx
+
+    @property
+    def noop(self) -> bool:
+        return self.ctx.tp_axis is None
+
+
+def psum_start(partial, ctx: AxisCtx) -> Pending:
+    return Pending(partial, ctx)
+
+
+def _reduce(x, ctx: AxisCtx):
+    if ctx.tp_axis is None:
+        return x
+    if ctx.quantized_comm:
+        from repro.core.quantized_collectives import quantized_psum
+        return quantized_psum(x, ctx.tp_axis, ctx.tp)
+    return jax.lax.psum(x, ctx.tp_axis)
+
+
+def psum_wait(pend: Pending, overlap_outputs: Sequence = ()) -> Tuple:
+    """Complete the collective; pin it against the overlap work.
+
+    Returns (reduced, rebound_overlap_outputs).  Downstream code must use the
+    rebound versions (see module docstring).
+    """
+    reduced = _reduce(pend.partial, pend.ctx)
+    if not overlap_outputs:
+        return reduced, ()
+    flat, tree = jax.tree_util.tree_flatten(tuple(overlap_outputs))
+    pinned = jax.lax.optimization_barrier((reduced, *flat))
+    return pinned[0], jax.tree_util.tree_unflatten(tree, list(pinned[1:]))
+
+
+def psum_now(partial, ctx: AxisCtx):
+    """Immediate (baseline, non-overlapped) reduce."""
+    return _reduce(partial, ctx)
+
+
+def dp_psum(x, ctx: AxisCtx):
+    """Data-parallel reduction (gradients, loss) over the data(+pod) axes."""
+    if not ctx.dp_axes:
+        return x
+    return jax.lax.psum(x, ctx.dp_axes)

@@ -1,0 +1,79 @@
+"""int8-quantized all-reduce — the paper's "communication dominates" mitigation.
+
+The paper (4090 path) converts fp16 traffic to int8, halving wire bytes and cutting
+the communication share from ~75% to ~50%.  On TPU we realise the same 2x with an
+all-to-all + local-reduce + all-gather decomposition where BOTH wire phases carry
+int8 payloads (the reduction itself accumulates in fp32 locally, so there is no
+int8-summation overflow):
+
+    1. split the partial along its last dim into tp shards; per-shard symmetric
+       int8 quantization (per-row abs-max scales, fp16-ish fp32 scalars);
+    2. all_to_all the int8 shards (wire: (n-1)/n * bytes(int8));
+    3. local dequant + fp32 sum -> this device's slice of the reduced tensor;
+    4. re-quantize the slice, all_gather int8 + scales (wire: (n-1)/n * bytes(int8));
+    5. dequant, concat -> replicated result.
+
+Total wire bytes ~= 2*(n-1)/n * size * 1B  vs  bf16 ring all-reduce
+2*(n-1)/n * size * 2B  ==> exactly the paper's 2x.  A Pallas kernel
+(`kernels/int8_quant.py`) provides the fused quantize step on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-row (last-dim) symmetric abs-max quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantized_pmean(g, axes, sizes) -> "jnp.ndarray":
+    """int8 data-parallel gradient mean (the §Perf collective-term lever for
+    giant-model training).  Applies ``quantized_psum`` per mesh axis (flattening
+    the trailing dims so the last-dim split rule holds), then divides."""
+    orig = g.shape
+    flat = g.reshape(-1)
+    n_total = 1
+    for axis, n in zip(axes, sizes):
+        n_total *= n
+        pad = (-flat.shape[0]) % n
+        fp = jnp.pad(flat, (0, pad))
+        fp = quantized_psum(fp, axis, n)
+        flat = fp[:flat.shape[0]] if pad else fp
+    return (flat / n_total).reshape(orig).astype(g.dtype)
+
+
+def quantized_psum(x, axis: str, tp: int):
+    """Drop-in for ``lax.psum(x, axis)`` with int8 wire traffic.
+
+    x: (..., D) with D % tp == 0, identical shape on every shard.
+    """
+    if tp == 1:
+        return x
+    d = x.shape[-1]
+    assert d % tp == 0, (d, tp)
+    xs = x.reshape(*x.shape[:-1], tp, d // tp)          # split last dim
+    q, scale = quantize_int8(xs)                        # (..., tp, d/tp), (..., tp, 1)
+    # wire phase 1: exchange shards
+    q_t = jax.lax.all_to_all(q, axis, split_axis=q.ndim - 2, concat_axis=q.ndim - 2)
+    s_t = jax.lax.all_to_all(scale, axis, split_axis=scale.ndim - 2,
+                             concat_axis=scale.ndim - 2)
+    # local fp32 reduce of the tp contributions for my slice
+    part = jnp.sum(dequantize_int8(q_t, s_t), axis=-2)  # (..., d/tp) fp32
+    # wire phase 2: re-quantize + all_gather
+    q2, s2 = quantize_int8(part)
+    q2_g = jax.lax.all_gather(q2, axis, axis=q2.ndim - 1, tiled=True)
+    s2_g = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
+    # each gathered block of size d/tp shares one scale column
+    blocks = q2_g.reshape(*q2_g.shape[:-1], tp, d // tp)
+    out = (blocks.astype(jnp.float32) * s2_g[..., None]).reshape(*x.shape)
+    return out.astype(x.dtype)

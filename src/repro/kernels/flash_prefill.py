@@ -1,0 +1,118 @@
+"""Flash-attention prefill kernel (Pallas/TPU) with chunked-prefill support.
+
+The exact primitive ISO needs: queries of ONE sequence chunk attending to
+``prefix KV + own KV`` with a causal offset (``q_start``) — plus optional
+sliding-window masking for the long-context configs.
+
+TPU adaptation of the CUDA flash algorithm (DESIGN.md §2): the grid is
+(batch, q_head, q_blocks, k_blocks) with the k dimension iterated sequentially
+(minor-most), carrying the running (max, sum, acc) in VMEM scratch; BlockSpec
+tiles are (block_q x head_dim) / (block_k x head_dim), multiples of the (8,128)
+TPU register tile, so the MXU sees aligned matmuls and the working set stays in
+VMEM.  GQA is folded into the k/v index_map (q head h reads kv head h // group).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, q_start: int, k_len: int,
+                  causal: bool, window: int, num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    hd = q.shape[-1]
+    s = jnp.dot(q, k.T) * (hd ** -0.5)                   # (bq, bk)
+
+    q_pos = q_start + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < k_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                               # (bq, bk)
+    l_cur = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_cur = acc_scr[...] * alpha + jnp.dot(p, v)
+
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+    acc_scr[...] = acc_cur
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, q_start: int = 0, causal: bool = True,
+                  window: int = 0, block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True):
+    """q: (B,Hq,Sq,hd); k,v: (B,Hkv,Sk,hd) — prefix KV concatenated in front.
+
+    Returns (B,Hq,Sq,hd).  Handles GQA via head-index folding; pads Sq/Sk to the
+    block sizes internally.
+    """
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+
+    sq_p = math.ceil(Sq / block_q) * block_q
+    sk_p = math.ceil(Sk / block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - Sk), (0, 0)))
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, q_start=q_start,
+        k_len=Sk, causal=causal, window=window, num_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # running accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq]

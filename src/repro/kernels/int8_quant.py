@@ -1,0 +1,48 @@
+"""Fused per-row symmetric int8 quantization kernel (Pallas/TPU).
+
+The compute half of the paper's int8 communication path: quantize the partial
+activations right before they hit the wire (core/quantized_collectives.py).  One
+pass over the tile computes the row abs-max and emits int8 + fp32 scales; tiles
+are (block_rows x d) so a row never straddles tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (br, d)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_int8(x, *, block_rows: int = 256, interpret: bool = True):
+    """x: (..., D) -> (int8 (..., D), fp32 scales (..., 1)) per-row abs-max."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = math.prod(orig_shape[:-1])
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, max(8, rows))
+    rows_p = math.ceil(rows / br) * br
+    x2 = jnp.pad(x2, ((0, rows_p - rows), (0, 0)))
+
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(rows_p // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows_p, d), jnp.int8),
+                   jax.ShapeDtypeStruct((rows_p, 1), jnp.float32)],
+        interpret=interpret,
+    )(x2)
+    return (q[:rows].reshape(orig_shape),
+            s[:rows].reshape(*orig_shape[:-1], 1))

@@ -1,0 +1,58 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present (this container validates
+kernel bodies on CPU via the Pallas interpreter); on real TPUs pass
+``interpret=False`` (or rely on the default, which auto-detects).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import int8_quant as _iq
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import swiglu as _sg
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("q_start", "causal", "window",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, q_start: int = 0, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fp.flash_prefill(q, k, v, q_start=q_start, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_int8(x, *, block_rows: int = 256, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _iq.quantize_int8(x, block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rms_norm(x, gamma, *, eps: float = 1e-6, block_rows: int = 256,
+             interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rn.rms_norm(x, gamma, eps=eps, block_rows=block_rows,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols",
+                                             "interpret"))
+def swiglu(gate, up, *, block_rows: int = 256, block_cols: int = 512,
+           interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _sg.swiglu(gate, up, block_rows=block_rows, block_cols=block_cols,
+                      interpret=interpret)

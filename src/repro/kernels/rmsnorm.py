@@ -1,0 +1,39 @@
+"""Fused RMSNorm kernel (Pallas/TPU) — the pre-collective norm in every block."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                  # (br, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rms_norm(x, gamma, *, eps: float = 1e-6, block_rows: int = 256,
+             interpret: bool = True):
+    """x: (..., D), gamma: (D,)."""
+    import functools
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = math.prod(orig_shape[:-1])
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, max(8, rows))
+    rows_p = math.ceil(rows / br) * br
+    x2 = jnp.pad(x2, ((0, rows_p - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows_p // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        interpret=interpret,
+    )(x2, gamma)
+    return out[:rows].reshape(orig_shape)

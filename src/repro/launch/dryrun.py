@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   512 placeholder host devices let jax.make_mesh build the production meshes
+#   (16x16 single pod, 2x16x16 multi-pod) for lower+compile WITHOUT hardware.
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) lowers,
+compiles, fits, and report the roofline terms (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--iso-off]
+"""
+# NOTE: no `from __future__ import annotations` — the XLA_FLAGS bootstrap must
+# stay the first statements of the module.
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (Config, ISOConfig, INPUT_SHAPES, ModelConfig,
+                          ParallelConfig, RuntimeConfig, get_model_config)
+from repro.core.analysis import overlap_metric, parse_collectives
+from repro.launch.mesh import make_production_mesh, parallel_for_mesh
+from repro.models import api
+from repro.models.decoder import cache_specs, decoder_param_specs
+from repro.perf.roofline import roofline_terms
+from repro.training.optimizer import adamw_init
+from repro.training.trainer import make_train_step
+
+# archs whose full-attention flavour cannot run 500k-token decode; dense archs
+# get a sliding-window variant instead (DESIGN.md §Arch-applicability)
+LONG_SKIP = {"whisper-medium", "internvl2-2b"}
+LONG_WINDOW = 8192
+
+
+def variant_for_shape(cfg: ModelConfig, shape_name: str) -> Optional[ModelConfig]:
+    if shape_name == "long_500k":
+        if cfg.name in LONG_SKIP:
+            return None
+        if cfg.family in ("dense", "moe", "vlm") and not cfg.sliding_window:
+            return dataclasses.replace(cfg, sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def build_config(cfg: ModelConfig, mesh, iso_on: bool = True,
+                 quantized: bool = False, num_chunks: int = 2,
+                 policy: str = "even", seq_parallel: bool = False,
+                 grad_int8: bool = False, zero1: bool = False) -> Config:
+    parallel = dataclasses.replace(parallel_for_mesh(mesh),
+                                   seq_parallel=seq_parallel)
+    iso = ISOConfig(enabled=iso_on, num_chunks=num_chunks, split_policy=policy,
+                    quantized_comm=quantized)
+    return Config(model=cfg, parallel=parallel, iso=iso,
+                  runtime=RuntimeConfig(grad_comm_int8=grad_int8, zero1=zero1))
+
+
+def _abstract_params(cfg: ModelConfig, tp: int):
+    return jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg, tp))
+
+
+def _with_periods(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same architecture truncated to k pattern-periods (for two-point loop-cost
+    extrapolation — XLA's cost_analysis counts while bodies ONCE)."""
+    kw = dict(num_layers=k * len(cfg.block_pattern))
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def _periods_of(cfg: ModelConfig) -> int:
+    return cfg.num_layers // len(cfg.block_pattern)
+
+
+def lower_shape(arch: str, shape_name: str, *, multi_pod: bool = False,
+                iso_on: bool = True, quantized: bool = False,
+                num_chunks: int = 2, policy: str = "even",
+                blockwise_attn: bool = False, grad_int8: bool = False,
+                zero1: bool = False, verbose: bool = True) -> Optional[Dict[str, Any]]:
+    """Lower + compile one (arch, shape, mesh) combination; return the report."""
+    base_cfg = get_model_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = variant_for_shape(base_cfg, shape_name)
+    if cfg is None:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name} (recorded in DESIGN.md)")
+        return None
+    if blockwise_attn:
+        cfg = dataclasses.replace(cfg, attn_impl="blockwise")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    config = build_config(cfg, mesh, iso_on=iso_on, quantized=quantized,
+                          num_chunks=num_chunks, policy=policy,
+                          grad_int8=grad_int8, zero1=zero1)
+    tp = config.parallel.model
+
+    def compile_for(cfg_k: ModelConfig, unroll: bool = False):
+        cfg_local = config.replace(model=cfg_k)
+        if unroll:
+            cfg_local = cfg_local.replace(
+                runtime=dataclasses.replace(cfg_local.runtime,
+                                            unroll_layers=True))
+        params_shape = _abstract_params(cfg_k, tp)
+        with mesh:
+            if shape.kind == "train":
+                step_fn, *_ = make_train_step(cfg_local, mesh, params_shape)
+                if cfg_local.runtime.zero1:
+                    from repro.training.zero import zero1_init_local
+                    dp = cfg_local.parallel.pods * cfg_local.parallel.data
+                    opt_shape = jax.eval_shape(
+                        lambda pr: jax.shard_map(
+                            lambda q: zero1_init_local(q, dp), mesh=mesh,
+                            in_specs=(make_train_step(cfg_local, mesh, pr)[1],),
+                            out_specs=make_train_step(cfg_local, mesh, pr)[2],
+                            check_vma=False)(pr), params_shape)
+                else:
+                    opt_shape = jax.eval_shape(adamw_init, params_shape)
+                batch = api.make_inputs(cfg_k, shape.seq_len,
+                                        shape.global_batch, abstract=True)
+                labels_len = batch["tokens"].shape[1]
+                batch["labels"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, labels_len), jnp.int32)
+                lowered = step_fn.lower(params_shape, opt_shape, batch,
+                                        jax.ShapeDtypeStruct((), jnp.int32))
+            elif shape.kind == "prefill":
+                from repro.launch import runner
+                batch = api.make_inputs(cfg_k, shape.seq_len,
+                                        shape.global_batch, abstract=True)
+                build = runner.make_prefill_fn(
+                    cfg_local, mesh, params_shape,
+                    logits_mode="last", return_cache=True,
+                    cache_len=shape.seq_len, global_batch=shape.global_batch)
+                lowered = build(batch).lower(params_shape, batch)
+            else:  # decode
+                from repro.launch import runner
+                caches_shape = jax.eval_shape(
+                    lambda: api.init_caches(cfg_k, shape.global_batch,
+                                            shape.seq_len, tp))
+                fn = runner.make_decode_fn(cfg_local, mesh,
+                                           params_shape, caches_shape,
+                                           global_batch=shape.global_batch)
+                toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+                lens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+                lowered = fn.lower(params_shape, toks, caches_shape, lens)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        return compiled, cost, coll
+
+    t0 = time.perf_counter()
+    # full-depth compile: the lowering/compile/fit PROOF for the real config
+    compiled, cost, coll = compile_for(cfg)
+    t_compile = time.perf_counter() - t0
+
+    # two-point loop-cost extrapolation: XLA cost_analysis counts while-loop
+    # bodies ONCE, so lower k=1 and k=2 periods and solve
+    #   F(k) = entry + k*body  =>  total = entry + P*body
+    P = _periods_of(cfg)
+    def _extrap(key_fn):
+        _, c1, l1 = ex1
+        _, c2, l2 = ex2
+        f1, f2 = key_fn(c1, l1), key_fn(c2, l2)
+        body = max(f2 - f1, 0.0)
+        entry = max(f1 - body, 0.0)
+        return entry + P * body
+    if P > 2:
+        # probes UNROLL the layer loop so every layer's ops are visible to the
+        # cost analysis; F(k) = entry + k*body then extrapolates exactly
+        ex1 = compile_for(_with_periods(cfg, 1), unroll=True)
+        ex2 = compile_for(_with_periods(cfg, 2), unroll=True)
+        flops_dev = _extrap(lambda c, l: c.get("flops", 0.0))
+        bytes_dev = _extrap(lambda c, l: c.get("bytes accessed", 0.0))
+        wire_dev = _extrap(lambda c, l: l.wire_bytes)
+        coll_counts = {k: int(_extrap(lambda c, l: float(l.counts.get(k, 0))))
+                       for k in set(ex1[2].counts) | set(ex2[2].counts)}
+    else:
+        flops_dev = cost.get("flops", 0.0)
+        bytes_dev = cost.get("bytes accessed", 0.0)
+        wire_dev = coll.wire_bytes
+        coll_counts = dict(coll.counts)
+
+    mem = compiled.memory_analysis()
+    n_dev = config.parallel.num_devices
+    report: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod
+        else "16x16", "devices": n_dev,
+        "iso": iso_on, "num_chunks": num_chunks if iso_on else 1,
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_counts": coll_counts,
+        "collective_wire_bytes_per_device": wire_dev,
+        "memory": {
+            "args_bytes": mem.argument_size_in_bytes,
+            "out_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+    report["roofline"] = roofline_terms(report, cfg, shape)
+    if verbose:
+        r = report["roofline"]
+        print(f"OK {arch} x {shape_name} [{report['mesh']}] "
+              f"compile={report['compile_s']}s "
+              f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+              f"collective={r['collective_s']:.2e}s -> {r['bottleneck']}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--iso-off", action="store_true")
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--chunks", type=int, default=2)
+    ap.add_argument("--policy", type=str, default="even")
+    ap.add_argument("--blockwise-attn", action="store_true")
+    ap.add_argument("--grad-int8", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    reports, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = lower_shape(arch, shape, multi_pod=mp,
+                                    iso_on=not args.iso_off,
+                                    quantized=args.quantized,
+                                    num_chunks=args.chunks, policy=args.policy,
+                                    blockwise_attn=args.blockwise_attn,
+                                    grad_int8=args.grad_int8, zero1=args.zero1)
+                    if r is not None:
+                        reports.append(r)
+                except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                    failures.append((arch, shape, mp, repr(e)[:400]))
+                    print(f"FAIL {arch} x {shape} multi_pod={mp}: {e!r}"[:500])
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"reports": reports, "failures": failures}, f, indent=1)
+    print(f"\n{len(reports)} OK, {len(failures)} FAIL")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Mesh construction.  Functions (not module constants) so importing never touches
+jax device state — required by the dry-run's XLA_FLAGS bootstrap ordering."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one v5e pod (16x16 = 256 chips), or two pods
+    (2x16x16 = 512) with a leading "pod" axis carried over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(parallel: ParallelConfig):
+    return jax.make_mesh(
+        parallel.mesh_shape, parallel.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(parallel.axis_names))
+
+
+def local_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — unit tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def parallel_for_mesh(mesh) -> ParallelConfig:
+    names = mesh.axis_names
+    if "pod" in names:
+        return ParallelConfig(pods=mesh.shape["pod"], data=mesh.shape["data"],
+                              model=mesh.shape["model"])
+    return ParallelConfig(data=mesh.shape["data"], model=mesh.shape["model"])

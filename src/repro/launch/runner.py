@@ -1,0 +1,104 @@
+"""jit(shard_map(...)) wrappers around the model API — the distributed boundary
+shared by serving, the dry-run, and the benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import Config, ISOConfig, ModelConfig
+from repro.core.overlap import AxisCtx
+from repro.models import api
+from repro.models.decoder import cache_specs, decoder_param_specs
+from repro.training.trainer import batch_specs, make_axis_ctx
+
+
+def _b_axes(config: Config, global_batch: int) -> Tuple[str, ...] | None:
+    """Batch mesh axes, or None when the batch can't shard (long_500k: B=1)."""
+    p = config.parallel
+    dp = p.pods * p.data
+    return p.batch_axes if global_batch % dp == 0 and global_batch >= dp else None
+
+
+def input_specs_tree(cfg: ModelConfig, batch: Dict[str, Any], b_axes):
+    specs = {}
+    for k, v in batch.items():
+        specs[k] = P(b_axes, *([None] * (v.ndim - 1)))
+    return specs
+
+
+def make_prefill_fn(config: Config, mesh, params_shape, *,
+                    logits_mode: str = "last", return_cache: bool = False,
+                    cache_len: int = 0, iso: Optional[ISOConfig] = None,
+                    global_batch: int, donate_cache: bool = False):
+    cfg = config.model
+    iso = iso if iso is not None else config.iso
+    ctx = make_axis_ctx(config)
+    b_axes = _b_axes(config, global_batch)
+    p_specs = decoder_param_specs(params_shape)
+
+    def local_fn(params, batch):
+        out = api.prefill(params, cfg, ctx, iso, batch,
+                          logits_mode=logits_mode, return_cache=return_cache,
+                          cache_len=cache_len,
+                          unroll=config.runtime.unroll_layers)
+        res = {"logits_local": out.get("logits_local"),
+               "moe_aux": out["moe_aux"]}
+        if return_cache:
+            res["caches"] = out["caches"]
+        return res
+
+    def specs_of(batch):
+        in_b = input_specs_tree(cfg, batch, b_axes)
+        out_specs = {"logits_local": P(b_axes, None, "model"), "moe_aux": P()}
+        if return_cache:
+            # the prefill-built caches have the same TREE STRUCTURE as empty
+            # decode caches (cache_specs only reads names/ndims), so probe the
+            # specs from init_caches instead of tracing the full prefill
+            dummy = jax.eval_shape(
+                lambda: api.init_caches(cfg, global_batch, cache_len or 1,
+                                        ctx.tp))
+            out_specs["caches"] = cache_specs(dummy, batch_axes=b_axes,
+                                              shard_batch=b_axes is not None)
+        if logits_mode == "none":
+            out_specs["logits_local"] = P()
+        return in_b, out_specs
+
+    def build(batch):
+        in_b, out_specs = specs_of(batch)
+        sm = jax.shard_map(local_fn, mesh=mesh, in_specs=(p_specs, in_b),
+                           out_specs=out_specs, check_vma=False)
+        return jax.jit(sm)
+
+    return build
+
+
+def make_decode_fn(config: Config, mesh, params_shape, caches_shape, *,
+                   global_batch: int):
+    cfg = config.model
+    ctx = make_axis_ctx(config)
+    b_axes = _b_axes(config, global_batch)
+    p_specs = decoder_param_specs(params_shape)
+    c_specs = cache_specs(caches_shape, batch_axes=b_axes,
+                          shard_batch=b_axes is not None)
+
+    def local_fn(params, tokens, caches, lengths):
+        logits, new_caches = api.decode_step(
+            params, cfg, ctx, tokens, caches, lengths,
+            unroll=config.runtime.unroll_layers)
+        return logits, new_caches
+
+    sm = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(p_specs, P(b_axes, None), c_specs, P(b_axes)),
+        out_specs=(P(b_axes, None, "model"), c_specs),
+        check_vma=False)
+    return jax.jit(sm, donate_argnums=(2,))
+
+
+def gather_logits(logits_local, mesh) -> jnp.ndarray:
+    """(B,1,V_loc)-sharded logits -> host-replicated full-vocab array."""
+    return jax.device_get(logits_local)

@@ -1,0 +1,102 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+End-to-end driver (deliverable b): trains a reduced or full config with the
+distributed train step, synthetic data pipeline, checkpointing and logging.  On
+this CPU container use ``--preset 100m --steps 300`` (examples/train_small.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (Config, ISOConfig, ModelConfig, ParallelConfig,
+                          RuntimeConfig, get_model_config)
+from repro.launch.mesh import local_test_mesh, make_mesh
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import make_training_batch
+from repro.training.trainer import init_train_state, make_train_step
+
+
+def reduce_cfg(cfg: ModelConfig, preset: str) -> ModelConfig:
+    """Shrink an arch to a trainable-on-CPU size, keeping its family/structure."""
+    if preset == "full":
+        return cfg
+    sizes = {"tiny": (2, 128, 512), "100m": (4, 512, 8192)}
+    layers, d, vocab = sizes[preset]
+    n_pat = len(cfg.block_pattern)
+    layers = max(layers, n_pat)
+    layers -= layers % n_pat
+    heads = max(2, min(cfg.num_heads, d // 64))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    kw = dict(num_layers=layers, d_model=d, num_heads=heads, num_kv_heads=kv,
+              head_dim=0, d_ff=(d * 4 if cfg.d_ff else 0),
+              vocab_size=min(cfg.vocab_size, vocab),
+              encoder_layers=min(cfg.encoder_layers, layers),
+              encoder_frames=min(cfg.encoder_frames, 64),
+              num_patches=min(cfg.num_patches, 16))
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(cfg.moe, num_experts=4, top_k=2,
+                                        d_ff_expert=d * 2, capacity_factor=2.0,
+                                        shared_expert_d_ff=(
+                                            d if cfg.moe.shared_expert_d_ff else 0))
+    if cfg.sliding_window:
+        kw["sliding_window"] = 64
+    return dataclasses.replace(cfg, **kw)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="100m", choices=["tiny", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--iso", action="store_true",
+                    help="train with the ISO schedule (default: baseline)")
+    ap.add_argument("--ckpt", type=str, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = reduce_cfg(get_model_config(args.arch), args.preset)
+    parallel = ParallelConfig(data=args.data, model=args.model)
+    rt = RuntimeConfig(mode="train_iso" if args.iso else "train",
+                       seq_len=args.seq_len, global_batch=args.batch,
+                       learning_rate=args.lr, max_steps=args.steps,
+                       warmup_steps=max(10, args.steps // 20), remat=True)
+    config = Config(model=cfg, parallel=parallel, runtime=rt,
+                    iso=ISOConfig(num_chunks=2, min_chunk_tokens=32,
+                                  chunk_align=16))
+    mesh = make_mesh(parallel)
+    key = jax.random.PRNGKey(0)
+    params, opt = init_train_state(config, mesh, key)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} preset={args.preset} params={n_params/1e6:.1f}M "
+          f"mesh={parallel.mesh_shape}")
+
+    step_fn, *_ = make_train_step(config, mesh, jax.eval_shape(lambda: params))
+    t_start = time.perf_counter()
+    with mesh:
+        for step in range(args.steps):
+            b = make_training_batch(cfg, args.seq_len, args.batch, step)
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, loss, gnorm = step_fn(params, opt, b, jnp.int32(step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.perf_counter() - t_start
+                tok_s = (step + 1) * args.batch * args.seq_len / dt
+                print(f"step {step:5d} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} tok/s {tok_s:,.0f}")
+    if args.ckpt:
+        ckpt_lib.save(args.ckpt, {"params": params}, step=args.steps)
+        print(f"checkpoint -> {args.ckpt}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

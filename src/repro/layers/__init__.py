@@ -1,0 +1,1 @@
+from repro.layers import attention, heads, mlp, moe, norms, rope, ssm, xlstm  # noqa: F401

@@ -1,0 +1,272 @@
+"""GQA attention — local-shard view (runs inside shard_map).
+
+Forward functions receive the *local* slice of the padded weights (the model axis
+shards the head dimension) and return an *unreduced partial* output: the TP
+all-reduce after ``o_proj`` is applied by the caller (the ISO scheduler decides when —
+that deferral is the paper's mechanism).
+
+Supports: causal prefill, chunked prefill with a prefix KV (ISO), sliding-window
+masks, decode against a padded cache with per-request lengths, non-causal encoder
+attention and cross-attention (whisper).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.heads import HeadLayout, expand_heads
+from repro.layers.rope import apply_rope
+
+
+# ---------------------------------------------------------------------------
+# init (GLOBAL padded weights; shard_map slices them)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, layout: HeadLayout, dtype=jnp.bfloat16,
+                   cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 0.02
+    wq = jax.random.normal(kq, (d, layout.hq, hd), jnp.float32) * s
+    wk = jax.random.normal(kk, (d, layout.hkv, hd), jnp.float32) * s
+    wv = jax.random.normal(kv, (d, layout.hkv, hd), jnp.float32) * s
+    wo = jax.random.normal(ko, (layout.hq, hd, d), jnp.float32) * (s / (2 * cfg.num_layers) ** 0.5)
+    p = {
+        "wq": expand_heads(wq, layout.q_map, 1).astype(dtype),
+        "wk": expand_heads(wk, layout.kv_map, 1).astype(dtype),
+        "wv": expand_heads(wv, layout.kv_map, 1).astype(dtype),
+        "wo": expand_heads(wo, layout.q_map, 0).astype(dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+def _head_rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    v = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jnp.reciprocal(jnp.sqrt(v + eps)) * scale).astype(x.dtype)
+
+
+def project_qkv(p: dict, x, cfg: ModelConfig, positions,
+                use_rope: bool = True) -> Tuple:
+    """x: (B,S,D) -> q (B,S,Hq_loc,hd), k/v (B,S,Hkv_loc,hd).
+
+    ``positions``: (B,S) absolute positions (chunk offsets included).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = _head_rms(q, p["q_norm"], cfg.rms_eps)
+        k = _head_rms(k, p["k_norm"], cfg.rms_eps)
+    if use_rope and cfg.pos_type == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa_blockwise(q, k, v, *, q_pos, k_pos, causal: bool = True,
+                   window: int = 0, k_valid=None, group_eff: int = 1,
+                   block_k: int = 1024):
+    """Flash-style blockwise attention in pure XLA: lax.scan over key blocks
+    with a running (max, denom, acc) — O(Sq·block_k) live memory instead of the
+    O(Sq·Sk) score matrix.  Numerically identical to ``sdpa`` (fp32 softmax).
+
+    This is the §Perf memory-term lever for long-prefill shapes; the Pallas
+    kernel (kernels/flash_prefill.py) is the TPU-native equivalent — this path
+    is what the XLA dry-run lowers.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    assert Hq == Hkv * group_eff
+    if Sk <= block_k:
+        return sdpa(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                    window=window, k_valid=k_valid, group_eff=group_eff)
+    nb = -(-Sk // block_k)
+    pad = nb * block_k - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kval_p = jnp.pad(k_valid, ((0, 0), (0, pad)), constant_values=False) \
+        if k_valid is not None else (kpos_p >= 0)
+
+    qg = q.reshape(B, Sq, Hkv, group_eff, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    resh = lambda t: t.reshape(B, nb, block_k, *t.shape[2:]).swapaxes(0, 1)
+    ks, vs = resh(kp), resh(vp)
+    kps, kvs = resh(kpos_p), resh(kval_p)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, kpb, kvb = xs
+        s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kb.astype(jnp.float32)) * scale
+        mask = kvb[:, None, :]
+        if causal:
+            mask &= kpb[:, None, :] <= q_pos[:, :, None]
+        if window:
+            mask &= kpb[:, None, :] > q_pos[:, :, None] - window
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        # explicit mask multiply: a fully-masked block has s == m_new == -1e30
+        # and exp(0) would leak weight 1 per masked key
+        p = jnp.exp(s - m_new[..., None]) * mask[:, None, None]
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqs,bshd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group_eff, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group_eff, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group_eff, Sq, hd), jnp.float32)
+    # unroll: XLA cost analysis counts loop bodies once; full unroll keeps the
+    # dry-run roofline honest and lets the TPU scheduler software-pipeline
+    (m_f, l_f, acc_f), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, kps, kvs),
+                                        unroll=True)
+    out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, hd)
+
+
+def sdpa(q, k, v, *, q_pos, k_pos, causal: bool = True, window: int = 0,
+         k_valid=None, group_eff: int = 1):
+    """Core scaled-dot-product attention with GQA grouping, fp32 softmax.
+
+    q: (B,Sq,Hq,hd)   grouped as Hq = Hkv * group_eff
+    k,v: (B,Sk,Hkv,hd)
+    q_pos: (B,Sq) int32 absolute positions; k_pos: (B,Sk).
+    k_valid: optional (B,Sk) bool — cache slots actually filled.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    assert Hq == Hkv * group_eff, (Hq, Hkv, group_eff)
+    qg = q.reshape(B, Sq, Hkv, group_eff, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((B, Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows (pad) -> 0
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def o_proj_partial(p: dict, attn_out) -> jnp.ndarray:
+    """Row-parallel output projection — returns the UNREDUCED partial sum."""
+    return jnp.einsum("bqhk,hkd->bqd", attn_out.astype(p["wo"].dtype), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# full blocks
+# ---------------------------------------------------------------------------
+
+def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
+                         start_pos, prefix_kv: Optional[Tuple] = None,
+                         window: int = 0, causal: bool = True):
+    """Chunked-prefill attention.  ``start_pos``: scalar absolute position of the
+    chunk's first token.  ``prefix_kv``: (k,v) of all previous chunks (local shard).
+    Returns (partial_out, (k,v) of THIS chunk for the growing prefix).
+    """
+    B, S, _ = x.shape
+    q_pos = (start_pos + jnp.arange(S, dtype=jnp.int32))[None, :].repeat(B, 0)
+    q, k, v = project_qkv(p, x, cfg, q_pos)
+    if prefix_kv is not None:
+        pk, pv = prefix_kv
+        k_all = jnp.concatenate([pk, k], axis=1)
+        v_all = jnp.concatenate([pv, v], axis=1)
+        k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)[None, :].repeat(B, 0)
+    else:
+        k_all, v_all = k, v
+        k_pos = q_pos
+    if cfg.attn_impl == "blockwise":
+        out = sdpa_blockwise(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
+                             causal=causal, window=window,
+                             group_eff=layout_group, block_k=cfg.attn_block_k)
+    else:
+        out = sdpa(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                   window=window, group_eff=layout_group)
+    return o_proj_partial(p, out), (k, v)
+
+
+def attn_decode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
+                        cache_k, cache_v, lengths, window: int = 0,
+                        cache_pos=None):
+    """One-token decode against a padded cache.
+
+    x: (B,1,D); cache_k/v: (B,Smax,Hkv_loc,hd); lengths: (B,) tokens already cached.
+    ``cache_pos``: optional (B,Smax) absolute position of each slot (-1 = empty) —
+    required for ring-buffer (sliding-window) caches where slot != position.
+    Returns (partial_out, (k_new, v_new)) — cache insertion is the engine's job
+    (it owns the ring-buffer policy for windowed caches).
+    """
+    B, K = x.shape[0], x.shape[1]
+    # positions of the K new tokens (K=1 plain decode; K>1 speculative verify)
+    q_pos = (lengths[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+             ).astype(jnp.int32)
+    q, k_new, v_new = project_qkv(p, x, cfg, q_pos)
+    Smax = cache_k.shape[1]
+    if cache_pos is not None:
+        k_pos = cache_pos.astype(jnp.int32)
+        k_valid = cache_pos >= 0
+    else:
+        k_pos = jnp.arange(Smax, dtype=jnp.int32)[None, :].repeat(B, 0)
+        k_valid = k_pos < lengths[:, None]
+    # new tokens attend to cache + themselves (causally among each other)
+    k_all = jnp.concatenate([cache_k, k_new], axis=1)
+    v_all = jnp.concatenate([cache_v, v_new], axis=1)
+    k_pos = jnp.concatenate([k_pos, q_pos], axis=1)
+    k_valid = jnp.concatenate([k_valid, jnp.ones((B, K), bool)], axis=1)
+    out = sdpa(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos, causal=True,
+               window=window, k_valid=k_valid, group_eff=layout_group)
+    return o_proj_partial(p, out), (k_new, v_new)
+
+
+def attn_encode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
+                        kv_full):
+    """Bidirectional (encoder) attention: this chunk's queries attend to the
+    precomputed FULL-sequence k/v (projected once per layer — see core/iso.py)."""
+    B, S, _ = x.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+    q, _, _ = project_qkv(p, x, cfg, pos, use_rope=False)
+    k, v = kv_full
+    k_pos = jnp.zeros((B, k.shape[1]), jnp.int32)
+    out = sdpa(q, k, v, q_pos=pos, k_pos=k_pos, causal=False,
+               group_eff=layout_group)
+    return o_proj_partial(p, out)
+
+
+def attn_cross_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
+                       enc_k, enc_v, enc_valid=None):
+    """Cross-attention (whisper decoder): q from x, kv precomputed from encoder."""
+    B, S, _ = x.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+    q, _, _ = project_qkv(p, x, cfg, pos, use_rope=False)
+    Sk = enc_k.shape[1]
+    k_pos = jnp.zeros((B, Sk), jnp.int32)
+    out = sdpa(q, enc_k, enc_v, q_pos=pos, k_pos=k_pos, causal=False,
+               k_valid=enc_valid, group_eff=layout_group)
+    return o_proj_partial(p, out)
+
+
+def cross_kv(p: dict, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (no rope)."""
+    B, S, _ = enc_out.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+    _, k, v = project_qkv(p, enc_out, cfg, pos, use_rope=False)
+    return k, v

@@ -1,0 +1,36 @@
+"""Vocab-sharded embedding + LM head — local-shard view (Megatron style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, padded_vocab
+
+
+def init_embedding(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> dict:
+    v = padded_vocab(cfg, tp)
+    k1, k2 = jax.random.split(key)
+    p = {"table": (jax.random.normal(k1, (v, cfg.d_model), jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(k2, (v, cfg.d_model), jnp.float32) * 0.02).astype(dtype)
+    return p
+
+
+def embed_partial(p: dict, tokens, vocab_offset):
+    """tokens: (B,S) int32; table is the LOCAL vocab shard.
+
+    Returns the unreduced partial embedding (tokens outside this shard's vocab range
+    contribute zero); caller psums over the model axis.
+    """
+    table = p["table"]
+    v_loc = table.shape[0]
+    local = tokens - vocab_offset
+    ok = (local >= 0) & (local < v_loc)
+    e = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
+    return e * ok[..., None].astype(e.dtype)
+
+
+def lm_head_local(p: dict, x):
+    """x: (B,S,D) replicated -> LOCAL logits (B,S,V_loc) (vocab-sharded output)."""
+    w = p.get("head", p["table"])
+    return jnp.einsum("bsd,vd->bsv", x, w)

@@ -1,0 +1,84 @@
+"""GQA head layout under tensor parallelism.
+
+When ``tp > num_kv_heads`` (e.g. qwen3 kv=8 on a 16-way model axis) KV heads must be
+replicated (the vLLM rule), and odd head counts (hymba: 25 Q / 5 KV) must pad so both
+head axes divide the TP degree *and* every local Q head finds its logical KV head in a
+*uniform* slot mapping (q slot ``s`` reads kv slot ``s // group``).  The construction:
+
+    kv_eff  = tp * ceil(kv / tp)                 # kv slots, divisible by tp
+    c       = floor(kv_eff / kv)                 # copies per logical kv head
+    G       = ceil(Hq / kv)                      # logical GQA group size
+    g_eff   = ceil(G / c)                        # q slots per kv slot
+    hq_pad  = kv_eff * g_eff                     # q slots, divisible by tp
+
+Logical kv head ``j`` occupies kv slots ``[j*c, (j+1)*c)``; its ``G`` q heads occupy q
+slots ``[j*c*g_eff, ...)``.  Padding slots are zero-initialised in the Q and O
+projections, making them exact mathematical no-ops.  With tp=1 this reduces to the
+unpadded layout whenever ``Hq == kv * G``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HeadLayout:
+    hq: int                  # logical q heads
+    hkv: int                 # logical kv heads
+    hq_pad: int              # padded q slots (divisible by tp)
+    hkv_eff: int             # kv slots incl. replication (divisible by tp)
+    group_eff: int           # q slots per kv slot
+    q_map: tuple             # slot -> logical q head or -1 (pad)
+    kv_map: tuple            # slot -> logical kv head or -1 (pad)
+
+    @property
+    def q_waste(self) -> float:
+        return 1.0 - self.hq / self.hq_pad
+
+    def q_slot_mask(self) -> np.ndarray:
+        return np.array([m >= 0 for m in self.q_map])
+
+
+def head_layout(hq: int, hkv: int, tp: int) -> HeadLayout:
+    assert 1 <= hkv <= hq
+    kv_eff = tp * math.ceil(hkv / tp)
+    c = kv_eff // hkv                       # copies per logical kv head
+    used_kv = hkv * c                       # <= kv_eff; rest are pad slots
+    G = math.ceil(hq / hkv)
+    g_eff = math.ceil(G / c)
+    hq_pad = kv_eff * g_eff
+    assert hq_pad % tp == 0 and kv_eff % tp == 0 and c * g_eff >= G
+
+    kv_map = [-1] * kv_eff
+    for t in range(used_kv):
+        kv_map[t] = t // c
+    q_map = [-1] * hq_pad
+    for j in range(hkv):
+        base = j * c * g_eff
+        n_q = min(G, hq - j * G)            # last group may be short
+        for w in range(n_q):
+            q_map[base + w] = j * G + w
+    # invariant: q slot s reads kv slot s // g_eff which must hold its logical kv head
+    for s, h in enumerate(q_map):
+        if h >= 0:
+            assert kv_map[s // g_eff] == h // G, (s, h, hq, hkv, tp)
+    return HeadLayout(hq, hkv, hq_pad, kv_eff, g_eff, tuple(q_map), tuple(kv_map))
+
+
+def expand_heads(w: np.ndarray | "object", mapping, axis: int):
+    """Gather logical head slices into padded slots; pad slots become zero.
+
+    ``w`` has the logical head axis at ``axis``; returns the slot-expanded array.
+    Works for numpy and jax arrays.
+    """
+    import jax.numpy as jnp
+    mapping = np.asarray(mapping)
+    idx = np.where(mapping >= 0, mapping, 0)
+    out = jnp.take(w, jnp.asarray(idx), axis=axis)
+    mask_shape = [1] * out.ndim
+    mask_shape[axis] = len(mapping)
+    mask = jnp.asarray((mapping >= 0).reshape(mask_shape), dtype=out.dtype)
+    return out * mask

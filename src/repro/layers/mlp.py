@@ -1,0 +1,37 @@
+"""Column→row parallel MLP (SwiGLU or GELU) — local-shard view, unreduced output."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, pad_to_multiple
+
+
+def padded_d_ff(cfg_d_ff: int, tp: int) -> int:
+    return pad_to_multiple(cfg_d_ff, tp) if cfg_d_ff else 0
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, tp: int,
+             num_layers: int, dtype=jnp.bfloat16) -> dict:
+    ff = padded_d_ff(d_ff, tp)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 0.02
+    so = s / (2 * num_layers) ** 0.5
+    p = {
+        "w_up": (jax.random.normal(k1, (d_model, ff), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(k3, (ff, d_model), jnp.float32) * so).astype(dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(k2, (d_model, ff), jnp.float32) * s).astype(dtype)
+    return p
+
+
+def mlp_partial(p: dict, x, mlp_type: str):
+    """(B,S,D) -> unreduced (B,S,D) partial; caller applies the TP all-reduce."""
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if mlp_type == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

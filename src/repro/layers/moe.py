@@ -1,0 +1,132 @@
+"""Expert-parallel Mixture-of-Experts — local-shard view.
+
+Experts are sharded over the model axis (each shard holds ``E_loc`` experts);
+activations arrive replicated across the model axis, so dispatch needs NO all-to-all:
+every shard serves the token→expert assignments that land on *its* experts and
+returns an unreduced partial output.  The single TP all-reduce that combines the
+shards is applied by the caller — it is exactly the collective the ISO scheduler
+overlaps (see DESIGN.md §3).
+
+Capacity-based (GShard-style) routing with index scatter/gather instead of the
+(T,E,C) one-hot einsum — the one-hot form is O(T·E·C) memory and does not fit
+trillion-parameter configs (kimi-k2: E=384).  A ``fori_loop`` over the top-k slots
+keeps transient memory at O(T·D) per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, tp: int, num_layers: int,
+             dtype=jnp.bfloat16) -> dict:
+    e_pad = mcfg.padded_experts(tp)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s, so = 0.02, 0.02 / (2 * num_layers) ** 0.5
+    f = mcfg.d_ff_expert
+    p = {
+        "router": (jax.random.normal(k1, (d_model, e_pad), jnp.float32) * s),
+        "w_up": (jax.random.normal(k2, (e_pad, d_model, f), jnp.float32) * s).astype(dtype),
+        "w_gate": (jax.random.normal(k3, (e_pad, d_model, f), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(k4, (e_pad, f, d_model), jnp.float32) * so).astype(dtype),
+    }
+    if mcfg.shared_expert_d_ff:
+        ks1, ks2, ks3 = jax.random.split(k1, 3)
+        fs = mcfg.shared_expert_d_ff
+        p["shared"] = {
+            "w_up": (jax.random.normal(ks1, (d_model, fs), jnp.float32) * s).astype(dtype),
+            "w_gate": (jax.random.normal(ks2, (d_model, fs), jnp.float32) * s).astype(dtype),
+            "w_down": (jax.random.normal(ks3, (fs, d_model), jnp.float32) * so).astype(dtype),
+        }
+    return p
+
+
+def route(router_w, x, mcfg: MoEConfig, e_pad: int):
+    """Top-k routing in fp32.  x: (T,D) -> weights (T,k), idx (T,k), aux loss."""
+    logits = x.astype(jnp.float32) @ router_w          # (T, E_pad)
+    # mask padding experts
+    valid = jnp.arange(e_pad) < mcfg.num_experts
+    logits = jnp.where(valid[None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, mcfg.top_k)          # (T,k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    onehot = jax.nn.one_hot(idx[:, 0], e_pad, dtype=jnp.float32)
+    frac = jnp.mean(onehot, axis=0)
+    aux = mcfg.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return w, idx, aux
+
+
+def capacity(tokens: int, mcfg: MoEConfig, e_pad: int) -> int:
+    return max(4, int(math.ceil(tokens * mcfg.top_k / e_pad * mcfg.capacity_factor)))
+
+
+def moe_partial(p: dict, x, mcfg: MoEConfig, *, tp: int, expert_offset,
+                cap_override: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) replicated across model shards.
+
+    Returns (unreduced partial output (B,S,D), aux loss scalar / tp).
+    ``expert_offset``: first global expert id owned by this shard (traced ok).
+    """
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    e_pad = p["router"].shape[1]
+    e_loc = e_pad // tp
+    w, idx, aux = route(p["router"], xt, mcfg, e_pad)
+
+    C = cap_override or capacity(T, mcfg, e_pad)
+
+    # --- positions: joint cumsum over all (T*k) assignments on LOCAL experts ---
+    idx_flat = idx.reshape(-1)                                   # (T*k,)
+    local = idx_flat - expert_offset
+    is_local = (local >= 0) & (local < e_loc)
+    local_c = jnp.where(is_local, local, e_loc)                  # dump slot e_loc
+    onehot = jax.nn.one_hot(local_c, e_loc + 1, dtype=jnp.int32)
+    # exclusive cumulative count of earlier assignments to the same expert
+    pos_flat = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                   local_c[:, None], axis=1)[:, 0]
+    pos = pos_flat.reshape(T, mcfg.top_k)
+    local_e = local_c.reshape(T, mcfg.top_k)
+    in_cap = (pos < C) & is_local.reshape(T, mcfg.top_k)
+    pos_c = jnp.where(in_cap, pos, C)                            # dump position C
+
+    # --- dispatch: scatter tokens into (e_loc+1, C+1, D); python loop over the
+    # k slots (top_k is static and small; an unrolled loop keeps transient
+    # memory at O(T*D) per slot AND keeps cost_analysis honest — fori_loop
+    # bodies are counted once by XLA's analysis) ---
+    dtype = x.dtype
+    buf = jnp.zeros((e_loc + 1, C + 1, D), dtype)
+    for j in range(mcfg.top_k):
+        buf = buf.at[local_e[:, j], pos_c[:, j]].set(xt, mode="drop")
+    buf = buf[:e_loc, :C]                                        # (e_loc, C, D)
+
+    # --- expert FFN (swiglu), batched over local experts ---
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])         # (e_loc, C, D)
+    out_buf = jnp.pad(out_buf, ((0, 1), (0, 1), (0, 0)))         # dump slots read 0
+
+    # --- combine: gather + weight; python loop over k slots (see dispatch) ---
+    y = jnp.zeros((T, D), dtype)
+    for j in range(mcfg.top_k):
+        g = out_buf[local_e[:, j], pos_c[:, j]]                  # (T, D)
+        y = y + g * (w[:, j] * in_cap[:, j]).astype(dtype)[:, None]
+    y = y.reshape(B, S, D)
+
+    # --- shared (dense) expert: column->row parallel like a regular MLP, so its
+    # output is an unreduced partial that rides the SAME all-reduce as the experts
+    if "shared" in p:
+        sh = p["shared"]
+        u = jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        g = jnp.einsum("bsd,df->bsf", x, sh["w_gate"])
+        hshared = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+        y = y + jnp.einsum("bsf,fd->bsd", hshared, sh["w_down"])
+
+    return y, aux / tp

@@ -1,0 +1,32 @@
+"""RMSNorm / LayerNorm with fp32 accumulation, bf16 in/out."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(params: dict, x, kind: str, eps: float):
+    if kind == "ln":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p

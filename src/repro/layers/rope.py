@@ -1,0 +1,34 @@
+"""Rotary position embeddings with explicit position offsets (chunked prefill needs
+each chunk to know its absolute start position)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (S,) or (B, S) absolute token positions."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                       # (..., S, D/2)
+    if ang.ndim == 2:                                # (S, D/2) -> broadcast over B
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]                # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, d_model: int, offset: int = 0):
+    """Whisper-style fixed sinusoid table slice [offset, offset+seq_len)."""
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

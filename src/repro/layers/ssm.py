@@ -1,0 +1,115 @@
+"""Mamba-style selective SSM — local-shard view, TPU adaptation.
+
+Differences from the CUDA mamba kernel (recorded in DESIGN.md §2):
+  * the scan is ``jax.lax.associative_scan`` over (decay, update) pairs — the
+    TPU-native parallel-prefix form — instead of a fused sequential CUDA kernel;
+  * dt / B / C projections read the *replicated* d_model input rather than the
+    TP-sharded inner activation, so the block needs no mid-layer collective; the
+    only all-reduce is after the row-parallel out-projection (ISO overlaps it);
+  * the depthwise conv carries an explicit (width-1)-token state so chunked prefill
+    (ISO) is exact across chunk boundaries.
+
+State handoff = (conv_state (B, conv_dim-1, inner_loc), h (B, inner_loc, N)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig, pad_to_multiple
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray     # (B, conv_dim-1, inner_loc)
+    h: jnp.ndarray        # (B, inner_loc, N) fp32
+
+
+def inner_dim(d_model: int, scfg: SSMConfig, tp: int) -> int:
+    return pad_to_multiple(scfg.expand * d_model, tp)
+
+
+def init_ssm(key, d_model: int, scfg: SSMConfig, tp: int, num_layers: int,
+             dtype=jnp.bfloat16) -> dict:
+    inner = inner_dim(d_model, scfg, tp)
+    n = scfg.state_dim
+    ks = jax.random.split(key, 8)
+    s, so = 0.02, 0.02 / (2 * num_layers) ** 0.5
+    k_z = jax.random.split(ks[6])[0]
+    return {
+        # x and z input projections kept as SEPARATE weights: a fused (D, 2*inner)
+        # matrix would interleave wrongly when the column dim shards over TP.
+        "w_x": (jax.random.normal(ks[0], (d_model, inner), jnp.float32) * s).astype(dtype),
+        "w_z": (jax.random.normal(k_z, (d_model, inner), jnp.float32) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (scfg.conv_dim, inner), jnp.float32) * s).astype(dtype),
+        "w_dt": (jax.random.normal(ks[2], (d_model, inner), jnp.float32) * s).astype(dtype),
+        "dt_bias": jnp.zeros((inner,), jnp.float32),
+        "w_b": (jax.random.normal(ks[3], (d_model, n), jnp.float32) * s).astype(dtype),
+        "w_c": (jax.random.normal(ks[4], (d_model, n), jnp.float32) * s).astype(dtype),
+        "a_log": jnp.zeros((inner, n), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (inner, d_model), jnp.float32) * so).astype(dtype),
+    }
+
+
+def init_ssm_state(batch: int, inner_loc: int, scfg: SSMConfig) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, scfg.conv_dim - 1, inner_loc), jnp.bfloat16),
+        h=jnp.zeros((batch, inner_loc, scfg.state_dim), jnp.float32),
+    )
+
+
+def _causal_conv(x, conv_state, w):
+    """Depthwise causal conv with carried state.  x: (B,S,inner)."""
+    width = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)   # (B, S+w-1, inner)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else conv_state
+    return out, new_state
+
+
+def ssm_partial(p: dict, x, scfg: SSMConfig, state: Optional[SSMState] = None,
+                ) -> Tuple[jnp.ndarray, SSMState]:
+    """x: (B,S,D) replicated -> (unreduced partial (B,S,D), new state).
+
+    Exact across chunk boundaries given the carried state (ISO invariant).
+    """
+    B, S, D = x.shape
+    inner = p["w_x"].shape[1]
+    n = p["a_log"].shape[1]
+    if state is None:
+        state = SSMState(conv=jnp.zeros((B, p["conv_w"].shape[0] - 1, inner), x.dtype),
+                         h=jnp.zeros((B, inner, n), jnp.float32))
+
+    x_in = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    x_c, conv_new = _causal_conv(x_in, state.conv, p["conv_w"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32))
+
+    dt = jax.nn.softplus(jnp.einsum("bsd,di->bsi", x, p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                              # (B,S,inner)
+    b_proj = jnp.einsum("bsd,dn->bsn", x, p["w_b"]).astype(jnp.float32)
+    c_proj = jnp.einsum("bsd,dn->bsn", x, p["w_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                                          # (inner, N)
+
+    decay = jnp.exp(dt[..., None] * a[None, None])                    # (B,S,inner,N)
+    drive = (dt * x_c)[..., None] * b_proj[:, :, None, :]             # (B,S,inner,N)
+
+    # parallel prefix over the sequence axis: h_t = decay_t*h_{t-1} + drive_t
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    prod, hscan = jax.lax.associative_scan(comb, (decay, drive), axis=1)
+    h = hscan + prod * state.h[:, None]                               # carry h0 in
+    y = jnp.einsum("bsin,bsn->bsi", h, c_proj) + x_c * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, SSMState(conv=conv_new.astype(state.conv.dtype), h=h[:, -1])
+
+
+def ssm_decode_partial(p: dict, x, scfg: SSMConfig, state: SSMState):
+    """Single-token recurrent step (O(1) in sequence length)."""
+    return ssm_partial(p, x, scfg, state)

@@ -1,0 +1,211 @@
+"""xLSTM blocks (arXiv:2405.04517) — local-shard view.
+
+mLSTM: matrix-memory LSTM in the *chunkwise-parallel* formulation (intra-chunk
+quadratic attention-like term + inter-chunk recurrent state), which is both the
+sub-quadratic form needed for ``long_500k`` and the natural ISO state-handoff point.
+TP adaptation (DESIGN.md §4): q/k and the scalar gates are replicated; the v/output
+feature dim is column-sharded, the matrix memory C is sharded along its v axis, and
+the out-projection is row-parallel — so the block ends in the TP all-reduce that ISO
+overlaps.
+
+sLSTM: scalar-memory LSTM with recurrent (block-diagonal per head) connections —
+strictly sequential ``lax.scan``; weights replicated, no collective (recorded as the
+ISO-inapplicable case in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray        # (B, H, hd_k, hd_v_loc) fp32
+    n: jnp.ndarray        # (B, H, hd_k) fp32
+    m: jnp.ndarray        # (B, H) fp32 log-stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray        # (B, D) fp32
+    h: jnp.ndarray        # (B, D) fp32
+    n: jnp.ndarray        # (B, D) fp32
+    m: jnp.ndarray        # (B, D) fp32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    s, so = 0.02, 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "w_q": (jax.random.normal(ks[0], (d, h, hd), jnp.float32) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, h, hd), jnp.float32) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, h, hd), jnp.float32) * s).astype(dtype),  # sharded on hd
+        "w_og": (jax.random.normal(ks[3], (d, h, hd), jnp.float32) * s).astype(dtype),  # sharded on hd
+        "w_i": (jax.random.normal(ks[4], (d, h), jnp.float32) * s),
+        "w_f": (jax.random.normal(ks[5], (d, h), jnp.float32) * s),
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),   # init forget gates open
+        "i_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (h, hd, d), jnp.float32) * so).astype(dtype),  # row-parallel on hd
+    }
+
+
+def init_mlstm_state(batch: int, heads: int, hd_k: int, hd_v_loc: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, heads, hd_k, hd_v_loc), jnp.float32),
+        n=jnp.zeros((batch, heads, hd_k), jnp.float32),
+        m=jnp.full((batch, heads), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_chunk(q, k, v, ilog, flog, state: MLSTMState):
+    """One chunk, parallel form.  q,k: (B,L,H,hdk) fp32; v: (B,L,H,hdv_loc) fp32;
+    ilog/flog: (B,L,H).  Returns (h_out (B,L,H,hdv_loc), new_state)."""
+    B, L, H, hdk = q.shape
+    F = jnp.cumsum(flog, axis=1)                            # (B,L,H) cumulative log-f
+    # stabilizers: intra source term  i_s - F_s ; inter term  m0 - (F=0 at chunk start)
+    src = ilog - F                                          # (B,L,H)
+    run_max = jax.lax.associative_scan(jnp.maximum, src, axis=1)
+    m0 = state.m                                            # (B,H)
+    m_t = jnp.maximum(F + run_max, F + m0[:, None])         # (B,L,H) log-stabilizer per step
+
+    # intra-chunk: scores_ts = (q_t.k_s) * exp(F_t - F_s + i_s - m_t), s<=t
+    # (k is pre-scaled by hd^-0.5 at projection so the carried state C sees the
+    # same scaling — scaling only the intra logits would break the handoff)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k)            # (B,H,T,S)
+    Fh = jnp.moveaxis(F, -1, 1)                             # (B,H,L)
+    ih = jnp.moveaxis(ilog, -1, 1)
+    dmat = Fh[:, :, :, None] - Fh[:, :, None, :] + ih[:, :, None, :]  # (B,H,T,S)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    mh = jnp.moveaxis(m_t, -1, 1)                           # (B,H,L)
+    w_intra = jnp.where(mask[None, None], jnp.exp(dmat - mh[:, :, :, None]), 0.0)
+    h_intra = jnp.einsum("bhts,bshd->bthd", w_intra * logits, v)
+    # normalizer follows xLSTM: n_t = sum_s w_ts k_s ; denominator uses |q . n_t|
+    n_intra = jnp.einsum("bhts,bshd->bthd", w_intra, k)
+    inter_w = jnp.exp(Fh + m0[:, :, None] - mh)             # (B,H,L)
+    h_inter = jnp.einsum("bthd,bhdk,bht->bthk", q, state.c, inter_w)
+    n_inter = state.n[:, None] * inter_w.transpose(0, 2, 1)[..., None]  # (B,L,H,hdk)
+
+    num = h_intra + h_inter                                 # (B,L,H,hdv_loc)
+    n_vec = n_intra + n_inter                               # (B,L,H,hdk)
+    denom = jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_vec))
+    denom = jnp.maximum(denom, jnp.exp(-jnp.moveaxis(mh, 1, -1)))
+    h_out = num / denom[..., None]
+
+    # end-of-chunk state
+    m_L = m_t[:, -1]                                        # (B,H)
+    FL = F[:, -1]                                           # (B,H)
+    carry = jnp.exp(FL + m0 - m_L)                          # (B,H)
+    wsrc = jnp.exp(FL[:, None] - F + ilog - m_L[:, None])   # (B,L,H)
+    c_new = carry[:, :, None, None] * state.c + \
+        jnp.einsum("blh,blhd,blhk->bhdk", wsrc, k, v)
+    n_new = carry[:, :, None] * state.n + jnp.einsum("blh,blhd->bhd", wsrc, k)
+    return h_out, MLSTMState(c=c_new, n=n_new, m=m_L)
+
+
+def mlstm_partial(p: dict, x, cfg: ModelConfig, state: Optional[MLSTMState] = None,
+                  inner_chunk: int = 256) -> Tuple[jnp.ndarray, MLSTMState]:
+    """x: (B,S,D) replicated -> (unreduced partial (B,S,D), new state)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hdk = p["w_q"].shape[2]
+    hdv = p["w_v"].shape[2]                                  # local shard of v dim
+    if state is None:
+        state = init_mlstm_state(B, H, hdk, hdv)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"]).astype(jnp.float32) * (hdk ** -0.5)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"]).astype(jnp.float32)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["w_og"]).astype(jnp.float32))
+    ilog = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_i"]) + p["i_bias"]
+    flog = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["w_f"]) + p["f_bias"])
+
+    L = min(inner_chunk, S)
+    if S % L:
+        L = S  # fall back to one chunk for odd lengths (tests use small S)
+    nck = S // L
+
+    def step(st, xs):
+        qc, kc, vc, ic, fc = xs
+        h, st2 = _mlstm_chunk(qc, kc, vc, ic, fc, st)
+        return st2, h
+
+    resh = lambda t: t.reshape(B, nck, L, *t.shape[2:]).swapaxes(0, 1)
+    state_f, hs = jax.lax.scan(step, state,
+                               (resh(q), resh(k), resh(v), resh(ilog), resh(flog)))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hdv) * og
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(p["w_out"].dtype), p["w_out"])
+    return out, state_f
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 9)
+    s = 0.02
+    p = {}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = (jax.random.normal(ks[i], (d, d), jnp.float32) * s).astype(dtype)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + i], (h, hd, hd), jnp.float32) * s)
+    p["f_bias"] = jnp.full((d,), 3.0, jnp.float32)
+    # named w_proj (not w_out): sLSTM weights are REPLICATED across TP shards,
+    # unlike the row-parallel w_out of ssm/mlstm (see sharding/specs rules)
+    p["w_proj"] = (jax.random.normal(ks[8], (d, d), jnp.float32) *
+                   (s / (2 * cfg.num_layers) ** 0.5)).astype(dtype)
+    return p
+
+
+def init_slstm_state(batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, h=z, n=z + 1.0, m=z)
+
+
+def slstm_forward(p: dict, x, cfg: ModelConfig, state: Optional[SLSTMState] = None,
+                  ) -> Tuple[jnp.ndarray, SLSTMState]:
+    """Strictly sequential scan.  x: (B,S,D) -> (FULL output (B,S,D), state).
+
+    Weights are replicated across TP shards: the caller must NOT psum this block.
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    if state is None:
+        state = init_slstm_state(B, D)
+
+    xf = x.astype(jnp.float32)
+    pre = {g: jnp.einsum("bsd,de->bse", xf, p[f"w_{g}"].astype(jnp.float32))
+           for g in ("i", "f", "z", "o")}
+    pre["f"] = pre["f"] + p["f_bias"]
+
+    def rec(h, g):
+        hh = h.reshape(B, H, hd)
+        return jnp.einsum("bhk,hkj->bhj", hh, p[f"r_{g}"]).reshape(B, D)
+
+    def step(st, t):
+        i_t = pre["i"][:, t] + rec(st.h, "i")
+        f_t = pre["f"][:, t] + rec(st.h, "f")
+        z_t = jnp.tanh(pre["z"][:, t] + rec(st.h, "z"))
+        o_t = jax.nn.sigmoid(pre["o"][:, t] + rec(st.h, "o"))
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + st.m, i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(jax.nn.log_sigmoid(f_t) + st.m - m_new)
+        c_new = f_e * st.c + i_e * z_t
+        n_new = jnp.maximum(f_e * st.n + i_e, 1e-6)
+        h_new = o_t * c_new / n_new
+        return SLSTMState(c=c_new, h=h_new, n=n_new, m=m_new), h_new
+
+    state_f, hs = jax.lax.scan(step, state, jnp.arange(S))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                   # (B,S,D)
+    return jnp.einsum("bsd,de->bse", y, p["w_proj"]), state_f

@@ -1,0 +1,3 @@
+from repro.models.decoder import (  # noqa: F401
+    init_decoder_params, prefill, decode_step, init_caches,
+)

@@ -1,0 +1,84 @@
+"""Unified model API — family dispatch used by launch/, serving/ and training/.
+
+Every family exposes:
+  init(key, cfg, tp)                          -> params
+  prefill(params, cfg, ctx, iso, batch, ...)  -> dict (logits_local, caches, ...)
+  decode(params, cfg, ctx, batch, caches, lengths) -> (logits_local, caches)
+  make_inputs(cfg, shape, key|ShapeDtypeStruct)    -> input pytree
+
+``batch`` input pytrees per family:
+  dense/moe/hybrid/ssm : {"tokens": (B,S) int32}
+  vlm                  : {"tokens": (B,S_text), "patches": (B,P,D)}   (stub ViT)
+  audio                : {"frames": (B,F,D), "tokens": (B,S)}         (stub conv)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ISOConfig, ModelConfig
+from repro.core.overlap import AxisCtx
+from repro.models import decoder as dec_lib
+from repro.models import whisper as whisper_lib
+
+
+def init_params(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return whisper_lib.init_whisper_params(key, cfg, tp, dtype)
+    return dec_lib.init_decoder_params(key, cfg, tp, dtype)
+
+
+def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig,
+            batch: Dict[str, Any], **kw):
+    if cfg.family == "audio":
+        return whisper_lib.whisper_prefill(
+            params, cfg, ctx, iso, frames=batch["frames"],
+            tokens=batch["tokens"], **kw)
+    if cfg.family == "vlm":
+        return dec_lib.prefill(params, cfg, ctx, iso, tokens=batch["tokens"],
+                               extra_embeds=batch["patches"], **kw)
+    return dec_lib.prefill(params, cfg, ctx, iso, tokens=batch["tokens"], **kw)
+
+
+def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
+                unroll: bool = False):
+    if cfg.family == "audio":
+        return whisper_lib.whisper_decode_step(params, cfg, ctx, tokens, caches,
+                                               lengths, unroll=unroll)
+    return dec_lib.decode_step(params, cfg, ctx, tokens, caches, lengths,
+                               unroll=unroll)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,
+                dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return whisper_lib.init_whisper_caches(cfg, batch, cache_len, tp,
+                                               dtype=dtype)
+    return dec_lib.init_caches(cfg, batch, cache_len, tp, dtype)
+
+
+def make_inputs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                key=None, abstract: bool = False, dtype=jnp.bfloat16):
+    """Concrete (random) or abstract (ShapeDtypeStruct) model inputs."""
+    B, S = global_batch, seq_len
+
+    def tok(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        return jax.random.randint(key, shape, 0, cfg.vocab_size, jnp.int32)
+
+    def emb(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return (jax.random.normal(key, shape, jnp.float32) * 0.1).astype(dtype)
+
+    if cfg.family == "audio":
+        return {"frames": emb((B, cfg.encoder_frames, cfg.d_model)),
+                "tokens": tok((B, S))}
+    if cfg.family == "vlm":
+        n_p = min(cfg.num_patches, max(1, S // 2))
+        return {"tokens": tok((B, S - n_p)),
+                "patches": emb((B, n_p, cfg.d_model))}
+    return {"tokens": tok((B, S))}

@@ -1,0 +1,189 @@
+"""Block stage functions — the composable unit the ISO scheduler drives.
+
+A transformer layer is a list of *stages*; each stage maps a (normed) chunk of the
+residual stream to an output that either NEEDS the TP all-reduce (``reduces=True``,
+the unreduced-partial convention) or is already complete (sLSTM, whose weights are
+replicated).  The scheduler (core/iso.py) owns residual adds and collective timing —
+that separation IS the paper's contribution, so blocks never call ``lax.psum``.
+
+Per-stage sequential state (the cross-chunk dependency ISO must respect):
+  attn    -> growing (k,v) prefix              (chunked-prefill KV rule, paper §3.1)
+  ssm     -> SSMState carry                    (same producer/consumer edge)
+  mlstm   -> MLSTMState carry
+  slstm   -> SLSTMState carry
+  mlp/moe -> none (token-local, freely reorderable)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.config import (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE, BLOCK_HYBRID,
+                          BLOCK_MLSTM, BLOCK_SLSTM, ModelConfig)
+from repro.layers import attention as attn_lib
+from repro.layers import mlp as mlp_lib
+from repro.layers import moe as moe_lib
+from repro.layers import ssm as ssm_lib
+from repro.layers import xlstm as xlstm_lib
+from repro.layers.norms import norm
+
+
+@dataclass
+class StageCtx:
+    cfg: ModelConfig
+    group_eff: int                     # local GQA group (q slots per kv slot)
+    tp: int
+    expert_offset: Any = 0             # traced int for MoE shards
+    mode: str = "prefill"              # prefill | decode | encode
+    window: int = 0
+    lengths: Optional[jnp.ndarray] = None   # decode: (B,) cached token counts
+
+
+def _n1(p, x, cfg):
+    return norm(p["norm1"], x, cfg.norm_type, cfg.rms_eps)
+
+
+def _n2(p, x, cfg):
+    return norm(p["norm2"], x, cfg.norm_type, cfg.rms_eps)
+
+
+# --------------------------------------------------------------------------
+# stages; each returns (out, new_seq_state, extras)
+# --------------------------------------------------------------------------
+
+def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    cfg = sctx.cfg
+    xn = _n1(p, x, cfg)
+    if sctx.mode == "decode":
+        partial, kv_new = attn_lib.attn_decode_partial(
+            p["attn"], xn, cfg, sctx.group_eff,
+            cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
+            window=sctx.window, cache_pos=cache.get("pos"))
+        return partial, seq_state, {"kv": kv_new}
+    if sctx.mode == "encode":
+        # seq_state holds the full-sequence (k, v) projected by the scheduler
+        partial = attn_lib.attn_encode_partial(
+            p["attn"], xn, cfg, sctx.group_eff, kv_full=seq_state)
+        return partial, seq_state, {}
+    partial, kv_new = attn_lib.attn_prefill_partial(
+        p["attn"], xn, cfg, sctx.group_eff, start_pos=start_pos,
+        prefix_kv=seq_state, window=sctx.window)
+    if seq_state is None:
+        new_state = kv_new
+    else:
+        new_state = (jnp.concatenate([seq_state[0], kv_new[0]], axis=1),
+                     jnp.concatenate([seq_state[1], kv_new[1]], axis=1))
+    return partial, new_state, {"kv": kv_new}
+
+
+def cross_attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    cfg = sctx.cfg
+    xn = norm(p["norm_cross"], x, cfg.norm_type, cfg.rms_eps)
+    partial = attn_lib.attn_cross_partial(
+        p["cross"], xn, cfg, sctx.group_eff,
+        enc_k=cache["cross_k"], enc_v=cache["cross_v"])
+    return partial, seq_state, {}
+
+
+def mlp_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    xn = _n2(p, x, sctx.cfg)
+    return mlp_lib.mlp_partial(p["mlp"], xn, sctx.cfg.mlp_type), seq_state, {}
+
+
+def moe_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    xn = _n2(p, x, sctx.cfg)
+    partial, aux = moe_lib.moe_partial(
+        p["moe"], xn, sctx.cfg.moe, tp=sctx.tp, expert_offset=sctx.expert_offset)
+    return partial, seq_state, {"moe_aux": aux}
+
+
+def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    """hymba: parallel attention + mamba heads sharing the pre-norm input; their
+    unreduced partials ADD, so the fused block still ends in ONE all-reduce."""
+    cfg = sctx.cfg
+    xn = _n1(p, x, cfg)
+    kv_state, ssm_state = seq_state if seq_state is not None else (None, None)
+    if sctx.mode == "decode":
+        a_part, kv_new = attn_lib.attn_decode_partial(
+            p["attn"], xn, cfg, sctx.group_eff,
+            cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
+            window=sctx.window, cache_pos=cache.get("pos"))
+        s_part, ssm_new = ssm_lib.ssm_decode_partial(
+            p["ssm"], xn, cfg.ssm, cache["ssm"])
+        return a_part + s_part, seq_state, {"kv": kv_new, "ssm": ssm_new}
+    a_part, kv_new = attn_lib.attn_prefill_partial(
+        p["attn"], xn, cfg, sctx.group_eff, start_pos=start_pos,
+        prefix_kv=kv_state, window=sctx.window)
+    s_part, ssm_new = ssm_lib.ssm_partial(p["ssm"], xn, cfg.ssm, ssm_state)
+    if kv_state is None:
+        kv_acc = kv_new
+    else:
+        kv_acc = (jnp.concatenate([kv_state[0], kv_new[0]], axis=1),
+                  jnp.concatenate([kv_state[1], kv_new[1]], axis=1))
+    return a_part + s_part, (kv_acc, ssm_new), {"kv": kv_new, "ssm": ssm_new}
+
+
+def mlstm_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    cfg = sctx.cfg
+    xn = _n1(p, x, cfg)
+    state = cache["mlstm"] if (sctx.mode == "decode" and cache) else seq_state
+    out, new_state = xlstm_lib.mlstm_partial(p["mlstm"], xn, cfg, state)
+    return out, new_state, {"mlstm": new_state}
+
+
+def slstm_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
+    cfg = sctx.cfg
+    xn = _n1(p, x, cfg)
+    state = cache["slstm"] if (sctx.mode == "decode" and cache) else seq_state
+    out, new_state = xlstm_lib.slstm_forward(p["slstm"], xn, cfg, state)
+    return out, new_state, {"slstm": new_state}
+
+
+# --------------------------------------------------------------------------
+# block registry: kind -> [(stage_fn, reduces)]
+# --------------------------------------------------------------------------
+
+BLOCK_STAGES = {
+    BLOCK_ATTN_MLP: ((attn_stage, True), (mlp_stage, True)),
+    BLOCK_ATTN_MOE: ((attn_stage, True), (moe_stage, True)),
+    BLOCK_HYBRID: ((hybrid_stage, True), (mlp_stage, True)),
+    BLOCK_MLSTM: ((mlstm_stage, True),),
+    BLOCK_SLSTM: ((slstm_stage, False),),      # replicated weights: NO collective
+    "dec_block": ((attn_stage, True), (cross_attn_stage, True), (mlp_stage, True)),
+}
+
+
+# --------------------------------------------------------------------------
+# per-layer param init
+# --------------------------------------------------------------------------
+
+def init_block_params(key, cfg: ModelConfig, kind: str, layout, tp: int,
+                      dtype=jnp.bfloat16, cross: bool = False) -> Dict:
+    import jax
+    from repro.layers.norms import init_norm
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm_type)}
+    if kind in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE, BLOCK_HYBRID, "dec_block"):
+        p["attn"] = attn_lib.init_attention(ks[0], cfg, layout, dtype)
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm_type)
+    if kind in (BLOCK_ATTN_MLP, "dec_block"):
+        p["mlp"] = mlp_lib.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                                    tp, cfg.num_layers, dtype)
+    if kind == BLOCK_ATTN_MOE:
+        p["moe"] = moe_lib.init_moe(ks[2], cfg.d_model, cfg.moe, tp,
+                                    cfg.num_layers, dtype)
+    if kind == BLOCK_HYBRID:
+        p["ssm"] = ssm_lib.init_ssm(ks[3], cfg.d_model, cfg.ssm, tp,
+                                    cfg.num_layers, dtype)
+        p["mlp"] = mlp_lib.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type,
+                                    tp, cfg.num_layers, dtype)
+    if kind == BLOCK_MLSTM:
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[4], cfg, tp, dtype)
+    if kind == BLOCK_SLSTM:
+        p["slstm"] = xlstm_lib.init_slstm(ks[4], cfg, dtype)
+    if kind == "dec_block":
+        p["cross"] = attn_lib.init_attention(ks[5], cfg, layout, dtype, cross=True)
+        p["norm_cross"] = init_norm(cfg.d_model, cfg.norm_type)
+    return p

@@ -1,0 +1,107 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment carve-out, the mel-spectrogram + conv frontend is a STUB:
+``input_specs`` feeds precomputed frame embeddings (B, encoder_frames, D).  The
+encoder runs bidirectional attention with the ISO schedule (chunks are even freer
+than causal ones — no KV ordering constraint; see DESIGN.md §4).  The decoder is a
+(self-attn, cross-attn, MLP) stack; every one of its three stages ends in a TP
+all-reduce, giving ISO a deeper per-layer pipeline than a dense decoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ISOConfig, ModelConfig
+from repro.core.overlap import AxisCtx
+from repro.layers import attention as attn_lib
+from repro.layers.heads import head_layout
+from repro.layers.rope import sinusoidal_embedding
+from repro.models import decoder as dec_lib
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=cfg.encoder_layers, block_pattern=("attn_mlp",),
+        pos_type="sinusoidal")
+
+
+def decoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, block_pattern=("dec_block",),
+                               pos_type="sinusoidal")
+
+
+def init_whisper_params(key, cfg: ModelConfig, tp: int, dtype=jnp.bfloat16) -> Dict:
+    k_enc, k_dec = jax.random.split(key)
+    enc = dec_lib.init_decoder_params(k_enc, encoder_cfg(cfg), tp, dtype)
+    enc.pop("embed")                         # frontend stub provides embeddings
+    dec = dec_lib.init_decoder_params(k_dec, decoder_cfg(cfg), tp, dtype)
+    return {"encoder": enc, "decoder": dec}
+
+
+def encode(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, frames,
+           remat: bool = False):
+    """frames: (B, F, D) stub frontend output -> encoder hidden states."""
+    ecfg = encoder_cfg(cfg)
+    embeds = frames + sinusoidal_embedding(
+        frames.shape[1], cfg.d_model).astype(frames.dtype)[None]
+    out = dec_lib.prefill(params["encoder"], ecfg, ctx, iso, embeds=embeds,
+                          logits_mode="none", mode="encode", remat=remat)
+    return out["hidden"]
+
+
+def _cross_statics(params, cfg: ModelConfig, enc_out):
+    """Precompute per-decoder-layer cross K/V, stacked over periods."""
+    dcfg = decoder_cfg(cfg)
+    stacked = params["decoder"]["periods"][0]["cross"]
+
+    def one(p_cross):
+        return attn_lib.cross_kv(p_cross, enc_out, dcfg)
+
+    ks, vs = jax.vmap(one)(stacked)
+    return ({"cross_k": ks, "cross_v": vs},)
+
+
+def whisper_prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
+                    frames, tokens, logits_mode: str = "all",
+                    return_cache: bool = False, cache_len: int = 0,
+                    remat: bool = False, unroll: bool = False) -> Dict[str, Any]:
+    enc_out = encode(params, cfg, ctx, iso, frames, remat=remat)
+    statics = _cross_statics(params, cfg, enc_out)
+    dcfg = decoder_cfg(cfg)
+    out = dec_lib.prefill(params["decoder"], dcfg, ctx, iso, tokens=tokens,
+                          logits_mode=logits_mode, return_cache=return_cache,
+                          cache_len=cache_len, remat=remat, unroll=unroll,
+                          layer_statics=statics)
+    if return_cache:
+        caches = list(out["caches"])
+        caches[0] = dict(caches[0], **statics[0])
+        out["caches"] = tuple(caches)
+    out["enc_out"] = enc_out
+    return out
+
+
+def whisper_decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
+                        lengths, unroll: bool = False):
+    return dec_lib.decode_step(params["decoder"], decoder_cfg(cfg), ctx, tokens,
+                               caches, lengths, unroll=unroll)
+
+
+def init_whisper_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,
+                        enc_frames: int = 0, dtype=jnp.bfloat16):
+    """Decode caches incl. zero cross-KV placeholders (filled by a real prefill)."""
+    dcfg = decoder_cfg(cfg)
+    caches = list(dec_lib.init_caches(dcfg, batch, cache_len, tp, dtype))
+    layout = head_layout(cfg.num_heads, max(cfg.num_kv_heads, 1), tp)
+    hkv = layout.hkv_eff                    # GLOBAL padded kv heads
+    hd = cfg.resolved_head_dim
+    F = enc_frames or cfg.encoder_frames
+    periods = dcfg.num_layers
+    caches[0] = dict(
+        caches[0],
+        cross_k=jnp.zeros((periods, batch, F, hkv, hd), dtype),
+        cross_v=jnp.zeros((periods, batch, F, hkv, hd), dtype))
+    return tuple(caches)

@@ -1,0 +1,3 @@
+from repro.perf.model import (HW, HW_PROFILES, layer_costs,  # noqa: F401
+                              simulate_pipeline, simulate_iso_fractions,
+                              prefill_time, speedup_table)

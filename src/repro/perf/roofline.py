@@ -1,0 +1,53 @@
+"""Roofline terms from a dry-run report (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_wire_bytes / (chips x link_bw)
+
+cost_analysis() on the SPMD-partitioned module reports PER-DEVICE numbers, so no
+further division by chips is needed; the collective bytes come from the HLO parse
+(core/analysis.py), also per device.  MODEL_FLOPS uses 6*N*D for training and
+2*N*D for inference (the factor-3 gradient multiplier doesn't apply), with
+N = active params for MoE.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.config import InputShape, ModelConfig
+from repro.perf.model import HW_PROFILES
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per request
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_terms(report: Dict[str, Any], cfg: ModelConfig,
+                   shape: InputShape, hw_name: str = "v5e") -> Dict[str, Any]:
+    hw = HW_PROFILES[hw_name]
+    flops_dev = float(report["flops_per_device"])
+    bytes_dev = float(report["bytes_per_device"])
+    wire_dev = float(report["collective_wire_bytes_per_device"])
+    n_dev = report["devices"]
+
+    compute_s = flops_dev / hw.flops
+    memory_s = bytes_dev / hw.hbm_bw
+    collective_s = wire_dev / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    return {**terms, "bottleneck": bottleneck,
+            "model_flops_total": mf,
+            "hlo_flops_total": flops_dev * n_dev,
+            "useful_flops_ratio": useful}

@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.requests import Request, RequestState  # noqa: F401

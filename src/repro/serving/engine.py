@@ -1,0 +1,284 @@
+"""Serving engine: continuous batching with ISO prefill.
+
+The paper's serving shape: prefill runs per-request (batch 1 — Table 1's setting)
+under the ISO schedule; decode runs batched over all active slots with the plain
+schedule (paper: overlap doesn't pay at decode).  Prompt lengths are bucketed to
+bound recompilation; padded tail slots are scrubbed from the KV cache position
+array so decode masking stays exact.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Config
+from repro.launch import runner
+from repro.models import api
+from repro.serving.requests import Request, RequestState
+from repro.serving.sampler import sample
+
+
+def _bucket(n: int, b: int) -> int:
+    return max(b, ((n + b - 1) // b) * b)
+
+
+class Engine:
+    def __init__(self, config: Config, params, mesh=None, *, max_batch: int = 4,
+                 max_len: int = 512, bucket: int = 64, spec_k: int = 0):
+        self.config = config
+        self.cfg = config.model
+        self.params = params
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.bucket = bucket
+        self.tp = config.parallel.model if mesh is not None else 1
+
+        self._params_shape = jax.eval_shape(lambda: params)
+        self._prefill_fns: Dict[Tuple[int, bool], Any] = {}
+        self._decode_fn = None
+
+        cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
+        self.caches = api.init_caches(self.cfg, max_batch, max_len, self.tp,
+                                      dtype=cache_dtype)
+        self.slots: List[Optional[RequestState]] = [None] * max_batch
+        self.lengths = np.zeros(max_batch, np.int64)
+        self.last_tokens = np.zeros(max_batch, np.int64)
+        self.pending: List[Request] = []
+        self._finished: List[RequestState] = []
+        # speculative decoding (paper §Discussion): greedy-only self-drafting
+        self.spec_k = spec_k
+        self._drafts: List[Optional[Any]] = [None] * max_batch
+        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
+                        "decode_tokens": 0, "completed": 0, "decode_calls": 0,
+                        "spec_accepted": 0}
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request) -> int:
+        self.pending.append(req)
+        return req.rid
+
+    def _get_prefill(self, plen: int, batch: Dict[str, Any]):
+        key = (plen, "frames" in batch, "patches" in batch)
+        if key not in self._prefill_fns:
+            build = runner.make_prefill_fn(
+                self.config, self.mesh, self._params_shape, logits_mode="all",
+                return_cache=True, cache_len=self.max_len, global_batch=1) \
+                if self.mesh is not None else None
+            if self.mesh is not None:
+                self._prefill_fns[key] = build(batch)
+            else:
+                from repro.core.overlap import AxisCtx
+                ctx = AxisCtx()
+                fn = jax.jit(lambda p, b: api.prefill(
+                    p, self.cfg, ctx, self.config.iso, b, logits_mode="all",
+                    return_cache=True, cache_len=self.max_len))
+                self._prefill_fns[key] = fn
+        return self._prefill_fns[key]
+
+    def _get_decode(self):
+        if self._decode_fn is None:
+            if self.mesh is not None:
+                cshape = jax.eval_shape(lambda: self.caches)
+                self._decode_fn = runner.make_decode_fn(
+                    self.config, self.mesh, self._params_shape, cshape,
+                    global_batch=self.max_batch)
+            else:
+                from repro.core.overlap import AxisCtx
+                ctx = AxisCtx()
+                self._decode_fn = jax.jit(lambda p, t, c, l: api.decode_step(
+                    p, self.cfg, ctx, t, c, l))
+        return self._decode_fn
+
+    # ------------------------------------------------------------------
+    def _start_request(self, req: Request, slot: int) -> None:
+        plen = len(req.prompt)
+        blen = min(_bucket(plen, self.bucket), self.max_len)
+        toks = np.zeros((1, blen), np.int32)
+        toks[0, :plen] = req.prompt
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        if req.frames is not None:
+            batch["frames"] = jnp.asarray(req.frames)[None]
+        if req.patches is not None:
+            batch["patches"] = jnp.asarray(req.patches)[None]
+
+        t0 = time.perf_counter()
+        out = self._get_prefill(blen, batch)(self.params, batch)
+        jax.block_until_ready(out["logits_local"])
+        self.metrics["prefill_s"] += time.perf_counter() - t0
+        self.metrics["prefill_tokens"] += plen
+
+        extra = out["caches"]
+        # effective prompt length in the decoder stream (vlm prepends patches)
+        eff_plen = plen + (req.patches.shape[0] if req.patches is not None else 0)
+        eff_blen = blen + (req.patches.shape[0] if req.patches is not None else 0)
+        self._write_slot(extra, slot, eff_plen)
+        logits = np.asarray(jax.device_get(out["logits_local"]))[0]
+        # sample over the REAL vocab only (the table is padded for TP sharding)
+        first = sample(logits[eff_plen - 1][:self.cfg.vocab_size], req.sampling,
+                       step=0)
+
+        st = RequestState(request=req, slot=slot, prompt_len=eff_plen)
+        st.generated.append(first)
+        st.finish_check()
+        self.lengths[slot] = eff_plen
+        self.last_tokens[slot] = first
+        if self.spec_k:
+            from repro.serving.speculative import BigramDraft
+            d = BigramDraft()
+            d.observe([int(t) for t in req.prompt] + [first])
+            self._drafts[slot] = d
+        if st.done:
+            self.metrics["completed"] += 1
+            self._finished.append(st)
+            self.slots[slot] = None
+        else:
+            self.slots[slot] = st
+
+    def _write_slot(self, new_caches, slot: int, real_len: int) -> None:
+        """Scatter a batch-1 prefill cache into the engine's slot, scrubbing
+        padded positions (pos >= real_len -> empty)."""
+        def put(big, small):
+            if small.ndim >= 2 and small.shape[1] == 1:   # (P,1,...) batch dim
+                return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+            return big
+
+        def scrub(leaf_big, leaf_new):
+            merged = put(leaf_big, leaf_new)
+            return merged
+
+        merged = jax.tree_util.tree_map(scrub, self.caches, new_caches)
+        # scrub pos arrays
+        fixed = []
+        for c in merged:
+            c = dict(c)
+            if "pos" in c:
+                pos = c["pos"]
+                c["pos"] = pos.at[:, slot].set(
+                    jnp.where(pos[:, slot] < real_len, pos[:, slot], -1))
+            fixed.append(c)
+        self.caches = tuple(fixed)
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration; returns (rid, token) events."""
+        events: List[Tuple[int, int]] = []
+        # admission: start pending requests on free slots (prefill, batch=1)
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self._start_request(req, i)
+                st = [s for s in ([self.slots[i]] + self._finished)
+                      if s and s.request.rid == req.rid]
+                if st:
+                    events.append((req.rid, st[0].generated[-1]))
+
+        active = [s for s in self.slots if s is not None]
+        if not active:
+            return events
+        if self.spec_k and all(s.request.sampling.temperature <= 0
+                               for s in active) and \
+                max(self.lengths) + self.spec_k + 1 <= self.max_len:
+            return events + self._step_speculative(active)
+
+        toks = jnp.asarray(self.last_tokens[:, None].astype(np.int32))
+        lens = jnp.asarray(self.lengths.astype(np.int32))
+        t0 = time.perf_counter()
+        logits, self.caches = self._get_decode()(self.params, toks, self.caches,
+                                                 lens)
+        logits = np.asarray(jax.device_get(logits))
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_calls"] += 1
+
+        for st in active:
+            i = st.slot
+            tok = sample(logits[i, 0][:self.cfg.vocab_size], st.request.sampling,
+                         len(st.generated))
+            st.generated.append(tok)
+            self.lengths[i] += 1
+            self.last_tokens[i] = tok
+            events.append((st.request.rid, tok))
+            st.finish_check()
+            if st.done:
+                self.metrics["completed"] += 1
+                self.metrics["decode_tokens"] += len(st.generated)
+                self._finished.append(st)
+                self.slots[i] = None
+        return events
+
+    # ------------------------------------------------------------------
+    def _get_spec_decode(self, K: int):
+        key = ("spec", K)
+        if key not in self._prefill_fns:
+            from repro.core.overlap import AxisCtx
+            ctx = AxisCtx()
+            self._prefill_fns[key] = jax.jit(
+                lambda p, t, c, l: api.decode_step(p, self.cfg, ctx, t, c, l))
+        return self._prefill_fns[key]
+
+    def _step_speculative(self, active) -> List[Tuple[int, int]]:
+        """Verify a K-token window [last, d1..d_{K-1}] per slot; accept the
+        longest greedy-matching prefix (paper §Discussion direction)."""
+        from repro.serving.speculative import accept_greedy
+        K = self.spec_k + 1
+        B = self.max_batch
+        toks = np.zeros((B, K), np.int32)
+        drafts: Dict[int, List[int]] = {}
+        for st in active:
+            i = st.slot
+            d = self._drafts[i].draft(self.spec_k)
+            drafts[i] = d
+            toks[i] = [self.last_tokens[i]] + d
+        lens = jnp.asarray(self.lengths.astype(np.int32))
+        t0 = time.perf_counter()
+        logits, self.caches = self._get_spec_decode(K)(
+            self.params, jnp.asarray(toks), self.caches, lens)
+        logits = np.asarray(jax.device_get(logits))
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_calls"] += 1
+
+        events: List[Tuple[int, int]] = []
+        new_lens = self.lengths.copy()
+        for st in active:
+            i = st.slot
+            argmaxes = logits[i, :, :self.cfg.vocab_size].argmax(axis=-1)
+            budget = st.request.sampling.max_new_tokens - len(st.generated)
+            acc = accept_greedy(drafts[i], argmaxes)[:max(budget, 1)]
+            self.metrics["spec_accepted"] += len(acc) - 1
+            for tok in acc:
+                st.generated.append(int(tok))
+                events.append((st.request.rid, int(tok)))
+            self._drafts[i].observe(acc)
+            new_lens[i] = self.lengths[i] + len(acc)
+            self.last_tokens[i] = acc[-1]
+            st.finish_check()
+            if st.done:
+                self.metrics["completed"] += 1
+                self.metrics["decode_tokens"] += len(st.generated)
+                self._finished.append(st)
+                self.slots[i] = None
+        # scrub cache slots of rejected draft tokens (pos >= confirmed length)
+        nl = jnp.asarray(new_lens.astype(np.int32))
+        fixed = []
+        for c in self.caches:
+            c = dict(c)
+            if "pos" in c:
+                c["pos"] = jnp.where(c["pos"] >= nl[None, :, None], -1, c["pos"])
+            fixed.append(c)
+        self.caches = tuple(fixed)
+        self.lengths = new_lens
+        return events
+
+    def run_until_complete(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self.step()
+            if not self.pending and all(s is None for s in self.slots):
+                break
+        for st in self._finished:
+            out[st.request.rid] = st.generated
+        return out

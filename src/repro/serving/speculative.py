@@ -1,0 +1,52 @@
+"""Self-speculative decoding (paper §Discussion: "speculative sampling involves
+a greater number of input tokens, thereby increasing the relative computational
+volume" — i.e. it moves decode toward the regime where ISO-style overlap pays).
+
+Draft model: a per-request bigram ("last token -> most recent successor") table
+built online from the prompt + generated stream — zero extra model weights, the
+cheapest honest draft.  Verify: one K-token decode step (the generalized
+``attn_decode_partial``); greedy acceptance of the longest matching prefix
+yields 1..K tokens per model call.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+class BigramDraft:
+    def __init__(self):
+        self.table: Dict[int, int] = {}
+        self.last: int = -1
+
+    def observe(self, tokens: Sequence[int]) -> None:
+        prev = self.last
+        for t in tokens:
+            if prev >= 0:
+                self.table[prev] = int(t)
+            prev = int(t)
+        self.last = prev
+
+    def draft(self, k: int) -> List[int]:
+        out, cur = [], self.last
+        for _ in range(k):
+            cur = self.table.get(cur, cur if cur >= 0 else 0)
+            out.append(int(cur))
+        return out
+
+
+def accept_greedy(draft: List[int], argmaxes: np.ndarray) -> List[int]:
+    """argmaxes[i] = greedy model prediction AFTER consuming position i of the
+    [last, d1..d_{K-1}] verify window.  Returns the accepted new tokens
+    (>= 1: the paper's guarantee — worst case degenerates to plain decode)."""
+    out = []
+    for i, d in enumerate(draft):
+        model_tok = int(argmaxes[i])
+        out.append(model_tok)
+        if model_tok != d:
+            break
+    else:
+        # every draft token accepted: bank the model's bonus prediction too
+        out.append(int(argmaxes[len(draft)]))
+    return out

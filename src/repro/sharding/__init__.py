@@ -1,0 +1,1 @@
+from repro.sharding.specs import Shardings, make_shardings, maybe_shard  # noqa: F401

@@ -1,0 +1,110 @@
+"""PartitionSpec rules: Megatron TP + data(+pod) parallel + expert parallel.
+
+Layers stay sharding-agnostic; models apply ``maybe_shard`` constraints with the
+specs produced here.  When no mesh is active (CPU unit tests) everything no-ops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ParallelConfig
+
+
+def _mesh_active() -> bool:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return m is not None and not m.empty
+    except Exception:
+        return False
+
+
+def maybe_shard(x, spec: Optional[P]):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if spec is None or not _mesh_active():
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclass(frozen=True)
+class Shardings:
+    """Activation + weight PartitionSpecs for one ParallelConfig."""
+    batch: Tuple[str, ...]           # ("pod","data") or ("data",)
+    tp: str = "model"
+    seq_parallel: bool = False
+
+    # ---- activations ----
+    @property
+    def act(self) -> P:              # (batch, seq, d_model) replicated hidden
+        return P(self.batch, None, None)
+
+    @property
+    def act_sp(self) -> P:           # sequence-parallel residual stream
+        return P(self.batch, self.tp, None)
+
+    @property
+    def act_heads(self) -> P:        # (batch, seq, heads, head_dim)
+        return P(self.batch, None, self.tp, None)
+
+    @property
+    def act_ff(self) -> P:           # (batch, seq, d_ff) column-parallel
+        return P(self.batch, None, self.tp)
+
+    @property
+    def logits(self) -> P:           # (batch, seq, vocab)
+        return P(self.batch, None, self.tp)
+
+    @property
+    def kv_cache(self) -> P:         # (batch, seq, kv_heads_eff, head_dim)
+        return P(self.batch, None, self.tp, None)
+
+    @property
+    def kv_cache_seq(self) -> P:     # long-context batch=1: shard the seq dim
+        return P(None, self.tp, None, None)
+
+    @property
+    def ssm_state(self) -> P:        # (batch, inner, state) — inner column-parallel
+        return P(self.batch, self.tp, None)
+
+    # ---- weights ----
+    @property
+    def w_col(self) -> P:            # (d_model, sharded_out)
+        return P(None, self.tp)
+
+    @property
+    def w_row(self) -> P:            # (sharded_in, d_model)
+        return P(self.tp, None)
+
+    @property
+    def w_replicated(self) -> P:
+        return P()
+
+    @property
+    def embed(self) -> P:            # (vocab, d_model) vocab-sharded
+        return P(self.tp, None)
+
+    @property
+    def w_expert_col(self) -> P:     # (experts, d_model, d_ff)
+        return P(self.tp, None, None)
+
+    @property
+    def w_expert_row(self) -> P:     # (experts, d_ff, d_model)
+        return P(self.tp, None, None)
+
+    @property
+    def norm(self) -> P:
+        return P(None)
+
+
+def make_shardings(parallel: ParallelConfig) -> Shardings:
+    return Shardings(batch=parallel.batch_axes, seq_parallel=parallel.seq_parallel)
+
+
+def param_spec_tree(params, shardings: Shardings, spec_fn):
+    """Map a spec-assignment function over a param pytree (used by launchers)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_fn(path, x, shardings), params
+    )

@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.training.loss import sharded_xent  # noqa: F401

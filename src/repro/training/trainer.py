@@ -1,0 +1,198 @@
+"""Distributed train step: jit(shard_map(local_step)) with manual collectives.
+
+Parallelism layout (DESIGN.md §5):
+  * batch over ("pod","data")   — gradients pmean'd over those axes;
+  * Megatron TP over "model"    — sharded-leaf grads are already complete per
+    shard; replicated-leaf grads (norms, routers, replicated gate weights) are
+    psum'd over "model" (each shard saw a different partial path);
+  * the forward pass is the SAME stack the serving path uses, so the paper's ISO
+    schedule is available at training time too (off by default — the paper targets
+    inference; flip ``RuntimeConfig`` to measure it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import Config, ISOConfig
+from repro.core.overlap import AxisCtx
+from repro.models import api
+from repro.models.decoder import decoder_param_specs
+from repro.training.loss import sharded_xent
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      warmup_cosine)
+
+
+def make_axis_ctx(config: Config) -> AxisCtx:
+    p = config.parallel
+    return AxisCtx(tp_axis="model", tp=p.model, dp_axes=p.batch_axes,
+                   quantized_comm=config.iso.quantized_comm)
+
+
+def batch_specs(cfg_model, batch_axes) -> Dict[str, P]:
+    specs = {"tokens": P(batch_axes, None), "labels": P(batch_axes, None)}
+    if cfg_model.family == "audio":
+        specs["frames"] = P(batch_axes, None, None)
+    if cfg_model.family == "vlm":
+        specs["patches"] = P(batch_axes, None, None)
+    return specs
+
+
+def spec_has(spec: P, axis: str) -> bool:
+    for e in spec:
+        if e == axis or (isinstance(e, (tuple, list)) and axis in e):
+            return True
+    return False
+
+
+_IS_SPEC = lambda x: isinstance(x, P)
+
+
+def _grad_reduce(grads, param_specs, ctx: AxisCtx, dp_sizes=(),
+                 int8: bool = False):
+    """pmean over data axes everywhere; psum over model for replicated leaves
+    (every TP shard saw a different partial path through them).  ``int8``
+    compresses the data-parallel wire traffic (quantized_collectives) — the
+    collective-term lever for trillion-parameter configs (EXPERIMENTS §Perf)."""
+    from repro.core.quantized_collectives import quantized_pmean
+
+    def red(spec, g):
+        if ctx.dp_axes:
+            if int8 and g.size >= 1 << 16:   # small leaves aren't worth it
+                g = quantized_pmean(g, ctx.dp_axes, dp_sizes)
+            else:
+                g = jax.lax.pmean(g, ctx.dp_axes)
+        if ctx.tp_axis and not spec_has(spec, ctx.tp_axis):
+            g = jax.lax.psum(g, ctx.tp_axis)
+        return g
+    return jax.tree_util.tree_map(red, param_specs, grads, is_leaf=_IS_SPEC)
+
+
+def _norm_sq(grads, param_specs, ctx: AxisCtx):
+    sharded, repl = 0.0, 0.0
+    specs = jax.tree_util.tree_leaves(param_specs, is_leaf=_IS_SPEC)
+    for spec, g in zip(specs, jax.tree_util.tree_leaves(grads)):
+        s = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        if ctx.tp_axis and spec_has(spec, ctx.tp_axis):
+            sharded = sharded + s
+        else:
+            repl = repl + s
+    if ctx.tp_axis:
+        sharded = jax.lax.psum(sharded, ctx.tp_axis)
+    return sharded + repl
+
+
+def make_train_step(config: Config, mesh, params_shape):
+    cfg = config.model
+    rt = config.runtime
+    ctx = make_axis_ctx(config)
+    iso_train = config.iso if rt.mode == "train_iso" else \
+        dataclasses.replace(config.iso, enabled=False)
+    p_specs = decoder_param_specs(params_shape)
+    b_specs = batch_specs(cfg, config.parallel.batch_axes)
+    opt_specs = AdamWState(step=P(), mu=p_specs, nu=p_specs)
+
+    def loss_fn(params, batch):
+        out = api.prefill(params, cfg, ctx, iso_train, batch,
+                          logits_mode="all", remat=rt.remat,
+                          unroll=rt.unroll_layers)
+        logits = out["logits_local"]
+        if cfg.family == "vlm":
+            n_p = batch["patches"].shape[1]
+            logits = logits[:, n_p:, :]
+        loss = sharded_xent(logits, batch["labels"], ctx)
+        loss = loss + 0.01 * out["moe_aux"]
+        return loss
+
+    p = config.parallel
+    dp_sizes = (p.pods, p.data) if p.pods > 1 else (p.data,)
+    dp = p.pods * p.data
+
+    if rt.zero1:
+        from repro.training.zero import zero1_update_local, zero_state_specs
+        opt_specs = zero_state_specs(p_specs, p.batch_axes)
+
+        def local_step(params, opt_state, batch, step):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if ctx.dp_axes:
+                loss = jax.lax.pmean(loss, ctx.dp_axes)
+            # model-axis reduction only; ZeRO's psum_scatter reduces over data
+            grads = jax.tree_util.tree_map(
+                lambda spec, g: jax.lax.psum(g, ctx.tp_axis)
+                if ctx.tp_axis and not spec_has(spec, ctx.tp_axis) else g,
+                p_specs, grads, is_leaf=_IS_SPEC)
+            lr = warmup_cosine(step, rt.learning_rate, rt.warmup_steps,
+                               rt.max_steps)
+            new_params, new_opt, gnorm = zero1_update_local(
+                params, grads, opt_state, p_specs, tp_axis=ctx.tp_axis,
+                dp_axes=ctx.dp_axes, dp=dp, lr=lr,
+                weight_decay=rt.weight_decay, grad_clip=rt.grad_clip)
+            return new_params, new_opt, loss, gnorm
+    else:
+        def local_step(params, opt_state, batch, step):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if ctx.dp_axes:
+                loss = jax.lax.pmean(loss, ctx.dp_axes)
+            grads = _grad_reduce(grads, p_specs, ctx, dp_sizes=dp_sizes,
+                                 int8=rt.grad_comm_int8)
+            nsq = _norm_sq(grads, p_specs, ctx)
+            lr = warmup_cosine(step, rt.learning_rate, rt.warmup_steps,
+                               rt.max_steps)
+            new_params, new_opt = adamw_update(
+                params, grads, opt_state, lr=lr, weight_decay=rt.weight_decay,
+                grad_clip=rt.grad_clip, global_norm_sq=nsq)
+            return new_params, new_opt, loss, jnp.sqrt(nsq)
+
+    sm = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(p_specs, opt_specs, b_specs, P()),
+        out_specs=(p_specs, opt_specs, P(), P()),
+        check_vma=False)
+    return jax.jit(sm, donate_argnums=(0, 1)), p_specs, opt_specs, b_specs
+
+
+def init_train_state(config: Config, mesh, key, dtype=jnp.bfloat16):
+    """Initialise params + optimizer state directly with their final shardings."""
+    cfg = config.model
+    p = config.parallel
+    tp = p.model
+
+    def init_params_only():
+        return api.init_params(key, cfg, tp, dtype)
+
+    p_shapes = jax.eval_shape(init_params_only)
+    p_specs = decoder_param_specs(p_shapes)
+    p_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), p_specs, is_leaf=_IS_SPEC)
+
+    if config.runtime.zero1:
+        from repro.training.zero import zero1_init_local, zero_state_specs
+        o_specs = zero_state_specs(p_specs, p.batch_axes)
+        dp = p.pods * p.data
+        o_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), o_specs, is_leaf=_IS_SPEC)
+        with mesh:
+            params = jax.jit(init_params_only, out_shardings=p_shardings)()
+            opt_init = jax.shard_map(
+                lambda pr: zero1_init_local(pr, dp), mesh=mesh,
+                in_specs=(p_specs,), out_specs=o_specs, check_vma=False)
+            opt = jax.jit(opt_init, out_shardings=o_shardings)(params)
+        return params, opt
+
+    def init():
+        params = init_params_only()
+        return params, adamw_init(params)
+
+    o_specs = AdamWState(step=P(), mu=p_specs, nu=p_specs)
+    out_shardings = (
+        p_shardings,
+        jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), o_specs,
+                               is_leaf=_IS_SPEC),
+    )
+    with mesh:
+        return jax.jit(init, out_shardings=out_shardings)()

@@ -1,0 +1,79 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 placeholder devices.
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ISOConfig, ModelConfig, MoEConfig, SSMConfig
+
+
+def tiny_dense(**kw):
+    base = dict(name="t-dense", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                qk_norm=True)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_moe(**kw):
+    base = dict(name="t-moe", family="moe", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128,
+                block_pattern=("attn_moe",),
+                moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                              capacity_factor=8.0, shared_expert_d_ff=32))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_hybrid(**kw):
+    base = dict(name="t-hybrid", family="hybrid", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                block_pattern=("hybrid",), ssm=SSMConfig(state_dim=8),
+                sliding_window=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_xlstm(**kw):
+    base = dict(name="t-xlstm", family="ssm", num_layers=4, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=128,
+                block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+                pos_type="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_whisper(**kw):
+    base = dict(name="t-whisper", family="audio", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+                norm_type="ln", mlp_type="gelu", pos_type="sinusoidal",
+                block_pattern=("dec_block",), encoder_layers=2,
+                encoder_frames=20)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_vlm(**kw):
+    base = dict(name="t-vlm", family="vlm", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                num_patches=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+ALL_TINY = [tiny_dense, tiny_moe, tiny_hybrid, tiny_xlstm, tiny_whisper,
+            tiny_vlm]
+
+
+def iso_cfg(n=2, **kw):
+    base = dict(enabled=True, num_chunks=n, min_chunk_tokens=2, chunk_align=4)
+    base.update(kw)
+    return ISOConfig(**base)
+
+
+ISO_OFF = ISOConfig(enabled=False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,99 @@
+"""HLO analysis: collective parsing on a real compiled module + the overlap
+(hideable-FLOPs) metric distinguishing ISO from baseline."""
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.analysis import overlap_metric, parse_collectives
+
+
+def test_parse_collectives_counts_and_bytes():
+    hlo = """
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  %ar = f32[128,256] all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[128,1024] all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={1}
+  ROOT %r = f32[128,256] reduce-scatter(%ag), replica_groups={{0,1,2,3}}, dimensions={1}
+}
+"""
+    st = parse_collectives(hlo)
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["all-gather"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    ar_bytes = 128 * 256 * 4
+    assert st.buffer_bytes["all-reduce"] == ar_bytes
+    assert st.wire_bytes > ar_bytes          # ring factors applied
+
+
+def _synthetic_hlo(iso: bool) -> str:
+    """Hand-written HLO for a two-chunk TP layer.  Baseline: every dot depends
+    on the previous all-reduce.  ISO: chunk1's dot is independent of AR(c0)."""
+    if iso:
+        body = """
+  %a0 = f32[8,32] dot(%x0, %w1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %a1 = f32[8,32] dot(%x1, %w1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r0 = f32[8,32] all-reduce(%a0), replica_groups={{0,1}}, to_apply=%add
+  %s0 = f32[8,32] add(%x0, %r0)
+  %r1 = f32[8,32] all-reduce(%a1), replica_groups={{0,1}}, to_apply=%add
+  %b0 = f32[8,32] dot(%s0, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %s1 = f32[8,32] add(%x1, %r1)
+  %b1 = f32[8,32] dot(%s1, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,32] add(%b0, %b1)
+"""
+    else:
+        body = """
+  %a0 = f32[8,32] dot(%x0, %w1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r0 = f32[8,32] all-reduce(%a0), replica_groups={{0,1}}, to_apply=%add
+  %s0 = f32[8,32] add(%x0, %r0)
+  %b0 = f32[8,32] dot(%s0, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %rb0 = f32[8,32] all-reduce(%b0), replica_groups={{0,1}}, to_apply=%add
+  %a1 = f32[8,32] dot(%rb0, %w1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r1 = f32[8,32] all-reduce(%a1), replica_groups={{0,1}}, to_apply=%add
+  %b1 = f32[8,32] dot(%r1, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,32] add(%b1, %b1)
+"""
+    return ("ENTRY %main (x0: f32[8,32], x1: f32[8,32], w1: f32[32,32], "
+            "w2: f32[32,32]) -> f32[8,32] {\n"
+            "  %x0 = f32[8,32] parameter(0)\n"
+            "  %x1 = f32[8,32] parameter(1)\n"
+            "  %w1 = f32[32,32] parameter(2)\n"
+            "  %w2 = f32[32,32] parameter(3)\n"
+            + body + "}\n")
+
+
+def test_overlap_metric_iso_exceeds_baseline():
+    m_iso = overlap_metric(_synthetic_hlo(iso=True))
+    m_base = overlap_metric(_synthetic_hlo(iso=False))
+    assert m_iso["collectives"] == 2
+    assert m_base["collectives"] == 3
+    # baseline: every dot is an ancestor or descendant of every AR -> 0 hideable
+    assert m_base["avg_hideable_dots"] == 0.0
+    # ISO: AR(c0) can hide behind chunk1's dots and vice versa
+    assert m_iso["avg_hideable_dots"] >= 1.5
+
+
+def test_parse_real_lowered_module():
+    """End-to-end: parse collectives out of an actual lowered tiny model."""
+    from conftest import tiny_dense, iso_cfg
+    from repro.config import Config, ParallelConfig
+    from repro.launch.mesh import local_test_mesh
+    from repro.launch import runner
+    from repro.models import api
+
+    cfg = tiny_dense()
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso_cfg(2, min_chunk_tokens=2, chunk_align=4))
+    mesh = local_test_mesh(1, 1)
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg, tp=1))
+    batch = api.make_inputs(cfg, 32, 2, abstract=True)
+    build = runner.make_prefill_fn(config, mesh, params_shape,
+                                   logits_mode="last", global_batch=2)
+    with mesh:
+        hlo = build(batch).lower(params_shape, batch).as_text()
+    st = parse_collectives(hlo)
+    # mesh size 1: XLA may fold collectives away; the parse must not crash and
+    # bytes must be non-negative
+    assert st.wire_bytes >= 0.0

@@ -1,0 +1,55 @@
+"""Split-policy properties (hypothesis) + quantized-collective numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_dense
+from repro.config import ISOConfig
+from repro.core.chunking import adaptive_split, even_split, split_chunks
+from repro.core.quantized_collectives import dequantize_int8, quantize_int8
+
+
+@given(seq=st.integers(16, 100_000), n=st.integers(2, 4),
+       align=st.sampled_from([4, 64, 128]))
+@settings(max_examples=200, deadline=None)
+def test_split_partitions_sequence(seq, n, align):
+    iso = ISOConfig(enabled=True, num_chunks=n, min_chunk_tokens=4,
+                    chunk_align=align)
+    lengths = split_chunks(seq, iso, tiny_dense())
+    assert sum(lengths) == seq
+    assert all(l > 0 for l in lengths)
+    if len(lengths) > 1 and seq >= n * align:
+        assert all(l % align == 0 for l in lengths[:-1])
+
+
+@given(seq=st.integers(1, 512))
+@settings(max_examples=100, deadline=None)
+def test_split_disabled_below_threshold(seq):
+    iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=256)
+    lengths = split_chunks(seq, iso, tiny_dense())
+    if seq < 512:
+        assert lengths == (seq,)
+
+
+def test_adaptive_split_balances_quadratic_cost():
+    """The adaptive boundary must be PAST the midpoint (the second chunk's
+    attention is costlier — paper §6), approaching it as the linear term grows."""
+    cfg = tiny_dense(d_model=1024, num_heads=16, num_kv_heads=16, d_ff=64)
+    s = 32768
+    lengths = adaptive_split(s, 2, cfg, align=128)
+    assert lengths[0] > s // 2, lengths
+    even = even_split(s, 2, 128)
+    assert even == (s // 2, s // 2)
+
+
+@given(shape=st.sampled_from([(4, 64), (2, 8, 32)]),
+       scale=st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_int8_roundtrip_error_bound(shape, scale):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape, jnp.float32) * scale
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    bound = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0 + 1e-6
+    assert np.all(np.abs(np.asarray(back - x)) <= bound)

@@ -1,0 +1,23 @@
+"""Dry-run launcher guard: the production-mesh lower+compile path must stay
+green (smallest arch x cheapest shape; full sweep is the offline deliverable)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+_CMD = [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-350m",
+        "--shape", "decode_32k", "--out", "/tmp/dryrun_guard.json"]
+
+
+@pytest.mark.slow
+def test_dryrun_single_pair_compiles():
+    res = subprocess.run(_CMD, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    data = json.load(open("/tmp/dryrun_guard.json"))
+    assert len(data["reports"]) == 1 and not data["failures"]
+    r = data["reports"][0]
+    assert r["devices"] == 256
+    ro = r["roofline"]
+    assert ro["compute_s"] > 0 and ro["memory_s"] > 0
+    assert r["collective_wire_bytes_per_device"] > 0

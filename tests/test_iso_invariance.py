@@ -1,0 +1,90 @@
+"""THE paper invariant: ISO-chunked prefill logits == full-sequence prefill
+logits, for every architecture family, any chunk count, any split policy."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import ALL_TINY, ISO_OFF, iso_cfg
+from repro.core.overlap import AxisCtx
+from repro.models import api
+
+CTX = AxisCtx()
+
+
+def _logits(cfg, iso, batch, params):
+    out = api.prefill(params, cfg, CTX, iso, batch)
+    return out["logits_local"].astype(jnp.float32)
+
+
+@pytest.mark.parametrize("make_cfg", ALL_TINY, ids=lambda f: f.__name__)
+@pytest.mark.parametrize("n_chunks", [2, 3])
+def test_iso_matches_full_prefill(make_cfg, n_chunks, key):
+    cfg = make_cfg()
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 24, 2, key=key, dtype=jnp.float32)
+    ref = _logits(cfg, ISO_OFF, batch, params)
+    got = _logits(cfg, iso_cfg(n_chunks), batch, params)
+    assert not bool(jnp.any(jnp.isnan(got)))
+    assert float(jnp.max(jnp.abs(ref - got))) < 2e-4
+
+
+@pytest.mark.parametrize("policy", ["even", "asymmetric", "adaptive"])
+def test_split_policies_exact(policy, key):
+    cfg = ALL_TINY[0]()
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 40, 2, key=key, dtype=jnp.float32)
+    ref = _logits(cfg, ISO_OFF, batch, params)
+    got = _logits(cfg, iso_cfg(2, split_policy=policy), batch, params)
+    assert float(jnp.max(jnp.abs(ref - got))) < 2e-4
+
+
+def test_iso_cache_matches_baseline_cache(key):
+    """Serving continuity: the KV cache assembled from ISO chunks must equal the
+    baseline prefill cache."""
+    cfg = ALL_TINY[0]()
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 24, 2, key=key, dtype=jnp.float32)
+    c0 = api.prefill(params, cfg, CTX, ISO_OFF, batch, return_cache=True,
+                     cache_len=32)["caches"]
+    c1 = api.prefill(params, cfg, CTX, iso_cfg(2), batch, return_cache=True,
+                     cache_len=32)["caches"]
+    for a, b in zip(jax.tree_util.tree_leaves(c0), jax.tree_util.tree_leaves(c1)):
+        assert float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))) < 2e-4
+
+
+def test_blockwise_attention_matches_dense(key):
+    """The §Perf memory-term lever must be numerically invisible (incl. with
+    ISO chunking and sliding windows)."""
+    import dataclasses
+    cfg = ALL_TINY[0]()
+    cfg_b = dataclasses.replace(cfg, attn_impl="blockwise", attn_block_k=8)
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 40, 2, key=key, dtype=jnp.float32)
+    ref = _logits(cfg, iso_cfg(2), batch, params)
+    got = _logits(cfg_b, iso_cfg(2), batch, params)
+    assert float(jnp.max(jnp.abs(ref - got))) < 2e-4
+    cfg_w = dataclasses.replace(cfg_b, sliding_window=16)
+    cfg_w_ref = dataclasses.replace(cfg, sliding_window=16)
+    ref_w = _logits(cfg_w_ref, ISO_OFF, batch, params)
+    got_w = _logits(cfg_w, iso_cfg(2), batch, params)
+    assert float(jnp.max(jnp.abs(ref_w - got_w))) < 2e-4
+
+
+def test_unrolled_layers_match_scan(key):
+    """The dry-run cost-probe path (unroll_layers) is mathematically identical."""
+    cfg = ALL_TINY[0]()
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 24, 2, key=key, dtype=jnp.float32)
+    ref = api.prefill(params, cfg, CTX, iso_cfg(2), batch)["logits_local"]
+    got = api.prefill(params, cfg, CTX, iso_cfg(2), batch,
+                      unroll=True)["logits_local"]
+    assert float(jnp.max(jnp.abs(ref - got))) < 1e-6
+
+
+def test_min_chunk_tokens_disables_iso(key):
+    cfg = ALL_TINY[0]()
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 8, 1, key=key, dtype=jnp.float32)
+    out = api.prefill(params, cfg, CTX, iso_cfg(2, min_chunk_tokens=64), batch)
+    assert out["num_chunks"] == 1

@@ -1,0 +1,102 @@
+"""Per-kernel shape/dtype sweeps, assert_allclose vs the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,hd", [
+    (1, 2, 2, 16, 16, 32),     # MHA, no prefix
+    (2, 4, 2, 48, 80, 64),     # GQA with prefix
+    (1, 8, 1, 33, 70, 128),    # MQA, ragged lengths
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(B, Hq, Hkv, Sq, Sk, hd, dtype):
+    key = jax.random.PRNGKey(42)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Hq, Sq, hd), dtype)
+    k = jax.random.normal(kk, (B, Hkv, Sk, hd), dtype)
+    v = jax.random.normal(kv, (B, Hkv, Sk, hd), dtype)
+    q_start = Sk - Sq
+    out = ops.flash_attention(q, k, v, q_start=q_start, block_q=16, block_k=32,
+                              interpret=True)
+    expect = ref.flash_prefill_ref(q, k, v, q_start=q_start)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_flash_prefill_window(window):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 2, 32, 32), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 64, 32), jnp.float32)
+    v = jax.random.normal(key, (1, 2, 64, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, q_start=32, window=window, block_q=16,
+                              block_k=16, interpret=True)
+    expect = ref.flash_prefill_ref(q, k, v, q_start=32, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_flash_prefill_equals_chunked_composition():
+    """flash(chunk0) + flash(chunk1 w/ prefix) == flash(full) — the kernel-level
+    ISO property."""
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, H, S, hd = 1, 2, 64, 32
+    q = jax.random.normal(kq, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, H, S, hd), jnp.float32)
+    full = ops.flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    half = S // 2
+    c0 = ops.flash_attention(q[:, :, :half], k[:, :, :half], v[:, :, :half],
+                             block_q=16, block_k=16, interpret=True)
+    c1 = ops.flash_attention(q[:, :, half:], k, v, q_start=half,
+                             block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([c0, c1], axis=2)),
+                               np.asarray(full), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(7, 64), (3, 37, 96), (1, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_quant_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, dtype) * 5
+    q, s = ops.quantize_int8(x, interpret=True)
+    qr, sr = ref.quantize_int8_ref(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # roundtrip error bound: one quantization step
+    x32 = np.asarray(x, np.float32)
+    back = np.asarray(q, np.float32) * np.asarray(s)
+    bound = np.abs(x32).max(axis=-1, keepdims=True) / 127.0 + 1e-6
+    assert np.all(np.abs(back - x32) <= bound)
+
+
+@pytest.mark.parametrize("shape", [(5, 128), (2, 33, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, shape, dtype)
+    g = jax.random.normal(key, (shape[-1],), jnp.float32)
+    out = ops.rms_norm(x, g, interpret=True)
+    expect = ref.rms_norm_ref(x, g)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(4, 512), (2, 17, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swiglu_sweep(shape, dtype):
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, shape, dtype)
+    u = jax.random.normal(jax.random.fold_in(key, 1), shape, dtype)
+    out = ops.swiglu(g, u, interpret=True)
+    expect = ref.swiglu_ref(g, u)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)

@@ -1,0 +1,97 @@
+"""Multi-device (8 host CPUs, subprocess) distributed-correctness tests:
+TP-sharded prefill/decode must match single-device outputs exactly; int8
+collectives within quantization tolerance.  Subprocesses because XLA locks the
+device count at first init (the main pytest process must keep 1 device)."""
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.config import Config, ModelConfig, ParallelConfig, ISOConfig, MoEConfig, SSMConfig
+from repro.core.overlap import AxisCtx
+from repro.launch.mesh import make_mesh
+from repro.launch import runner
+from repro.models import api
+
+key = jax.random.PRNGKey(0)
+iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=2, chunk_align=4)
+pc = ParallelConfig(data=2, model=4)
+mesh = make_mesh(pc)
+
+def compare(cfg, tol=2e-4, quant=False):
+    params1 = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 32, 4, key=key, dtype=jnp.float32)
+    ref = api.prefill(params1, cfg, AxisCtx(), iso, batch,
+                      logits_mode="last")["logits_local"]
+    myiso = iso if not quant else ISOConfig(enabled=True, num_chunks=2,
+                                            min_chunk_tokens=2, chunk_align=4,
+                                            quantized_comm=True)
+    config = Config(model=cfg, parallel=pc, iso=myiso)
+    params4 = api.init_params(key, cfg, tp=4, dtype=jnp.float32)
+    build = runner.make_prefill_fn(config, mesh,
+                                   jax.eval_shape(lambda: params4),
+                                   logits_mode="last", global_batch=4)
+    with mesh:
+        out = build(batch)(params4, batch)
+    d = float(jnp.max(jnp.abs(ref - out["logits_local"][..., :ref.shape[-1]])))
+    assert d < tol, (cfg.name, d)
+    print("ok", cfg.name, d)
+
+dense = ModelConfig(name="dense", family="dense", num_layers=2, d_model=64,
+                    num_heads=8, num_kv_heads=2, d_ff=256, vocab_size=256,
+                    qk_norm=True)
+compare(dense)
+compare(dense, tol=0.15, quant=True)
+moe = ModelConfig(name="moe", family="moe", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=256,
+                  block_pattern=("attn_moe",),
+                  moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=64,
+                                capacity_factor=8.0, shared_expert_d_ff=32))
+compare(moe)
+hyb = ModelConfig(name="hybrid", family="hybrid", num_layers=2, d_model=64,
+                  num_heads=8, num_kv_heads=2, d_ff=128, vocab_size=256,
+                  block_pattern=("hybrid",), ssm=SSMConfig(state_dim=8),
+                  sliding_window=16)
+compare(hyb)
+xl = ModelConfig(name="xlstm", family="ssm", num_layers=4, d_model=64,
+                 num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=256,
+                 block_pattern=("mlstm", "mlstm", "mlstm", "slstm"))
+compare(xl, tol=1e-3)
+
+# sharded decode continuity
+cfg = moe
+params1 = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+batch = api.make_inputs(cfg, 16, 4, key=key, dtype=jnp.float32)
+ref_out = api.prefill(params1, cfg, AxisCtx(), iso, batch, return_cache=True,
+                      cache_len=20)
+lengths = jnp.full((4,), 16, jnp.int32)
+tok = jnp.ones((4, 1), jnp.int32)
+ref_dec, _ = api.decode_step(params1, cfg, AxisCtx(), tok, ref_out["caches"],
+                             lengths)
+config = Config(model=cfg, parallel=pc, iso=iso)
+params4 = api.init_params(key, cfg, tp=4, dtype=jnp.float32)
+pshape = jax.eval_shape(lambda: params4)
+build = runner.make_prefill_fn(config, mesh, pshape, logits_mode="last",
+                               return_cache=True, cache_len=20, global_batch=4)
+with mesh:
+    out4 = build(batch)(params4, batch)
+    cshape = jax.eval_shape(lambda: out4["caches"])
+    dec = runner.make_decode_fn(config, mesh, pshape, cshape, global_batch=4)
+    log4, _ = dec(params4, tok, out4["caches"], lengths)
+d = float(jnp.max(jnp.abs(ref_dec - log4[..., :ref_dec.shape[-1]])))
+assert d < 2e-4, d
+print("ok decode", d)
+print("ALL_MULTIDEVICE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_tp_consistency_subprocess():
+    res = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "ALL_MULTIDEVICE_OK" in res.stdout

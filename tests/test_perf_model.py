@@ -1,0 +1,62 @@
+"""Analytic performance model: paper Table-1 band reproduction + pipeline
+simulator invariants."""
+import pytest
+
+from repro.config import get_model_config
+from repro.perf.model import (HW_PROFILES, prefill_time, simulate_pipeline,
+                              speedup_table)
+
+
+def test_pipeline_sim_baseline_serialises():
+    # 1 chunk, equal comp/comm: total = sum of both
+    units = [(1.0, 0), (1.0, 0)]
+    comms = [0.5, 0.5]
+    t = simulate_pipeline(units, comms, penalty=0.0)
+    assert t == pytest.approx(3.0)
+
+
+def test_pipeline_sim_iso_overlaps():
+    # 2 chunks: chunk1 compute hides chunk0 comm
+    units = [(1.0, 0), (1.0, 1), (1.0, 0), (1.0, 1)]
+    comms = [0.5] * 4
+    t = simulate_pipeline(units, comms, penalty=0.0)
+    assert t < 4.0 + 2.0            # strictly better than serial
+    assert t == pytest.approx(4.5)  # compute-bound: only last comm exposed
+
+
+def test_iso_never_slower_in_model_without_penalty():
+    cfg = get_model_config("paper-70b")
+    for hw in ("4090", "a800", "v5e"):
+        for s in (4096, 32768):
+            base = prefill_time(cfg, s, hw, 8, iso=False)
+            iso = prefill_time(cfg, s, hw, 8, lengths=[s // 2, s - s // 2])
+            if HW_PROFILES[hw].comm_penalty == 0:
+                assert iso <= base * 1.001, (hw, s)
+
+
+def test_table1_bands():
+    """Paper: ~35% average reduction on 4090 (int8 comm), ~15% on A800, for
+    prompts >= 4k.  The analytic model must land in those bands."""
+    lengths = [4096, 8192, 16384, 32768]
+    r30_4090 = speedup_table(get_model_config("paper-30b"), "4090", 4,
+                             lengths, int8_comm=True)
+    r70_a800 = speedup_table(get_model_config("paper-70b"), "a800", 8, lengths)
+    avg_4090 = sum(r30_4090.values()) / len(r30_4090)
+    avg_a800 = sum(r70_a800.values()) / len(r70_a800)
+    assert 25.0 <= avg_4090 <= 50.0, r30_4090
+    assert 5.0 <= avg_a800 <= 25.0, r70_a800
+
+
+def test_quantized_comm_shrinks_comm_share():
+    """Paper Fig 2a: int8 cuts the 4090 comm share from ~75% to ~50%."""
+    from repro.perf.model import layer_costs
+    cfg = get_model_config("paper-30b")
+    hw = HW_PROFILES["4090"]
+    fp = layer_costs(cfg, 0, 8192, hw, 4, int8_comm=False)
+    q = layer_costs(cfg, 0, 8192, hw, 4, int8_comm=True)
+    assert q["comm"] == pytest.approx(fp["comm"] / 2)
+    share_fp = 2 * fp["comm"] / (fp["attn"] + fp["mlp"] + 2 * fp["comm"])
+    share_q = 2 * q["comm"] / (q["attn"] + q["mlp"] + 2 * q["comm"])
+    # paper: ~75% -> ~50% (they additionally tuned p2p; we only halve bytes)
+    assert 0.68 < share_fp < 0.82, share_fp
+    assert share_q < share_fp - 0.1 and share_q < 0.65, (share_fp, share_q)

@@ -1,0 +1,159 @@
+"""Serving engine: continuous batching correctness vs an incremental reference,
+window-cache decode, multi-family requests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_hybrid, tiny_vlm, iso_cfg, ISO_OFF
+from repro.config import Config, ParallelConfig
+from repro.core.overlap import AxisCtx
+from repro.models import api
+from repro.serving import Engine, Request
+from repro.serving.requests import SamplingParams
+
+CTX = AxisCtx()
+
+
+def _engine(cfg, iso=None, max_batch=2, max_len=128):
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso or iso_cfg(2, min_chunk_tokens=16, chunk_align=8))
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    return Engine(config, params, mesh=None, max_batch=max_batch,
+                  max_len=max_len, bucket=16), params, config
+
+
+def _ref_generate(params, cfg, prompt, n_new, extra=None):
+    toks = list(prompt)
+    out = []
+    for _ in range(n_new):
+        batch = {"tokens": jnp.asarray(np.array(toks, np.int32)[None])}
+        if extra:
+            batch.update(extra)
+        o = api.prefill(params, cfg, CTX, ISO_OFF, batch, logits_mode="last")
+        nxt = int(jnp.argmax(o["logits_local"][0, -1, :cfg.vocab_size]))
+        toks.append(nxt)
+        out.append(nxt)
+    return out
+
+
+def test_engine_matches_incremental_reference():
+    cfg = tiny_dense(vocab_size=64)
+    eng, params, _ = _engine(cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (10, 23, 7)]
+    rids = [eng.add_request(Request(prompt=p, sampling=SamplingParams(
+        max_new_tokens=5, eos_id=-1))) for p in prompts]
+    outs = eng.run_until_complete()
+    for rid, p in zip(rids, prompts):
+        assert outs[rid] == _ref_generate(params, cfg, p, 5)
+
+
+def test_engine_continuous_batching_slots_reused():
+    cfg = tiny_dense(vocab_size=64)
+    eng, _, _ = _engine(cfg, max_batch=2)
+    rng = np.random.default_rng(1)
+    for i in range(5):                    # more requests than slots
+        eng.add_request(Request(prompt=rng.integers(2, 64, 8).astype(np.int32),
+                                sampling=SamplingParams(max_new_tokens=3,
+                                                        eos_id=-1)))
+    outs = eng.run_until_complete()
+    assert len(outs) == 5
+    assert all(len(v) == 3 for v in outs.values())
+    assert eng.metrics["completed"] == 5
+
+
+def test_engine_window_cache_hybrid():
+    """Sliding-window arch: generation must work past the window size."""
+    cfg = tiny_hybrid(sliding_window=16, vocab_size=64)
+    eng, params, _ = _engine(cfg, max_len=64)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(2, 64, 30).astype(np.int32)   # prompt > window
+    rid = eng.add_request(Request(prompt=prompt, sampling=SamplingParams(
+        max_new_tokens=4, eos_id=-1)))
+    outs = eng.run_until_complete()
+    assert len(outs[rid]) == 4
+    assert all(0 <= t < 64 for t in outs[rid])
+
+
+def test_engine_vlm_request():
+    cfg = tiny_vlm(vocab_size=64)
+    eng, params, _ = _engine(cfg)
+    rng = np.random.default_rng(3)
+    patches = (rng.standard_normal((cfg.num_patches, cfg.d_model)) * 0.1
+               ).astype(np.float32)
+    prompt = rng.integers(2, 64, 12).astype(np.int32)
+    rid = eng.add_request(Request(prompt=prompt, patches=patches,
+                                  sampling=SamplingParams(max_new_tokens=4,
+                                                          eos_id=-1)))
+    outs = eng.run_until_complete()
+    ref = _ref_generate(params, cfg, prompt, 4,
+                        extra={"patches": jnp.asarray(patches)[None]})
+    assert outs[rid] == ref
+
+
+def test_speculative_decode_matches_greedy():
+    """Self-speculative verify (paper §Discussion) must be output-invariant:
+    exactly the plain greedy stream, just fewer model calls when drafts hit."""
+    cfg = tiny_dense(vocab_size=64)
+    rng = np.random.default_rng(5)
+    # repetitive prompt so the bigram draft gets real acceptances
+    base = rng.integers(2, 64, 6).astype(np.int32)
+    prompt = np.tile(base, 5)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso_cfg(2, min_chunk_tokens=16, chunk_align=8))
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+
+    def gen(spec_k):
+        eng = Engine(config, params, mesh=None, max_batch=2, max_len=128,
+                     bucket=16, spec_k=spec_k)
+        rid = eng.add_request(Request(prompt=prompt.copy(),
+                                      sampling=SamplingParams(
+                                          max_new_tokens=10, eos_id=-1)))
+        outs = eng.run_until_complete()
+        return outs[rid], eng.metrics
+
+    plain, m_plain = gen(0)
+    spec, m_spec = gen(3)
+    assert spec == plain, (spec, plain)
+    assert len(spec) == 10
+    # the draft must have amortised at least one call
+    assert m_spec["decode_calls"] <= m_plain["decode_calls"]
+
+
+def test_multi_token_decode_matches_sequential(key):
+    """K-token verify forward == K sequential single-token decodes."""
+    cfg = tiny_dense(vocab_size=64)
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 16, 2, key=key, dtype=jnp.float32)
+    out = api.prefill(params, cfg, CTX, ISO_OFF, batch, return_cache=True,
+                      cache_len=32)
+    toks = jax.random.randint(jax.random.fold_in(key, 9), (2, 3), 2, 64)
+    lengths = jnp.full((2,), 16, jnp.int32)
+    # multi-token
+    lg_multi, _ = api.decode_step(params, cfg, CTX, toks, out["caches"],
+                                  lengths)
+    # sequential
+    caches = out["caches"]
+    lgs = []
+    for j in range(3):
+        lg, caches = api.decode_step(params, cfg, CTX, toks[:, j:j + 1], caches,
+                                     lengths + j)
+        lgs.append(lg)
+    lg_seq = jnp.concatenate(lgs, axis=1)
+    assert float(jnp.max(jnp.abs(lg_multi - lg_seq))) < 2e-4
+
+
+def test_engine_eos_stops_early():
+    cfg = tiny_dense(vocab_size=64)
+    eng, params, _ = _engine(cfg)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, 64, 10).astype(np.int32)
+    ref = _ref_generate(params, cfg, prompt, 8)
+    eos = ref[2]                            # force stop at the 3rd token
+    rid = eng.add_request(Request(prompt=prompt, sampling=SamplingParams(
+        max_new_tokens=8, eos_id=eos)))
+    outs = eng.run_until_complete()
+    assert outs[rid] == ref[:3]

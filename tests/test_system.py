@@ -1,0 +1,83 @@
+"""End-to-end system behaviour: the full paper pipeline on one process —
+prefill (ISO) -> serving cache -> decode -> training step -> analytic claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_dense, iso_cfg, ISO_OFF
+from repro.config import Config, ParallelConfig, RuntimeConfig, get_model_config
+from repro.core.overlap import AxisCtx
+from repro.launch.mesh import local_test_mesh
+from repro.models import api
+from repro.perf.model import speedup_table
+from repro.serving import Engine, Request
+from repro.serving.requests import SamplingParams
+from repro.training.data import make_training_batch
+from repro.training.trainer import init_train_state, make_train_step
+
+CTX = AxisCtx()
+
+
+def test_full_pipeline_prefill_decode_train(key):
+    """One model: ISO prefill == baseline, its cache decodes correctly, and the
+    same stack trains."""
+    cfg = tiny_dense(vocab_size=64)
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    batch = api.make_inputs(cfg, 48, 2, key=key, dtype=jnp.float32)
+
+    # 1. the paper's invariant
+    base = api.prefill(params, cfg, CTX, ISO_OFF, batch, return_cache=True,
+                       cache_len=64)
+    iso = api.prefill(params, cfg, CTX, iso_cfg(2, min_chunk_tokens=8), batch,
+                      return_cache=True, cache_len=64)
+    assert float(jnp.max(jnp.abs(
+        base["logits_local"] - iso["logits_local"]))) < 2e-4
+
+    # 2. serving continuity from the ISO-built cache
+    lengths = jnp.full((2,), 48, jnp.int32)
+    tok = jnp.argmax(iso["logits_local"][:, -1:, :64], axis=-1).astype(jnp.int32)
+    lg_iso, _ = api.decode_step(params, cfg, CTX, tok, iso["caches"], lengths)
+    lg_base, _ = api.decode_step(params, cfg, CTX, tok, base["caches"], lengths)
+    assert float(jnp.max(jnp.abs(lg_iso - lg_base))) < 2e-4
+
+    # 3. the same stack trains (shared code path, not a separate model)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    runtime=RuntimeConfig(mode="train", max_steps=10,
+                                          warmup_steps=1, remat=False))
+    mesh = local_test_mesh(1, 1)
+    p2, opt = init_train_state(config, mesh, key, dtype=jnp.float32)
+    step_fn, *_ = make_train_step(config, mesh, jax.eval_shape(lambda: p2))
+    b = make_training_batch(cfg, 32, 2, 0)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    with mesh:
+        _, _, loss, gnorm = step_fn(p2, opt, b, jnp.int32(1))
+    assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm))
+
+
+def test_paper_headline_claims_hold():
+    """The two numbers the paper leads with, via the calibrated model."""
+    lengths = [4096, 8192, 16384, 32768]
+    r4090 = speedup_table(get_model_config("paper-30b"), "4090", 4, lengths,
+                          int8_comm=True)
+    ra800 = speedup_table(get_model_config("paper-70b"), "a800", 8, lengths)
+    assert 25 <= sum(r4090.values()) / 4 <= 50      # paper: ~35 %
+    assert 5 <= sum(ra800.values()) / 4 <= 25       # paper: ~15 %
+
+
+def test_engine_serves_all_assigned_family_kinds(key):
+    """The engine handles a mixed queue across request kinds."""
+    from conftest import tiny_vlm
+    cfg = tiny_vlm(vocab_size=64)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso_cfg(2, min_chunk_tokens=16, chunk_align=8))
+    params = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+    eng = Engine(config, params, mesh=None, max_batch=2, max_len=96, bucket=16)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.add_request(Request(
+            prompt=rng.integers(2, 64, 12 + i).astype(np.int32),
+            patches=(rng.standard_normal((cfg.num_patches, cfg.d_model)) * 0.1
+                     ).astype(np.float32),
+            sampling=SamplingParams(max_new_tokens=3, eos_id=-1)))
+    outs = eng.run_until_complete()
+    assert len(outs) == 3 and all(len(v) == 3 for v in outs.values())

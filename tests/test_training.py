@@ -1,0 +1,106 @@
+"""Training substrate: loss decreases, optimizer invariants, checkpoint
+round-trip, vocab-sharded xent == dense xent."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from repro.config import Config, ParallelConfig, RuntimeConfig
+from repro.core.overlap import AxisCtx
+from repro.launch.mesh import local_test_mesh
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, SyntheticLM, make_training_batch
+from repro.training.loss import sharded_xent
+from repro.training.optimizer import adamw_init, adamw_update, warmup_cosine
+from repro.training.trainer import init_train_state, make_train_step
+
+
+def _run_steps(cfg, n_steps, seq=32, batch=4):
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    runtime=RuntimeConfig(mode="train", seq_len=seq,
+                                          global_batch=batch, max_steps=n_steps,
+                                          warmup_steps=2, remat=False))
+    mesh = local_test_mesh(1, 1)
+    params, opt = init_train_state(config, mesh, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32)
+    step_fn, *_ = make_train_step(config, mesh, jax.eval_shape(lambda: params))
+    losses = []
+    with mesh:
+        for s in range(n_steps):
+            b = make_training_batch(cfg, seq, batch, s)
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, loss, _ = step_fn(params, opt, b, jnp.int32(s))
+            losses.append(float(loss))
+    return losses
+
+
+def test_loss_decreases_dense():
+    losses = _run_steps(tiny_dense(), 12)
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_loss_decreases_moe():
+    losses = _run_steps(tiny_moe(), 8)
+    assert losses[-1] < losses[0] + 0.05
+
+
+def test_sharded_xent_matches_dense():
+    key = jax.random.PRNGKey(0)
+    B, S, V = 2, 8, 64
+    logits = jax.random.normal(key, (B, S, V), jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, V)
+    got = sharded_xent(logits, labels, AxisCtx())
+    logp = jax.nn.log_softmax(logits)
+    want = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    lr0 = warmup_cosine(jnp.int32(0), 1e-3, 10, 100)
+    lr_w = warmup_cosine(jnp.int32(10), 1e-3, 10, 100)
+    lr_end = warmup_cosine(jnp.int32(100), 1e-3, 10, 100)
+    assert float(lr0) == 0.0
+    np.testing.assert_allclose(float(lr_w), 1e-3, rtol=1e-5)
+    assert float(lr_end) < 2e-4
+
+
+def test_adamw_grad_clip_invariance():
+    params = {"w": jnp.ones((4, 4))}
+    big_grads = {"w": jnp.full((4, 4), 100.0)}
+    st = adamw_init(params)
+    p1, _ = adamw_update(params, big_grads, st, lr=0.1, weight_decay=0.0,
+                         grad_clip=1.0)
+    # clipped update magnitude bounded by lr * (1 + eps slack)
+    assert float(jnp.max(jnp.abs(p1["w"] - params["w"]))) <= 0.11
+
+
+def test_checkpoint_roundtrip():
+    cfg = tiny_dense()
+    from repro.models import api
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, {"params": params}, step=7)
+        restored, step = ckpt.restore(d, {"params": params})
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_synthetic_data_deterministic_and_learnable():
+    dc = DataConfig(seq_len=64, global_batch=2, vocab_size=128, seed=3)
+    ds = SyntheticLM(dc)
+    b1 = ds.batch(5)
+    b2 = ds.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (2, 64)
+    # markov structure: majority of next tokens follow the permutation
+    toks, labs = b1["tokens"], b1["labels"]
+    hit = (ds.perm[toks] == labs).mean()
+    assert hit > 0.5
