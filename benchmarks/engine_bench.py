@@ -1,7 +1,9 @@
-"""End-to-end serving wall-clock on CPU with a reduced model: ISO on vs off.
-On CPU there is no collective to hide, so the derived column reports the
-CORRECTNESS-preserving overhead of the chunked schedule (paper: the split cost
-that longer prompts amortise) plus tokens/s."""
+"""End-to-end serving wall-clock on CPU with a reduced model: ISO on vs off,
+and paged-vs-dense engines.  On CPU there is no collective to hide, so the
+derived columns report the CORRECTNESS-preserving overhead of the chunked
+schedule (paper: the split cost that longer prompts amortise), tokens/s, and —
+for the paged mode — the KV memory footprint and time-to-first-token with
+chunked-prefill interleaving enabled."""
 from __future__ import annotations
 
 import time
@@ -10,10 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import Config, ISOConfig, ParallelConfig, get_model_config
+from repro.config import (Config, ISOConfig, ParallelConfig, ServingConfig,
+                          get_model_config)
 from repro.launch.train import reduce_cfg
 from repro.models import api
-from repro.serving import Engine, Request
+from repro.serving import Engine, PagedEngine, Request
 from repro.serving.requests import SamplingParams
 
 
@@ -39,15 +42,81 @@ def _run(cfg, iso, n_req=3, plen=96, new=8):
     return [outs[r] for r in rids], wall, eng.metrics
 
 
+def _run_paged(cfg, iso, params, *, lengths, new=8, budget=48, page_size=16,
+               max_len=0):
+    max_len = max_len or (max(lengths) + new + 8)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso,
+                    serving=ServingConfig(page_size=page_size, max_batch=2,
+                                          max_len=max_len,
+                                          prefill_token_budget=budget))
+    eng = PagedEngine(config, params)
+    rng = np.random.default_rng(0)
+    rids, peak_pages = [], 0
+    for n in lengths:
+        rids.append(eng.add_request(Request(
+            prompt=rng.integers(2, cfg.vocab_size, n).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=new, eos_id=-1))))
+    t0 = time.perf_counter()
+    while eng.scheduler.waiting or any(s is not None for s in eng.slots) or \
+            not eng.metrics["steps"]:
+        eng.step()
+        peak_pages = max(peak_pages, eng.alloc.used_pages)
+        if eng.metrics["steps"] > 10_000:
+            break
+    wall = time.perf_counter() - t0
+    outs = {st.request.rid: st.generated for st in eng._finished}
+    missing = [r for r in rids if r not in outs]
+    assert not missing, \
+        f"paged engine stalled on rids {missing}: metrics={eng.metrics}"
+    return [outs[r] for r in rids], wall, eng, peak_pages
+
+
 def run(emit):
     cfg = reduce_cfg(get_model_config("qwen3-4b"), "tiny")
     out_b, wall_b, m_b = _run(cfg, ISOConfig(enabled=False))
-    out_i, wall_i, m_i = _run(cfg, ISOConfig(enabled=True, num_chunks=2,
-                                             min_chunk_tokens=16,
-                                             chunk_align=16))
+    iso2 = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=16,
+                     chunk_align=16)
+    out_i, wall_i, m_i = _run(cfg, iso2)
     assert out_b == out_i, "ISO changed generated tokens!"
     emit("engine/baseline", wall_b * 1e6,
          f"prefill_s={m_b['prefill_s']:.2f};completed={m_b['completed']}")
     emit("engine/iso2", wall_i * 1e6,
          f"prefill_s={m_i['prefill_s']:.2f};completed={m_i['completed']};"
          f"tokens_equal=True")
+
+    # ---- paged vs dense: mixed-length workload, chunked-prefill interleave
+    lengths, new = (96, 48, 32), 8
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    max_len = max(lengths) + new + 8
+    dense = Engine(config, params, mesh=None, max_batch=2, max_len=max_len,
+                   bucket=32)
+    rng = np.random.default_rng(0)
+    d_rids = [dense.add_request(Request(
+        prompt=rng.integers(2, cfg.vocab_size, n).astype(np.int32),
+        sampling=SamplingParams(max_new_tokens=new, eos_id=-1)))
+        for n in lengths]
+    t0 = time.perf_counter()
+    d_outs = dense.run_until_complete()
+    wall_d = time.perf_counter() - t0
+    # dense footprint: every slot reserves max_len KV
+    dense_kv = sum(l.size * l.dtype.itemsize
+                   for c in dense.caches for k, l in c.items()
+                   if k in ("k", "v"))
+
+    p_outs, wall_p, peng, peak_pages = _run_paged(
+        cfg, iso2, params, lengths=lengths, new=new, max_len=max_len)
+    equal = [d_outs[r] for r in d_rids] == p_outs
+    m = peng.metrics
+    ttft_ms = 1e3 * m["ttft_sum"] / max(m["ttft_n"], 1)
+    peak_kv = peak_pages * peng.kv.page_bytes()
+    emit("engine/dense_cache", wall_d * 1e6,
+         f"kv_bytes={dense_kv};completed={dense.metrics['completed']}")
+    emit("engine/paged_cache", wall_p * 1e6,
+         f"kv_bytes_peak={peak_kv};ttft_ms={ttft_ms:.1f};"
+         f"prefill_calls={m['prefill_calls']};steps={m['steps']};"
+         f"tokens_equal={equal}")
+    assert equal, "paged engine changed generated tokens!"

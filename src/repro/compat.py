@@ -1,0 +1,65 @@
+"""JAX version-compat shims.
+
+The repo targets recent JAX, but must degrade gracefully on older installs
+(e.g. 0.4.x, where ``jax.sharding.AxisType`` and the ``axis_types=`` kwarg of
+``jax.make_mesh`` don't exist yet).  Centralising the fallbacks here keeps
+version probes out of the hot modules.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+# jax.sharding.AxisType landed after 0.4.x; None signals "explicit axis types
+# unsupported — build plain meshes".
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+# jax.shard_map was promoted out of jax.experimental after 0.4.x.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:                                          # pragma: no cover - version dep
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        # old API named the (already-default-True) check kwarg differently
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (new JAX) or the classic ``psum(1, axis)`` idiom
+    (old JAX) — both constant-fold inside shard_map bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)          # pragma: no cover - version dep
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalised to one dict.
+
+    Old JAX returns a list with one dict per program; new JAX returns the
+    dict directly. Either may be empty/None on some backends."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None):
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported.
+
+    Older JAX has neither the kwarg nor the enum; auto mode is the default
+    there, so dropping the argument is behaviour-preserving.
+    """
+    kw = {"devices": devices} if devices is not None else {}
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=(AxisType.Auto,) * len(axis_names),
+                                 **kw)
+        except TypeError:                      # enum exists but kwarg doesn't
+            pass
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)

@@ -168,6 +168,22 @@ class ISOConfig:
 
 
 @dataclass(frozen=True)
+class ServingConfig:
+    """Paged-KV continuous-batching engine (serving/paged_engine.py).
+
+    The scheduler admits requests by splitting their prompts with
+    ``core/chunking.split_chunks`` (the ISO chunk is the scheduling quantum)
+    and interleaves prefill chunks with batched decode under a per-step
+    prefill token budget (Sarathi-style chunked prefill)."""
+    page_size: int = 16              # tokens per KV page
+    num_pages: int = 0               # 0 -> max_batch * ceil(max_len/page_size)
+    prefill_token_budget: int = 512  # max prefill tokens per engine step
+    scheduler_policy: str = "fcfs"   # fcfs | priority
+    max_batch: int = 8               # decode batch width (slot count)
+    max_len: int = 512               # per-request token capacity
+
+
+@dataclass(frozen=True)
 class RuntimeConfig:
     mode: str = "serve"              # serve | train
     dtype: str = "bfloat16"
@@ -194,6 +210,7 @@ class Config:
     parallel: ParallelConfig = field(default_factory=ParallelConfig)
     iso: ISOConfig = field(default_factory=ISOConfig)
     runtime: RuntimeConfig = field(default_factory=RuntimeConfig)
+    serving: ServingConfig = field(default_factory=ServingConfig)
 
     def replace(self, **kw) -> "Config":
         return dataclasses.replace(self, **kw)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.config import (Config, ISOConfig, INPUT_SHAPES, ModelConfig,
                           ParallelConfig, RuntimeConfig, get_model_config)
+from repro import compat
 from repro.core.analysis import overlap_metric, parse_collectives
 from repro.launch.mesh import make_production_mesh, parallel_for_mesh
 from repro.models import api
@@ -115,7 +116,7 @@ def lower_shape(arch: str, shape_name: str, *, multi_pod: bool = False,
                     from repro.training.zero import zero1_init_local
                     dp = cfg_local.parallel.pods * cfg_local.parallel.data
                     opt_shape = jax.eval_shape(
-                        lambda pr: jax.shard_map(
+                        lambda pr: compat.shard_map(
                             lambda q: zero1_init_local(q, dp), mesh=mesh,
                             in_specs=(make_train_step(cfg_local, mesh, pr)[1],),
                             out_specs=make_train_step(cfg_local, mesh, pr)[2],
@@ -150,7 +151,7 @@ def lower_shape(arch: str, shape_name: str, *, multi_pod: bool = False,
                 lens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
                 lowered = fn.lower(params_shape, toks, caches_shape, lens)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         coll = parse_collectives(compiled.as_text())
         return compiled, cost, coll
 

@@ -6,6 +6,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro import compat
 from repro.config import ParallelConfig
 
 
@@ -14,22 +15,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     (2x16x16 = 512) with a leading "pod" axis carried over DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(parallel: ParallelConfig):
-    return jax.make_mesh(
-        parallel.mesh_shape, parallel.axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(parallel.axis_names))
+    return compat.make_mesh(parallel.mesh_shape, parallel.axis_names)
 
 
 def local_test_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — unit tests."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def parallel_for_mesh(mesh) -> ParallelConfig:

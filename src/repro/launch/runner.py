@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.config import Config, ISOConfig, ModelConfig
 from repro.core.overlap import AxisCtx
 from repro.models import api
@@ -69,7 +70,7 @@ def make_prefill_fn(config: Config, mesh, params_shape, *,
 
     def build(batch):
         in_b, out_specs = specs_of(batch)
-        sm = jax.shard_map(local_fn, mesh=mesh, in_specs=(p_specs, in_b),
+        sm = compat.shard_map(local_fn, mesh=mesh, in_specs=(p_specs, in_b),
                            out_specs=out_specs, check_vma=False)
         return jax.jit(sm)
 
@@ -91,7 +92,7 @@ def make_decode_fn(config: Config, mesh, params_shape, caches_shape, *,
             unroll=config.runtime.unroll_layers)
         return logits, new_caches
 
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(p_specs, P(b_axes, None), c_specs, P(b_axes)),
         out_specs=(P(b_axes, None, "model"), c_specs),

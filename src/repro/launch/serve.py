@@ -14,10 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import Config, ISOConfig, ParallelConfig, RuntimeConfig, \
-    get_model_config
+    ServingConfig, get_model_config
 from repro.launch.train import reduce_cfg
 from repro.models import api
-from repro.serving import Engine, Request
+from repro.serving import Engine, PagedEngine, Request
 from repro.serving.requests import SamplingParams
 
 
@@ -32,18 +32,33 @@ def main(argv=None) -> int:
     ap.add_argument("--iso-off", action="store_true")
     ap.add_argument("--chunks", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache + chunked-prefill scheduler")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "priority"])
     args = ap.parse_args(argv)
 
     cfg = reduce_cfg(get_model_config(args.arch), args.preset)
+    if args.paged and cfg.family == "audio":
+        ap.error("--paged does not support enc-dec (audio) archs yet")
     iso = ISOConfig(enabled=not args.iso_off, num_chunks=args.chunks,
                     min_chunk_tokens=16, chunk_align=16)
+    max_len = args.prompt_len + args.max_new + 8
+    serving = ServingConfig(page_size=args.page_size, max_batch=args.max_batch,
+                            max_len=max_len,
+                            prefill_token_budget=args.prefill_budget,
+                            scheduler_policy=args.policy)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
-                    iso=iso, runtime=RuntimeConfig(mode="serve"))
+                    iso=iso, runtime=RuntimeConfig(mode="serve"),
+                    serving=serving)
     key = jax.random.PRNGKey(0)
     params = api.init_params(key, cfg, tp=1)
-    max_len = args.prompt_len + args.max_new + 8
-    eng = Engine(config, params, mesh=None, max_batch=args.max_batch,
-                 max_len=max_len, bucket=32)
+    if args.paged:
+        eng = PagedEngine(config, params)
+    else:
+        eng = Engine(config, params, mesh=None, max_batch=args.max_batch,
+                     max_len=max_len, bucket=32)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -69,6 +84,13 @@ def main(argv=None) -> int:
           f"requests={len(outs)} new_tokens={total_new} wall={wall:.2f}s")
     print(f"prefill: {m['prefill_tokens']} tok in {m['prefill_s']:.2f}s | "
           f"decode: {m['decode_s']:.2f}s | completed={m['completed']}")
+    if args.paged:
+        s = eng.page_stats()
+        ttft = m["ttft_sum"] / max(m["ttft_n"], 1)
+        print(f"paged: steps={m['steps']} prefill_calls={m['prefill_calls']} "
+              f"preemptions={m['preemptions']} ttft={ttft * 1e3:.1f}ms | "
+              f"pages={s['num_pages']}x{s['page_size']} "
+              f"kv_reserved={s['kv_bytes_reserved']}B")
     for rid in sorted(outs)[:3]:
         print(f"  rid {rid}: {outs[rid][:10]}{'...' if len(outs[rid]) > 10 else ''}")
     return 0

@@ -178,29 +178,41 @@ def o_proj_partial(p: dict, attn_out) -> jnp.ndarray:
 
 def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
                          start_pos, prefix_kv: Optional[Tuple] = None,
-                         window: int = 0, causal: bool = True):
+                         prefix_pos=None, window: int = 0, causal: bool = True):
     """Chunked-prefill attention.  ``start_pos``: scalar absolute position of the
-    chunk's first token.  ``prefix_kv``: (k,v) of all previous chunks (local shard).
+    chunk's first token (static or traced).  ``prefix_kv``: (k,v) of all previous
+    chunks (local shard).  ``prefix_pos``: optional (B, S_prefix) absolute position
+    of each prefix slot, -1 = empty — required when the prefix comes from a paged
+    cache (resumed chunked prefill), where slots are padded and slot != position.
+    Without it the prefix is assumed dense and contiguous from position 0.
     Returns (partial_out, (k,v) of THIS chunk for the growing prefix).
     """
     B, S, _ = x.shape
     q_pos = (start_pos + jnp.arange(S, dtype=jnp.int32))[None, :].repeat(B, 0)
     q, k, v = project_qkv(p, x, cfg, q_pos)
+    k_valid = None
     if prefix_kv is not None:
         pk, pv = prefix_kv
         k_all = jnp.concatenate([pk, k], axis=1)
         v_all = jnp.concatenate([pv, v], axis=1)
-        k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)[None, :].repeat(B, 0)
+        if prefix_pos is not None:
+            k_pos = jnp.concatenate([prefix_pos.astype(jnp.int32), q_pos],
+                                    axis=1)
+            k_valid = jnp.concatenate(
+                [prefix_pos >= 0, jnp.ones((B, S), bool)], axis=1)
+        else:
+            k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32
+                               )[None, :].repeat(B, 0)
     else:
         k_all, v_all = k, v
         k_pos = q_pos
     if cfg.attn_impl == "blockwise":
         out = sdpa_blockwise(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
-                             causal=causal, window=window,
+                             causal=causal, window=window, k_valid=k_valid,
                              group_eff=layout_group, block_k=cfg.attn_block_k)
     else:
         out = sdpa(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos, causal=causal,
-                   window=window, group_eff=layout_group)
+                   window=window, k_valid=k_valid, group_eff=layout_group)
     return o_proj_partial(p, out), (k, v)
 
 

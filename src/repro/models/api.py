@@ -59,6 +59,16 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,
     return dec_lib.init_caches(cfg, batch, cache_len, tp, dtype)
 
 
+def init_state_caches(cfg: ModelConfig, batch: int, tp: int,
+                      dtype=jnp.bfloat16):
+    """Per-slot recurrent-state caches for the paged engine: the dense caches
+    minus k/v/pos (KV lives in the page pool — serving/kvcache.py)."""
+    assert cfg.family != "audio", "paged engine does not support enc-dec yet"
+    caches = dec_lib.init_caches(cfg, batch, 1, tp, dtype)
+    return tuple({k: v for k, v in c.items() if k not in ("k", "v", "pos")}
+                 for c in caches)
+
+
 def make_inputs(cfg: ModelConfig, seq_len: int, global_batch: int,
                 key=None, abstract: bool = False, dtype=jnp.bfloat16):
     """Concrete (random) or abstract (ShapeDtypeStruct) model inputs."""

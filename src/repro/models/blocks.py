@@ -39,6 +39,9 @@ class StageCtx:
     mode: str = "prefill"              # prefill | decode | encode
     window: int = 0
     lengths: Optional[jnp.ndarray] = None   # decode: (B,) cached token counts
+    # resumed chunked prefill (paged engine): absolute position of this call's
+    # first token — static int or traced scalar; chunk starts stay call-relative
+    pos_offset: Any = 0
 
 
 def _n1(p, x, cfg):
@@ -52,6 +55,35 @@ def _n2(p, x, cfg):
 # --------------------------------------------------------------------------
 # stages; each returns (out, new_seq_state, extras)
 # --------------------------------------------------------------------------
+
+def _resume_prefix(seq_state, cache, sctx: StageCtx, start_pos, B):
+    """Effective attention prefix for a (possibly resumed) prefill chunk.
+
+    ``seq_state``: (k, v) accumulated across chunks WITHIN this call (positions
+    ``pos_offset .. pos_offset+start_pos``, contiguous).  ``cache``: optional
+    persistent prefix from earlier engine steps (paged gather: padded slots,
+    ``pos`` -1 = empty).  Returns (prefix_kv, prefix_pos) for
+    ``attn_prefill_partial``; prefix_pos is None when the prefix is dense from 0.
+    """
+    if cache is None or "k" not in cache:
+        if seq_state is not None and not _static_zero(sctx.pos_offset):
+            intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
+            return seq_state, jnp.broadcast_to(intra[None], (B, start_pos))
+        return seq_state, None
+    ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+    if seq_state is None:
+        return (ck, cv), cpos
+    sk, sv = seq_state
+    intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
+    intra = jnp.broadcast_to(intra[None], (B, start_pos))
+    return ((jnp.concatenate([ck, sk], axis=1),
+             jnp.concatenate([cv, sv], axis=1)),
+            jnp.concatenate([cpos.astype(jnp.int32), intra], axis=1))
+
+
+def _static_zero(off) -> bool:
+    return isinstance(off, int) and off == 0
+
 
 def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     cfg = sctx.cfg
@@ -67,9 +99,12 @@ def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
         partial = attn_lib.attn_encode_partial(
             p["attn"], xn, cfg, sctx.group_eff, kv_full=seq_state)
         return partial, seq_state, {}
+    prefix_kv, prefix_pos = _resume_prefix(seq_state, cache, sctx, start_pos,
+                                           x.shape[0])
     partial, kv_new = attn_lib.attn_prefill_partial(
-        p["attn"], xn, cfg, sctx.group_eff, start_pos=start_pos,
-        prefix_kv=seq_state, window=sctx.window)
+        p["attn"], xn, cfg, sctx.group_eff,
+        start_pos=sctx.pos_offset + start_pos,
+        prefix_kv=prefix_kv, prefix_pos=prefix_pos, window=sctx.window)
     if seq_state is None:
         new_state = kv_new
     else:
@@ -113,9 +148,14 @@ def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
         s_part, ssm_new = ssm_lib.ssm_decode_partial(
             p["ssm"], xn, cfg.ssm, cache["ssm"])
         return a_part + s_part, seq_state, {"kv": kv_new, "ssm": ssm_new}
+    if ssm_state is None and cache is not None and "ssm" in cache:
+        ssm_state = cache["ssm"]          # resumed chunked prefill carry
+    prefix_kv, prefix_pos = _resume_prefix(kv_state, cache, sctx, start_pos,
+                                           x.shape[0])
     a_part, kv_new = attn_lib.attn_prefill_partial(
-        p["attn"], xn, cfg, sctx.group_eff, start_pos=start_pos,
-        prefix_kv=kv_state, window=sctx.window)
+        p["attn"], xn, cfg, sctx.group_eff,
+        start_pos=sctx.pos_offset + start_pos,
+        prefix_kv=prefix_kv, prefix_pos=prefix_pos, window=sctx.window)
     s_part, ssm_new = ssm_lib.ssm_partial(p["ssm"], xn, cfg.ssm, ssm_state)
     if kv_state is None:
         kv_acc = kv_new
@@ -128,7 +168,9 @@ def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
 def mlstm_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     cfg = sctx.cfg
     xn = _n1(p, x, cfg)
-    state = cache["mlstm"] if (sctx.mode == "decode" and cache) else seq_state
+    state = seq_state
+    if state is None and cache is not None and "mlstm" in cache:
+        state = cache["mlstm"]            # decode, or resumed-prefill carry
     out, new_state = xlstm_lib.mlstm_partial(p["mlstm"], xn, cfg, state)
     return out, new_state, {"mlstm": new_state}
 
@@ -136,7 +178,9 @@ def mlstm_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
 def slstm_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     cfg = sctx.cfg
     xn = _n1(p, x, cfg)
-    state = cache["slstm"] if (sctx.mode == "decode" and cache) else seq_state
+    state = seq_state
+    if state is None and cache is not None and "slstm" in cache:
+        state = cache["slstm"]            # decode, or resumed-prefill carry
     out, new_state = xlstm_lib.slstm_forward(p["slstm"], xn, cfg, state)
     return out, new_state, {"slstm": new_state}
 

@@ -102,14 +102,29 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
             tokens=None, embeds=None, extra_embeds=None,
             logits_mode: str = "all", return_cache: bool = False,
             cache_len: int = 0, remat: bool = False, unroll: bool = False,
-            layer_statics=None, mode: str = "prefill") -> Dict[str, Any]:
-    """Run the stack over a full prompt with the ISO schedule.
+            layer_statics=None, mode: str = "prefill",
+            prefix_caches=None, pos_offset=0,
+            return_extras: bool = False) -> Dict[str, Any]:
+    """Run the stack over a full prompt — or one resumed slice of it — with the
+    ISO schedule.
 
     tokens: (B,S) int32, or embeds: (B,S,D) precomputed (audio/vlm frontends).
     extra_embeds: (B,S0,D) prepended continuous tokens (VLM patches).
+
+    Resumed chunked prefill (paged engine): ``prefix_caches`` is a per-position
+    tuple of dicts stacked over periods — attention positions carry a gathered
+    ``{k, v, pos}`` prefix (padded slots, pos -1 = empty), recurrent positions
+    carry their ``{ssm|mlstm|slstm}`` state — and ``pos_offset`` (static int or
+    traced scalar) is the absolute position of this call's first token.  The
+    call's own chunking still happens here, so ISO overlap applies within the
+    resumed slice exactly as in a monolithic prefill.
     """
     if embeds is None:
         embeds = embed_tokens(params, tokens, cfg, ctx)
+        if cfg.pos_type == "sinusoidal" and not (isinstance(pos_offset, int)
+                                                 and pos_offset == 0):
+            raise NotImplementedError(
+                "resumed prefill with sinusoidal positions (traced offset)")
     if extra_embeds is not None:
         embeds = jnp.concatenate([extra_embeds.astype(embeds.dtype), embeds], axis=1)
     B, S, D = embeds.shape
@@ -125,10 +140,13 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
         x_chunks.append(jax.lax.slice_in_dim(embeds, off, off + l, axis=1))
         off += l
 
+    assert layer_statics is None or prefix_caches is None
     sctx = _stage_ctx(cfg, ctx, mode)
+    sctx.pos_offset = pos_offset
     xs_final, extras = run_stack_prefill(
         params["periods"], cfg.block_pattern, x_chunks, tuple(starts), sctx, ctx,
-        layer_statics=layer_statics, remat=remat, unroll=unroll)
+        layer_statics=layer_statics if prefix_caches is None else prefix_caches,
+        remat=remat, unroll=unroll)
     x = jnp.concatenate(xs_final, axis=1) if len(xs_final) > 1 else xs_final[0]
     x = _final(params, x, cfg)
 
@@ -146,6 +164,10 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     out["moe_aux"] = aux
     if return_cache:
         out["caches"] = _build_caches(extras, cfg, B, S, cache_len or S, ctx)
+    if return_extras:
+        # raw per-position extras stacked over periods: kv_k/kv_v of the S new
+        # tokens + final recurrent states — the paged engine scatters these
+        out["extras"] = extras
     return out
 
 

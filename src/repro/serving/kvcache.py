@@ -1,0 +1,222 @@
+"""Paged KV-cache: fixed-size token pages, free-list allocator, block tables.
+
+Replaces the engine's dense per-slot ``(P, B, max_len, H, hd)`` caches with a
+shared pool of pages, vLLM-style: KV memory scales with the tokens actually
+resident instead of ``max_batch * max_len``.  Two halves:
+
+  * ``PageAllocator`` — pure-Python bookkeeping (free list, per-request block
+    tables, committed token counts).  No JAX; unit-testable in isolation.
+  * ``PagedKVCache`` — the device arrays, one (k, v) page pool per
+    attention-bearing position of ``cfg.block_pattern`` (leading ``periods``
+    dim, like the dense caches), plus ONE shared position pool (the token
+    layout is identical across layers).  Gather/scatter helpers are pure
+    functions over arrays so engine code can jit around them.
+
+Layout per attention position:  k_pages (Pd, N+1, page_size, Hkv, hd).
+Page index N is a reserved scratch page: batched-decode scatters from inactive
+slots are routed there, so the update stays a single dynamic scatter with no
+masking inside the kernel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.layers.heads import head_layout
+
+# block kinds that own a KV cache (mirrors models/decoder.init_caches)
+KV_KINDS = ("attn_mlp", "attn_moe", "hybrid", "dec_block")
+
+
+class OutOfPages(RuntimeError):
+    """Raised by PageAllocator when the pool cannot satisfy a request; the
+    scheduler turns this into preemption-by-eviction."""
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list page allocator with per-request block tables.
+
+    Invariants (asserted in tests):
+      * free + allocated == num_pages, always;
+      * a page belongs to at most one request (no aliasing / double-free);
+      * a request's capacity ``len(table) * page_size`` always covers its
+        committed token count.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._free_set = set(self._free)
+        self.tables: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+
+    # ---- queries ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def capacity(self, rid: int) -> int:
+        return len(self.tables.get(rid, ())) * self.page_size
+
+    def tokens(self, rid: int) -> int:
+        return self.lengths.get(rid, 0)
+
+    def can_fit(self, rid: int, n_tokens: int) -> bool:
+        need = pages_for(n_tokens, self.page_size) - len(self.tables.get(rid, ()))
+        return need <= len(self._free)
+
+    def utilization(self) -> float:
+        """Fraction of allocated page slots holding live tokens."""
+        used = self.used_pages * self.page_size
+        if not used:
+            return 1.0
+        return sum(self.lengths.values()) / used
+
+    def fragmentation(self) -> int:
+        """Allocated-but-empty token slots (tail waste of partial pages)."""
+        return self.used_pages * self.page_size - sum(self.lengths.values())
+
+    # ---- mutation ---------------------------------------------------------
+    def ensure(self, rid: int, n_tokens: int) -> None:
+        """Grow ``rid``'s block table so it can hold ``n_tokens`` total tokens.
+        Raises OutOfPages (allocating nothing) if the pool can't cover it."""
+        table = self.tables.setdefault(rid, [])
+        need = pages_for(n_tokens, self.page_size) - len(table)
+        if need <= 0:
+            return
+        if need > len(self._free):
+            if not self.tables[rid]:
+                del self.tables[rid]
+            raise OutOfPages(f"need {need} pages, {len(self._free)} free")
+        for _ in range(need):
+            pg = self._free.pop()
+            self._free_set.discard(pg)
+            table.append(pg)
+
+    def commit(self, rid: int, n_tokens: int) -> None:
+        """Record ``n_tokens`` more live tokens for ``rid`` (capacity must
+        already exist via ``ensure``)."""
+        new = self.lengths.get(rid, 0) + n_tokens
+        assert new <= self.capacity(rid), (rid, new, self.capacity(rid))
+        self.lengths[rid] = new
+
+    def free(self, rid: int) -> List[int]:
+        """Release all of ``rid``'s pages back to the pool."""
+        table = self.tables.pop(rid, [])
+        self.lengths.pop(rid, None)
+        for pg in table:
+            assert pg not in self._free_set, f"double free of page {pg}"
+            self._free.append(pg)
+            self._free_set.add(pg)
+        return table
+
+    def block_table(self, rid: int, max_blocks: int) -> np.ndarray:
+        """Padded (-1) block table row of static width ``max_blocks``."""
+        table = self.tables.get(rid, [])
+        assert len(table) <= max_blocks, (rid, len(table), max_blocks)
+        row = np.full(max_blocks, -1, np.int32)
+        row[:len(table)] = table
+        return row
+
+    def stats(self) -> Dict[str, Any]:
+        return {"num_pages": self.num_pages, "page_size": self.page_size,
+                "free_pages": self.free_pages, "used_pages": self.used_pages,
+                "utilization": self.utilization(),
+                "fragmentation_tokens": self.fragmentation()}
+
+
+# ---------------------------------------------------------------------------
+# device arrays + pure gather/scatter
+# ---------------------------------------------------------------------------
+
+def token_page_coords(positions, block_table, page_size: int, scratch: int):
+    """Map absolute token positions -> (page_id, offset) through a block table.
+
+    positions: (T,) int32; block_table: (MB,) int32 (-1 pad).  Entries whose
+    block-table slot is unallocated map to the scratch page.
+    """
+    blk = positions // page_size
+    page = jnp.where(blk < block_table.shape[0],
+                     block_table[jnp.clip(blk, 0, block_table.shape[0] - 1)],
+                     -1)
+    page = jnp.where(page < 0, scratch, page)
+    return page, positions % page_size
+
+
+def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """pages (Pd, N, ps, ...), block_tables (B, MB) -> dense (Pd, B, MB*ps, ...).
+
+    Padded (-1) table entries gather page 0 but are masked by the caller via
+    ``gather_positions`` (their positions come back -1)."""
+    Pd, _, ps = pages.shape[:3]
+    B, MB = block_tables.shape
+    g = pages[:, jnp.maximum(block_tables, 0)]      # (Pd, B, MB, ps, ...)
+    return g.reshape((Pd, B, MB * ps) + pages.shape[3:])
+
+
+def gather_positions(pos_pages: jnp.ndarray, block_tables: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """pos_pages (N, ps), block_tables (B, MB) -> (B, MB*ps) int32, -1 invalid."""
+    B, MB = block_tables.shape
+    ps = pos_pages.shape[1]
+    g = pos_pages[jnp.maximum(block_tables, 0)]     # (B, MB, ps)
+    g = jnp.where((block_tables >= 0)[:, :, None], g, -1)
+    return g.reshape(B, MB * ps)
+
+
+class PagedKVCache:
+    """Owns the page pools.  All arrays live in a dict pytree so jitted engine
+    closures can take/return them wholesale."""
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
+                 tp: int = 1, dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.num_pages = num_pages            # usable pages (scratch excluded)
+        self.page_size = page_size
+        n = len(cfg.block_pattern)
+        periods = cfg.num_layers // n
+        layout = head_layout(cfg.num_heads, max(cfg.num_kv_heads, 1), tp)
+        hkv = layout.hkv_eff                  # single-device engine: global view
+        hd = cfg.resolved_head_dim
+        self.kv_positions = tuple(i for i, kind in enumerate(cfg.block_pattern)
+                                  if kind in KV_KINDS)
+        k_pages, v_pages = [], []
+        for i in self.kv_positions:
+            k_pages.append(jnp.zeros((periods, num_pages + 1, page_size, hkv,
+                                      hd), dtype))
+            v_pages.append(jnp.zeros((periods, num_pages + 1, page_size, hkv,
+                                      hd), dtype))
+        self.arrays: Dict[str, Any] = {
+            "k": tuple(k_pages), "v": tuple(v_pages),
+            "pos": jnp.full((num_pages + 1, page_size), -1, jnp.int32),
+        }
+
+    @property
+    def scratch_page(self) -> int:
+        return self.num_pages
+
+    def page_bytes(self) -> int:
+        """KV bytes per page across all layers (k and v)."""
+        return sum(2 * k[:, 0].size * k.dtype.itemsize for k in self.arrays["k"])
+
+    def kv_bytes(self, allocator: PageAllocator) -> int:
+        """Live KV footprint: bytes of pages actually allocated to requests."""
+        return allocator.used_pages * self.page_bytes()
+
+    def total_bytes(self) -> int:
+        leaves = jax.tree_util.tree_leaves(self.arrays)
+        return sum(l.size * l.dtype.itemsize for l in leaves)

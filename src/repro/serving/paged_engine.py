@@ -1,0 +1,450 @@
+"""Paged continuous-batching engine: chunked prefill interleaved with decode.
+
+The dense ``Engine`` (serving/engine.py) admits one request at a time with a
+blocking full-prompt prefill into per-slot ``max_len`` caches.  This engine
+replaces both halves:
+
+  * KV memory is a shared page pool (serving/kvcache.py) — footprint scales
+    with resident tokens, and admission never over-reserves;
+  * each ``step()`` runs a token-budget slice of pending *prefill chunks*
+    (the ISO chunk boundaries from ``core/chunking.split_chunks`` are the
+    scheduling quanta) and then ONE batched decode step for every request
+    whose prompt is fully resident — Sarathi-style chunk/decode mixing across
+    requests, ISO overlap order inside each prefill call.
+
+A request whose prompt is partially prefilled keeps its KV prefix in pages and
+its recurrent (SSM/xLSTM) states in per-slot arrays across engine steps; the
+next grant resumes with ``prefill(prefix_caches=..., pos_offset=start)``.
+When the pool runs dry the scheduler evicts a victim (recompute preemption:
+its pages are freed and prompt+generated re-enter the waiting queue).
+
+Single-device engine (mesh=None path of the dense engine); the shard_map
+boundary for paged serving is future work — see docs/serving.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Config, ServingConfig
+from repro.core.overlap import AxisCtx
+from repro.models import api
+from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
+                                   gather_pages, gather_positions, pages_for,
+                                   token_page_coords)
+from repro.serving.requests import Request, RequestState
+from repro.serving.sampler import sample
+from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
+
+
+class PagedEngine:
+    def __init__(self, config: Config, params, *, serving: ServingConfig = None,
+                 mesh=None):
+        assert mesh is None, "paged engine is single-device for now"
+        assert config.model.family != "audio", \
+            "enc-dec (whisper) serving stays on the dense Engine"
+        self.config = config
+        self.cfg = config.model
+        self.params = params
+        sv = serving or config.serving
+        self.sv = sv
+        self.ps = sv.page_size
+        self.max_batch = sv.max_batch
+        self.max_len = sv.max_len
+        self.max_blocks = -(-sv.max_len // sv.page_size)
+        num_pages = sv.num_pages or sv.max_batch * self.max_blocks
+        cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
+
+        self.alloc = PageAllocator(num_pages, self.ps)
+        self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=1,
+                               dtype=cache_dtype)
+        self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=1,
+                                            dtype=cache_dtype)
+        self.scheduler = TokenBudgetScheduler(
+            policy=sv.scheduler_policy,
+            prefill_token_budget=sv.prefill_token_budget)
+
+        self.slots: List[Optional[RequestState]] = [None] * sv.max_batch
+        self.lengths = np.zeros(sv.max_batch, np.int64)   # tokens resident
+        self.last_tokens = np.zeros(sv.max_batch, np.int64)
+        self._by_rid: Dict[int, RequestState] = {}        # waiting + running
+        self._finished: List[RequestState] = []
+        self._prefill_fns: Dict[Tuple, Any] = {}
+        self._decode_fn = None
+        self._ctx = AxisCtx()
+        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
+                        "decode_tokens": 0, "completed": 0, "decode_calls": 0,
+                        "prefill_calls": 0, "steps": 0, "preemptions": 0,
+                        "ttft_sum": 0.0, "ttft_n": 0}
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+    def _eff_extra(self, req: Request) -> int:
+        return req.patches.shape[0] if req.patches is not None else 0
+
+    def add_request(self, req: Request) -> int:
+        assert req.frames is None, "audio requests need the dense Engine"
+        eff = len(req.prompt) + self._eff_extra(req)
+        if eff + req.sampling.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.rid}: {eff} prompt + "
+                             f"{req.sampling.max_new_tokens} new tokens exceeds "
+                             f"max_len={self.max_len}")
+        need = pages_for(eff + req.sampling.max_new_tokens, self.ps)
+        if need > self.alloc.num_pages:
+            raise ValueError(f"request {req.rid}: needs {need} pages even with "
+                             f"every other request evicted; pool has "
+                             f"{self.alloc.num_pages} (raise "
+                             f"ServingConfig.num_pages)")
+        st = RequestState(request=req, slot=-1, t_submit=time.perf_counter())
+        st.prompt_len = eff
+        st.chunk_plan = plan_chunks(eff, self.config.iso, self.cfg,
+                                    whole=req.patches is not None)
+        self._by_rid[req.rid] = st
+        self.scheduler.add(req.rid, priority=req.priority)
+        return req.rid
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.scheduler.waiting:
+            rid = self.scheduler.pop_waiting()
+            st = self._by_rid[rid]
+            st.slot = free.pop(0)
+            st.prefilled = 0
+            self.slots[st.slot] = st
+            self.lengths[st.slot] = 0
+
+    def _release_pages(self, rid: int) -> None:
+        """Free rid's pages and invalidate their position entries: attention
+        validity is derived from ``pos >= 0``, so a reused page that is only
+        partially overwritten must not expose the dead request's tail KV."""
+        pages = self.alloc.free(rid)
+        if pages:
+            new_kv = dict(self.kv.arrays)
+            new_kv["pos"] = new_kv["pos"].at[
+                jnp.asarray(pages, jnp.int32)].set(-1)
+            self.kv.arrays = new_kv
+
+    def _preempt_one(self, protect: List[int]) -> bool:
+        """Evict one running request (recompute mode).  False if none left."""
+        running = [s.request.rid for s in self.slots if s is not None]
+        victim = self.scheduler.pick_victim(running, protect=protect)
+        if victim is None:
+            return False
+        st = self._by_rid[victim]
+        self._release_pages(victim)
+        self.slots[st.slot] = None
+        self.lengths[st.slot] = 0
+        st.slot = -1
+        # recompute mode: everything generated so far becomes prompt; the
+        # re-prefill's last-position logits yield the next token exactly where
+        # decode left off
+        st.prefilled = 0
+        eff = st.prompt_len + len(st.generated)
+        st.chunk_plan = plan_chunks(eff, self.config.iso, self.cfg,
+                                    whole=st.request.patches is not None)
+        self.scheduler.requeue_front(victim)
+        self.metrics["preemptions"] += 1
+        return True
+
+    def _ensure_pages(self, rid: int, n_tokens: int) -> bool:
+        """Grow rid's block table to n_tokens capacity, evicting if needed."""
+        while True:
+            try:
+                self.alloc.ensure(rid, n_tokens)
+                return True
+            except OutOfPages:
+                if not self._preempt_one(protect=[rid]):
+                    return False
+
+    def _resident_tokens(self, st: RequestState) -> np.ndarray:
+        """Token ids the request's prompt re-prefill covers (recompute mode
+        folds generated tokens in)."""
+        toks = np.asarray(st.request.prompt, np.int32)
+        if st.generated:
+            toks = np.concatenate([toks, np.asarray(st.generated, np.int32)])
+        return toks
+
+    # ------------------------------------------------------------------
+    # jitted closures
+    # ------------------------------------------------------------------
+    def _prefix_from_pages(self, kv_arrays, states_slot, bt_row):
+        """Per-position prefix caches for a resumed prefill (batch 1)."""
+        pos_dense = gather_positions(kv_arrays["pos"], bt_row)      # (1, L)
+        prefix, kv_i = [], 0
+        for i, kind in enumerate(self.cfg.block_pattern):
+            c = dict(states_slot[i])
+            if i in self.kv.kv_positions:
+                k = gather_pages(kv_arrays["k"][kv_i], bt_row)
+                c["k"], c["v"] = k, gather_pages(kv_arrays["v"][kv_i], bt_row)
+                c["pos"] = jnp.broadcast_to(pos_dense[None],
+                                            (k.shape[0],) + pos_dense.shape)
+                kv_i += 1
+            prefix.append(c)
+        return tuple(prefix)
+
+    def _get_prefill(self, n_text: int, n_patches: int, resumed: bool):
+        key = (n_text, n_patches, resumed)
+        if key in self._prefill_fns:
+            return self._prefill_fns[key]
+        cfg, iso, ctx = self.cfg, self.config.iso, self._ctx
+        T = n_text + n_patches
+        scratch = self.kv.scratch_page
+
+        def fn(params, tokens, patches, kv_arrays, states_slot, bt_row, start):
+            batch = {"tokens": tokens}
+            if n_patches:
+                batch["patches"] = patches
+            prefix = self._prefix_from_pages(kv_arrays, states_slot, bt_row) \
+                if resumed else None
+            out = api.prefill(params, cfg, ctx, iso, batch, logits_mode="last",
+                              prefix_caches=prefix, pos_offset=start,
+                              return_extras=True)
+            positions = start + jnp.arange(T, dtype=jnp.int32)
+            page, off = token_page_coords(positions, bt_row[0], self.ps, scratch)
+            new_kv = dict(kv_arrays)
+            ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
+            new_states = []
+            for i, kind in enumerate(cfg.block_pattern):
+                ex = out["extras"][i]
+                if i in self.kv.kv_positions:
+                    kv_i = self.kv.kv_positions.index(i)
+                    ks[kv_i] = ks[kv_i].at[:, page, off].set(
+                        ex["kv_k"][:, 0].astype(ks[kv_i].dtype))
+                    vs[kv_i] = vs[kv_i].at[:, page, off].set(
+                        ex["kv_v"][:, 0].astype(vs[kv_i].dtype))
+                new_states.append({sk: ex[sk] for sk in ("ssm", "mlstm", "slstm")
+                                   if sk in ex})
+            new_kv["k"], new_kv["v"] = tuple(ks), tuple(vs)
+            new_kv["pos"] = kv_arrays["pos"].at[page, off].set(positions)
+            return out["logits_local"][:, -1], new_kv, tuple(new_states)
+
+        self._prefill_fns[key] = jax.jit(fn)
+        return self._prefill_fns[key]
+
+    def _get_decode(self):
+        if self._decode_fn is not None:
+            return self._decode_fn
+        cfg, ctx = self.cfg, self._ctx
+        scratch = self.kv.scratch_page
+        MB, ps = self.max_blocks, self.ps
+
+        def fn(params, toks, bt, lengths, kv_arrays, states, active):
+            pos_dense = gather_positions(kv_arrays["pos"], bt)     # (B, MB*ps)
+            caches, kv_i = [], 0
+            for i, kind in enumerate(cfg.block_pattern):
+                c = dict(states[i])
+                if i in self.kv.kv_positions:
+                    k = gather_pages(kv_arrays["k"][kv_i], bt)
+                    c["k"], c["v"] = k, gather_pages(kv_arrays["v"][kv_i], bt)
+                    c["pos"] = jnp.broadcast_to(pos_dense[None],
+                                                (k.shape[0],) + pos_dense.shape)
+                    kv_i += 1
+                caches.append(c)
+            logits, new_caches = api.decode_step(params, cfg, ctx, toks,
+                                                 tuple(caches), lengths)
+            B = toks.shape[0]
+            blk = jnp.clip(lengths // ps, 0, MB - 1)
+            page = bt[jnp.arange(B), blk]
+            page = jnp.where(active & (page >= 0), page, scratch)
+            off = lengths % ps
+            ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
+            new_states = []
+            for i, kind in enumerate(cfg.block_pattern):
+                nc = new_caches[i]
+                if i in self.kv.kv_positions:
+                    kv_i = self.kv.kv_positions.index(i)
+                    idx = lengths.reshape(1, B, 1, 1, 1)
+                    nk = jnp.take_along_axis(nc["k"], idx, axis=2)[:, :, 0]
+                    nv = jnp.take_along_axis(nc["v"], idx, axis=2)[:, :, 0]
+                    ks[kv_i] = ks[kv_i].at[:, page, off].set(
+                        nk.astype(ks[kv_i].dtype))
+                    vs[kv_i] = vs[kv_i].at[:, page, off].set(
+                        nv.astype(vs[kv_i].dtype))
+                # recurrent states advance only for slots that really decoded
+                sel = {}
+                for sk in ("ssm", "mlstm", "slstm"):
+                    if sk in states[i]:
+                        sel[sk] = jax.tree_util.tree_map(
+                            lambda new, old: jnp.where(
+                                active.reshape((1, B) + (1,) * (new.ndim - 2)),
+                                new, old), nc[sk], states[i][sk])
+                new_states.append(sel)
+            new_kv = dict(kv_arrays)
+            new_kv["k"], new_kv["v"] = tuple(ks), tuple(vs)
+            new_kv["pos"] = kv_arrays["pos"].at[page, off].set(
+                jnp.where(active, lengths.astype(jnp.int32), -1))
+            return logits, new_kv, tuple(new_states)
+
+        self._decode_fn = jax.jit(fn)
+        return self._decode_fn
+
+    # ------------------------------------------------------------------
+    # step phases
+    # ------------------------------------------------------------------
+    def _run_grant(self, st: RequestState, start: int, n_tokens: int,
+                   last: bool) -> Optional[int]:
+        """Execute one prefill grant; returns the sampled token if ``last``."""
+        req = st.request
+        slot = st.slot
+        n_patches = self._eff_extra(req) if start == 0 else 0
+        toks_all = self._resident_tokens(st)
+        # text tokens covered by this grant (patches occupy the first
+        # ``eff_extra`` effective positions of the first grant)
+        t0 = max(0, start - self._eff_extra(req)) if req.patches is not None \
+            else start
+        n_text = n_tokens - n_patches
+        text = toks_all[t0:t0 + n_text]
+        tokens = jnp.asarray(text[None].astype(np.int32))
+        patches = jnp.asarray(req.patches[None]) if n_patches else None
+
+        bt_row = jnp.asarray(self.alloc.block_table(req.rid,
+                                                    self.max_blocks)[None])
+        states_slot = jax.tree_util.tree_map(
+            lambda a: a[:, slot:slot + 1], self.states)
+        fn = self._get_prefill(n_text, n_patches, resumed=start > 0)
+        t0_wall = time.perf_counter()
+        logits_last, new_kv, new_states = fn(
+            self.params, tokens, patches, self.kv.arrays, states_slot, bt_row,
+            jnp.int32(start))
+        jax.block_until_ready(logits_last)
+        self.metrics["prefill_s"] += time.perf_counter() - t0_wall
+        self.metrics["prefill_tokens"] += n_tokens
+        self.metrics["prefill_calls"] += 1
+
+        self.kv.arrays = new_kv
+        self.states = jax.tree_util.tree_map(
+            lambda big, new: big.at[:, slot:slot + 1].set(new.astype(big.dtype)),
+            self.states, new_states)
+        self.alloc.commit(req.rid, n_tokens)
+        st.prefilled = start + n_tokens
+        self.lengths[slot] = st.prefilled
+        if not last:
+            return None
+        logits = np.asarray(jax.device_get(logits_last))[0]
+        tok = sample(logits[:self.cfg.vocab_size], req.sampling,
+                     step=len(st.generated))
+        if st.t_first < 0:
+            st.t_first = time.perf_counter()
+            self.metrics["ttft_sum"] += st.t_first - st.t_submit
+            self.metrics["ttft_n"] += 1
+        st.generated.append(tok)
+        self.last_tokens[slot] = tok
+        st.finish_check()
+        return tok
+
+    def _finish(self, st: RequestState) -> None:
+        self.metrics["completed"] += 1
+        self.metrics["decode_tokens"] += len(st.generated)
+        self._release_pages(st.request.rid)
+        self.scheduler.forget(st.request.rid)
+        self._finished.append(st)
+        self._by_rid.pop(st.request.rid, None)
+        self.slots[st.slot] = None
+        self.lengths[st.slot] = 0
+        st.slot = -1
+
+    def _prefill_phase(self, events: List[Tuple[int, int]]) -> None:
+        # prefill target = sum(chunk_plan): the prompt at admission, or
+        # prompt+generated after a recompute preemption
+        pending = [(s.request.rid, s.prefilled, s.chunk_plan)
+                   for s in self.slots
+                   if s is not None and s.prefilled < sum(s.chunk_plan)]
+        for g in self.scheduler.grant_prefill(pending):
+            st = self._by_rid.get(g.rid)
+            if st is None or st.slot < 0:
+                continue                      # preempted by an earlier grant
+            if not self._ensure_pages(g.rid, g.start + g.n_tokens):
+                # unreachable once add_request validated pool capacity; a
+                # silent skip here would spin run_until_complete forever
+                raise RuntimeError(
+                    f"page pool too small for request {g.rid}'s prefill chunk "
+                    f"even after evicting; increase ServingConfig.num_pages")
+            tok = self._run_grant(st, g.start, g.n_tokens, g.last)
+            if tok is not None:
+                events.append((g.rid, tok))
+                if st.done:
+                    self._finish(st)
+
+    def _decode_phase(self, events: List[Tuple[int, int]]) -> None:
+        active = [s for s in self.slots
+                  if s is not None and not s.done and s.generated
+                  and s.prefilled >= sum(s.chunk_plan)]
+        # grow every decoder's capacity by one token (may evict; an evicted
+        # request drops out of `active`)
+        for st in list(active):
+            if st.slot < 0:
+                active.remove(st)
+                continue
+            if not self._ensure_pages(st.request.rid,
+                                      int(self.lengths[st.slot]) + 1):
+                raise RuntimeError("page pool too small for a single decode "
+                                   "step; increase ServingConfig.num_pages")
+        active = [s for s in active if s.slot >= 0]
+        if not active:
+            return
+        B = self.max_batch
+        mask = np.zeros(B, bool)
+        for st in active:
+            mask[st.slot] = True
+        bt = np.stack([self.alloc.block_table(s.request.rid, self.max_blocks)
+                       if s is not None and mask[i] else
+                       np.full(self.max_blocks, -1, np.int32)
+                       for i, s in enumerate(self.slots)])
+        toks = jnp.asarray(self.last_tokens[:, None].astype(np.int32))
+        lens = jnp.asarray(self.lengths.astype(np.int32))
+        t0 = time.perf_counter()
+        logits, new_kv, new_states = self._get_decode()(
+            self.params, toks, jnp.asarray(bt), lens, self.kv.arrays,
+            self.states, jnp.asarray(mask))
+        logits = np.asarray(jax.device_get(logits))
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_calls"] += 1
+        self.kv.arrays = new_kv
+        self.states = new_states
+
+        for st in active:
+            i = st.slot
+            self.alloc.commit(st.request.rid, 1)
+            tok = sample(logits[i, 0][:self.cfg.vocab_size],
+                         st.request.sampling, len(st.generated))
+            st.generated.append(tok)
+            self.lengths[i] += 1
+            self.last_tokens[i] = tok
+            events.append((st.request.rid, tok))
+            st.finish_check()
+            if st.done:
+                self._finish(st)
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One engine iteration: admission -> budgeted prefill chunks ->
+        batched decode.  Returns (rid, token) events."""
+        events: List[Tuple[int, int]] = []
+        self.metrics["steps"] += 1
+        self._admit()
+        self._prefill_phase(events)
+        self._decode_phase(events)
+        return events
+
+    def run_until_complete(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self.step()
+            if not self.scheduler.waiting and \
+                    all(s is None for s in self.slots):
+                break
+        for st in self._finished:
+            out[st.request.rid] = st.generated
+        return out
+
+    # ------------------------------------------------------------------
+    def page_stats(self) -> Dict[str, Any]:
+        s = self.alloc.stats()
+        s["kv_bytes_live"] = self.kv.kv_bytes(self.alloc)
+        s["kv_bytes_reserved"] = self.kv.total_bytes()
+        return s

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -24,6 +24,7 @@ class Request:
     prompt: np.ndarray                # (S,) int32
     sampling: SamplingParams = field(default_factory=SamplingParams)
     rid: int = field(default_factory=lambda: next(_ids))
+    priority: int = 0                 # paged engine "priority" policy: higher first
     # family extras (stub frontends)
     frames: Optional[np.ndarray] = None
     patches: Optional[np.ndarray] = None
@@ -36,6 +37,11 @@ class RequestState:
     generated: List[int] = field(default_factory=list)
     prompt_len: int = 0
     done: bool = False
+    # --- paged engine (chunked prefill) bookkeeping ---
+    prefilled: int = 0                # prompt tokens already resident in pages
+    chunk_plan: Tuple[int, ...] = ()  # ISO chunk boundaries = scheduling quanta
+    t_submit: float = 0.0
+    t_first: float = -1.0             # wall time of the first sampled token
 
     @property
     def total_len(self) -> int:

@@ -1,0 +1,137 @@
+"""Token-budget continuous-batching scheduler (Sarathi-style chunked prefill).
+
+Prompts are split at admission with ``core/chunking.split_chunks`` — the ISO
+chunk is the scheduling quantum.  Each engine iteration the scheduler hands
+the engine a plan: which requests prefill how many tokens this step (bounded
+by ``prefill_token_budget``), which decode.  Consecutive chunks of one request
+granted in the same step run as ONE forward call, so the model's ISO schedule
+overlaps their collectives exactly as in a monolithic prefill.
+
+Policies: ``fcfs`` (arrival order) and ``priority`` (higher ``Request.priority``
+first, arrival order within a class).  Preemption-by-eviction: when the page
+pool is exhausted the victim is the lowest-priority most-recently-arrived
+running request; its pages are freed and it re-enters the waiting queue in
+recompute mode (prompt := original prompt + tokens generated so far).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.config import ISOConfig, ModelConfig
+from repro.core.chunking import split_chunks
+
+
+@dataclass
+class PrefillGrant:
+    """One step's prefill work for one request."""
+    rid: int
+    start: int                 # tokens already prefilled (absolute offset)
+    n_tokens: int              # tokens granted this step
+    last: bool                 # True if this grant finishes the prompt
+
+
+def plan_chunks(prompt_len: int, iso: ISOConfig, cfg: ModelConfig,
+                whole: bool = False) -> Tuple[int, ...]:
+    """ISO chunk boundaries for a prompt — the scheduling quanta.  ``whole``
+    forces a single chunk (multimodal prompts, where splitting would cut
+    through prepended patch/frame embeddings)."""
+    if whole:
+        return (prompt_len,)
+    return split_chunks(prompt_len, iso, cfg)
+
+
+class TokenBudgetScheduler:
+    """Pure bookkeeping — no JAX.  The engine owns slots/arrays; the scheduler
+    owns ordering, budget accounting and victim selection, so its properties
+    are testable without a model."""
+
+    def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512):
+        if policy not in ("fcfs", "priority"):
+            raise ValueError(f"unknown scheduler policy {policy!r}")
+        self.policy = policy
+        self.budget = max(1, prefill_token_budget)
+        self._arrival: Dict[int, int] = {}
+        self._priority: Dict[int, int] = {}
+        self._clock = 0
+        self.waiting: List[int] = []          # rids, un-ordered; sorted on use
+
+    # ---- queue ------------------------------------------------------------
+    def add(self, rid: int, priority: int = 0) -> None:
+        if rid not in self._arrival:          # preserve arrival on re-queue
+            self._arrival[rid] = self._clock
+            self._clock += 1
+        self._priority[rid] = priority
+        self.waiting.append(rid)
+
+    def forget(self, rid: int) -> None:
+        self._arrival.pop(rid, None)
+        self._priority.pop(rid, None)
+
+    def _key(self, rid: int):
+        if self.policy == "priority":
+            return (-self._priority.get(rid, 0), self._arrival[rid])
+        return (self._arrival[rid],)
+
+    def order(self, rids: Sequence[int]) -> List[int]:
+        return sorted(rids, key=self._key)
+
+    def pop_waiting(self) -> Optional[int]:
+        if not self.waiting:
+            return None
+        rid = min(self.waiting, key=self._key)
+        self.waiting.remove(rid)
+        return rid
+
+    def requeue_front(self, rid: int) -> None:
+        """Preempted request: back to waiting, arrival preserved (so FCFS puts
+        it ahead of anything that arrived later)."""
+        self.waiting.append(rid)
+
+    # ---- per-step planning -------------------------------------------------
+    def grant_prefill(self, prefill_states: Sequence[Tuple[int, int, Tuple[int, ...]]]
+                      ) -> List[PrefillGrant]:
+        """Distribute this step's token budget over running prefills.
+
+        ``prefill_states``: (rid, tokens_done, chunk_plan) for every running
+        request with prompt tokens remaining, any order.  Grants whole chunks
+        in policy order; the head-of-line request always gets at least its next
+        chunk even if the chunk alone exceeds the budget (guarantees progress —
+        a prompt whose chunk is bigger than the budget would otherwise starve).
+        """
+        by_rid = {rid: (done, plan) for rid, done, plan in prefill_states}
+        grants: List[PrefillGrant] = []
+        remaining = self.budget
+        for rid in self.order(list(by_rid)):
+            done, plan = by_rid[rid]
+            ends, acc = [], 0
+            for c in plan:
+                acc += c
+                ends.append(acc)
+            assert done < ends[-1], (rid, done, plan)
+            take, prev = 0, done
+            for e in ends:
+                if e <= done:
+                    continue
+                chunk = e - prev
+                head_of_line = not grants and take == 0
+                if take + chunk > remaining and not head_of_line:
+                    break
+                take += chunk
+                prev = e
+            if take == 0:
+                continue                      # budget exhausted for non-head
+            remaining = max(0, remaining - take)
+            grants.append(PrefillGrant(rid=rid, start=done, n_tokens=take,
+                                       last=done + take >= ends[-1]))
+            if remaining == 0:
+                break
+        return grants
+
+    def pick_victim(self, running: Sequence[int], protect: Sequence[int] = ()
+                    ) -> Optional[int]:
+        """Eviction victim: reverse policy order (lowest priority, youngest)."""
+        cands = [r for r in running if r not in set(protect)]
+        if not cands:
+            return None
+        return max(cands, key=self._key)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import Config, ISOConfig
 from repro.core.overlap import AxisCtx
 from repro.models import api
@@ -148,7 +149,7 @@ def make_train_step(config: Config, mesh, params_shape):
                 grad_clip=rt.grad_clip, global_norm_sq=nsq)
             return new_params, new_opt, loss, jnp.sqrt(nsq)
 
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(p_specs, opt_specs, b_specs, P()),
         out_specs=(p_specs, opt_specs, P(), P()),
@@ -178,7 +179,7 @@ def init_train_state(config: Config, mesh, key, dtype=jnp.bfloat16):
             lambda s: NamedSharding(mesh, s), o_specs, is_leaf=_IS_SPEC)
         with mesh:
             params = jax.jit(init_params_only, out_shardings=p_shardings)()
-            opt_init = jax.shard_map(
+            opt_init = compat.shard_map(
                 lambda pr: zero1_init_local(pr, dp), mesh=mesh,
                 in_specs=(p_specs,), out_specs=o_specs, check_vma=False)
             opt = jax.jit(opt_init, out_shardings=o_shardings)(params)

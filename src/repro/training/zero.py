@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 class Zero1State(NamedTuple):
     step: jnp.ndarray
@@ -143,5 +145,5 @@ def zero1_update_local(params_local, grads_local, state: Zero1State,
 def _my_offset(dp_axes: Tuple[str, ...], slice_len: int):
     idx = 0
     for ax in dp_axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + jax.lax.axis_index(ax)
     return idx * slice_len
