@@ -43,19 +43,25 @@ def _run(cfg, iso, n_req=3, plen=96, new=8):
 
 
 def _run_paged(cfg, iso, params, *, lengths, new=8, budget=48, page_size=16,
-               max_len=0):
+               max_len=0, shared_prefix=0, prefix_sharing=True):
     max_len = max_len or (max(lengths) + new + 8)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
                     iso=iso,
                     serving=ServingConfig(page_size=page_size, max_batch=2,
                                           max_len=max_len,
-                                          prefill_token_budget=budget))
+                                          prefill_token_budget=budget,
+                                          prefix_sharing=prefix_sharing))
     eng = PagedEngine(config, params)
     rng = np.random.default_rng(0)
+    system = rng.integers(2, cfg.vocab_size, shared_prefix).astype(np.int32) \
+        if shared_prefix else None
     rids, peak_pages = [], 0
     for n in lengths:
+        prompt = rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+        if system is not None:
+            prompt = np.concatenate([system, prompt[:max(n - len(system), 1)]])
         rids.append(eng.add_request(Request(
-            prompt=rng.integers(2, cfg.vocab_size, n).astype(np.int32),
+            prompt=prompt,
             sampling=SamplingParams(max_new_tokens=new, eos_id=-1))))
     t0 = time.perf_counter()
     while eng.scheduler.waiting or any(s is not None for s in eng.slots) or \
@@ -120,3 +126,20 @@ def run(emit):
          f"prefill_calls={m['prefill_calls']};steps={m['steps']};"
          f"tokens_equal={equal}")
     assert equal, "paged engine changed generated tokens!"
+
+    # ---- CoW prefix sharing: shared-system-prompt workload ----------------
+    sh_lengths = (96, 96, 96)
+    outs_on, wall_on, eng_on, peak_on = _run_paged(
+        cfg, iso2, params, lengths=sh_lengths, new=new, max_len=max_len,
+        shared_prefix=64, prefix_sharing=True)
+    outs_off, wall_off, eng_off, peak_off = _run_paged(
+        cfg, iso2, params, lengths=sh_lengths, new=new, max_len=max_len,
+        shared_prefix=64, prefix_sharing=False)
+    assert outs_on == outs_off, "prefix sharing changed generated tokens!"
+    m_on = eng_on.metrics
+    emit("engine/prefix_shared", wall_on * 1e6,
+         f"kv_bytes_peak={peak_on * eng_on.kv.page_bytes()};"
+         f"pages_peak={peak_on};pages_peak_unshared={peak_off};"
+         f"shared_tokens={m_on['prefix_shared_tokens']};"
+         f"cow_copies={m_on['cow_copies']};tokens_equal=True")
+    assert peak_on < peak_off, "sharing saved no pages on a shared workload"

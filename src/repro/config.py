@@ -181,6 +181,13 @@ class ServingConfig:
     scheduler_policy: str = "fcfs"   # fcfs | priority
     max_batch: int = 8               # decode batch width (slot count)
     max_len: int = 512               # per-request token capacity
+    # TP decode: batch-split ISO schedule — each half's all-reduce hides
+    # behind the other half's attention (core/iso.run_stack_decode_overlap)
+    decode_overlap: bool = True
+    # copy-on-write prefix sharing: requests with a common prompt prefix map
+    # the same KV pages (refcounted); attention-only stacks, off for
+    # recurrent families (their per-slot state cannot be shared)
+    prefix_sharing: bool = True
 
 
 @dataclass(frozen=True)

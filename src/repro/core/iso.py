@@ -212,7 +212,12 @@ def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
                 if reduces:
                     out = psum_now(out, ctx)
                 x = x + out
-                if "kv" in extras and new_cache is not None and "k" in new_cache:
+                if "kv" in extras and new_cache is not None \
+                        and "k_pages" in new_cache:
+                    _scatter_token_to_pages(new_cache, extras["kv"],
+                                            sctx.lengths, sctx.block_tables,
+                                            sctx.decode_mask)
+                elif "kv" in extras and new_cache is not None and "k" in new_cache:
                     # insert the K new tokens (K=1 decode / K>1 speculative
                     # verify; multi-token inserts must not straddle the ring
                     # boundary — the engine aligns slots)
@@ -238,3 +243,160 @@ def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
     x, new_caches = jax.lax.scan(period_body, x, (params_periods, caches),
                                  unroll=unroll or 1)
     return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# batch-split ISO decode (paged TP serving)
+# ---------------------------------------------------------------------------
+
+_BATCHED_STATE_KEYS = ("ssm", "mlstm", "slstm")
+
+
+def _scatter_token_to_pages(new_cache, kv_new, lengths, block_tables,
+                            decode_mask):
+    """Scatter one decode token's (k, v) straight into its block-table page.
+    Inactive slots (and rows with no capacity) route to the scratch page."""
+    k_new, v_new = kv_new                               # (B, 1, Hkv, hd)
+    kp = new_cache["k_pages"]                           # (N+1, ps, Hkv, hd)
+    B = k_new.shape[0]
+    ps_pg = kp.shape[1]
+    scratch = kp.shape[0] - 1
+    blk = jnp.clip(lengths // ps_pg, 0, block_tables.shape[1] - 1)
+    page = block_tables[jnp.arange(B), blk]
+    ok = page >= 0
+    if decode_mask is not None:
+        ok &= decode_mask
+    page = jnp.where(ok, page, scratch)
+    off = lengths % ps_pg
+    new_cache["k_pages"] = kp.at[page, off].set(k_new[:, 0].astype(kp.dtype))
+    new_cache["v_pages"] = new_cache["v_pages"].at[page, off].set(
+        v_new[:, 0].astype(kp.dtype))
+
+
+def _slice_cache_half(cache, lo: int, hi: int):
+    """Batch-slice the recurrent leaves of a paged decode cache; the page
+    pools (no batch dim — shared across requests) pass through whole."""
+    if cache is None:
+        return None
+    out = {}
+    for k, v in cache.items():
+        if k in _BATCHED_STATE_KEYS:
+            out[k] = jax.tree_util.tree_map(lambda a: a[lo:hi], v)
+        else:
+            out[k] = v
+    return out
+
+
+def run_stack_decode_overlap(params_periods, pattern: Sequence[str], x, caches,
+                             sctx: StageCtx, ctx: AxisCtx,
+                             unroll: bool = False):
+    """Decode with the ISO schedule extended to the BATCH dimension.
+
+    Figure 1(d) splits a *sequence* into chunks so one chunk's TP all-reduce
+    hides behind the other's compute.  At decode there is no sequence to
+    split — but a continuous-batching step carries many independent requests,
+    so the batch splits instead: requests [0, B/2) and [B/2, B) are the two
+    "chunks".  They share no state (separate KV pages, separate recurrent
+    slots), so unlike prefill there is no sequential cross-chunk edge to
+    respect — each half's deferred ``psum_start`` completes during the other
+    half's compute, pinned by ``psum_wait``'s optimization barrier.
+
+    Paged caches only (``k_pages``/``v_pages`` + block tables via ``sctx``):
+    the pool is read shared by both halves and the per-half KV scatters are
+    threaded functionally half0 -> half1.  With ``ctx.tp_axis=None`` the
+    collectives degrade to identity and this is numerically the plain
+    ``run_stack_decode`` split in two.
+    """
+    from dataclasses import replace as _dc_replace
+
+    B = x.shape[0]
+    assert B >= 2, "batch-split decode needs at least 2 requests"
+    B2 = B // 2
+    bounds = ((0, B2), (B2, B))
+
+    def sctx_half(lo, hi):
+        return _dc_replace(
+            sctx, lengths=sctx.lengths[lo:hi],
+            block_tables=None if sctx.block_tables is None
+            else sctx.block_tables[lo:hi],
+            decode_mask=None if sctx.decode_mask is None
+            else sctx.decode_mask[lo:hi])
+
+    sctxs = [sctx_half(lo, hi) for lo, hi in bounds]
+
+    # the pending unit's half index is static Python state: the stage/half
+    # loops are unrolled, and at every period boundary the pending (if any)
+    # is ALWAYS half 1's trailing reduce — so it never needs to ride the
+    # scan carry (where it would become a traced, unusable list index)
+    ends_reduce = _kind_reduces_last(pattern[-1])
+
+    def period_body(carry, scanned):
+        xs, pend_partial, pend_base = carry
+        pend_h = 1
+        xs = list(xs)
+        p_layers, caches_in = scanned
+        caches_out = []
+        for i, kind in enumerate(pattern):
+            cache_i = caches_in[i]
+            new_cache = dict(cache_i) if cache_i is not None else None
+            assert new_cache is None or "k" not in new_cache, \
+                "overlap decode supports paged caches only (k_pages/v_pages)"
+            state_halves = [None, None]
+            for fn, reduces in BLOCK_STAGES[kind]:
+                for h in range(2):
+                    lo, hi = bounds[h]
+                    # per-half cache view: shared pools read the LATEST
+                    # functional version (half0's scatter visible to half1)
+                    ch = _slice_cache_half(new_cache, lo, hi)
+                    out, _, extras = fn(p_layers[i], xs[h], 0,
+                                        _init_seq_state(kind), sctxs[h], ch)
+                    # resolve the OTHER half's pending collective behind this
+                    # half's compute (unit order of Figure 1(d))
+                    if pend_partial is not None:
+                        pend = psum_start(pend_partial, ctx)
+                        reduced, (out,) = psum_wait(pend, (out,))
+                        xs[pend_h] = pend_base + reduced
+                        pend_partial = pend_base = None
+                    if "kv" in extras and new_cache is not None \
+                            and "k_pages" in new_cache:
+                        _scatter_token_to_pages(
+                            new_cache, extras["kv"], sctxs[h].lengths,
+                            sctxs[h].block_tables, sctxs[h].decode_mask)
+                    for sk in _BATCHED_STATE_KEYS:
+                        if sk in extras and new_cache is not None:
+                            state_halves[h] = state_halves[h] or {}
+                            state_halves[h][sk] = extras[sk]
+                    if reduces:
+                        pend_partial, pend_base, pend_h = out, xs[h], h
+                    else:
+                        xs[h] = xs[h] + out
+            # stitch per-half recurrent states back to full batch
+            if new_cache is not None and any(state_halves):
+                for sk in _BATCHED_STATE_KEYS:
+                    if sk in (state_halves[0] or {}):
+                        new_cache[sk] = jax.tree_util.tree_map(
+                            lambda a, b: jnp.concatenate([a, b], axis=0),
+                            state_halves[0][sk], state_halves[1][sk])
+            caches_out.append(new_cache)
+        assert (pend_partial is not None) == ends_reduce and \
+            (pend_partial is None or pend_h == 1), \
+            "period boundary must leave the pending on half 1 (or none)"
+        return (tuple(xs), pend_partial, pend_base), tuple(caches_out)
+
+    x_halves = (x[:B2], x[B2:])
+    if ends_reduce:
+        # steady-state carry: half1 owes a reduce at every period boundary;
+        # a zero pending makes the first period an exact no-op resolve
+        carry0 = (x_halves, jnp.zeros_like(x_halves[1]), x_halves[1])
+    else:
+        carry0 = (x_halves, None, None)
+    carry, new_caches = jax.lax.scan(period_body, carry0,
+                                     (params_periods, caches),
+                                     unroll=unroll or 1)
+    xs, pend_partial, pend_base = carry
+    xs = list(xs)
+    if pend_partial is not None:
+        pend = psum_start(pend_partial, ctx)
+        reduced, _ = psum_wait(pend)
+        xs[1] = pend_base + reduced
+    return jnp.concatenate(xs, axis=0), new_caches

@@ -1,0 +1,168 @@
+"""Paged flash-decode kernel (Pallas/TPU): attention over block tables.
+
+Single-token decode against the paged KV pool (serving/kvcache.py) WITHOUT
+gathering pages into a dense cache first — the kernel walks each request's
+block table page by page, carrying the online-softmax state (max, denom,
+accumulator) in VMEM scratch, masked by the request's resident length.
+
+Layout (mirrors PagedKVCache, minus the period dim which the caller scans):
+
+    q            (B, Hq, hd)        one decode token per request
+    k/v pages    (N, ps, Hkv, hd)   page pool, N includes the scratch page
+    block_tables (B, MB) int32      page ids, -1 pad (sanitised to 0 here)
+    lengths      (B,)    int32      tokens resident; the decode token sits at
+                                    position lengths[b] (NOT in the pool yet)
+
+Grid is (batch, kv_head, page) with the page dimension iterated sequentially
+(minor-most), exactly like the k-block dimension of kernels/flash_prefill.py.
+The block table and lengths ride in via ``PrefetchScalarGridSpec`` scalar
+prefetch, so the k/v BlockSpec index maps can resolve ``page -> pool slot``
+before the kernel body runs (the TPU DMA pattern for paged attention).  GQA is
+handled by blocking queries as (Hkv, group): every grid step attends one kv
+head's whole query group.
+
+The kernel returns the *partial* softmax state ``(out, m, l)`` over the paged
+keys only; the caller folds the decode token's own (k, v) in with one more
+online-softmax step (see layers/attention.attn_decode_paged_partial).  That
+split keeps the pool read-only inside the kernel — the new token's KV is
+scattered to its page afterwards by the model driver.
+
+``interpret=True`` (the default) runs the same kernel under the Pallas
+interpreter — the CPU-container fallback, mirroring flash_prefill.py.  On real
+TPU hardware ``ps`` and ``hd`` should be multiples of the (8, 128) register
+tile; the tiny test shapes rely on interpret mode's laxness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                   page_size: int, window: int, num_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    hd = q.shape[-1]
+    s = jnp.dot(q, k.T) * (hd ** -0.5)                  # (group, ps)
+
+    length = len_ref[b]                                 # tokens resident
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = k_pos < length                               # causal: q sits at L
+    if window:
+        mask &= k_pos > length - window
+    # explicit mask multiply (not just -inf fill): a fully-masked page keeps
+    # m at NEG_INF and exp(0)=1 would otherwise leak weight per masked key
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (group, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur) * mask
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_cur
+
+    @pl.when(j == num_pages - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...].astype(m_ref.dtype)
+        l_ref[0, 0] = l.astype(l_ref.dtype)
+
+
+def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                 window: int = 0, interpret: bool = True):
+    """Paged flash attention for one decode token per request.
+
+    q: (B, Hq, hd); k_pages/v_pages: (N, ps, Hkv, hd); block_tables: (B, MB)
+    int32 (-1 pad); lengths: (B,) int32 resident token counts.
+
+    Returns ``(out, m, l)`` fp32 partial softmax state over the paged keys:
+    out (B, Hq, hd) = acc / l, m (B, Hq, 1) running max, l (B, Hq, 1) running
+    denominator.  Rows with ``lengths == 0`` come back as (0, NEG_INF, 0) —
+    the caller's merge with the current token then gives it weight 1.
+    """
+    B, Hq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+
+    # pad table entries (-1) alias page 0; they are always masked because a
+    # request's pages cover positions [0, lengths) contiguously
+    bt = jnp.clip(block_tables, 0, N - 1).astype(jnp.int32)
+    qg = q.reshape(B, Hkv, group, hd)
+
+    kernel = functools.partial(_decode_kernel, page_size=ps, window=window,
+                               num_pages=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_tables, lengths
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, 1),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, 1),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),   # running max
+            pltpu.VMEM((group, 1), jnp.float32),   # running denom
+            pltpu.VMEM((group, hd), jnp.float32),  # running accumulator
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, group, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, lengths.astype(jnp.int32), qg, k_pages, v_pages)
+    return (out.reshape(B, Hq, hd), m.reshape(B, Hq, 1), l.reshape(B, Hq, 1))
+
+
+def merge_partial_softmax(out_p, m_p, l_p, s_new, v_new):
+    """Fold extra key/value pairs into a flash partial-softmax state.
+
+    out_p (B,Hq,hd), m_p/l_p (B,Hq,1): kernel output.  s_new (B,Hq,K) raw
+    (scaled) scores of K extra keys; v_new (B,Hq,K,hd) their values.  Returns
+    the final normalised attention output (B, Hq, hd) in fp32.
+    """
+    m_tot = jnp.maximum(m_p, jnp.max(s_new, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_p - m_tot)                        # (B,Hq,1)
+    w_new = jnp.exp(s_new - m_tot)                      # (B,Hq,K)
+    l_tot = l_p * alpha + jnp.sum(w_new, axis=-1, keepdims=True)
+    acc = out_p * (l_p * alpha) + jnp.einsum(
+        "bhk,bhkd->bhd", w_new, v_new.astype(jnp.float32))
+    return acc / jnp.maximum(l_tot, 1e-30)

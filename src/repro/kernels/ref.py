@@ -28,6 +28,35 @@ def flash_prefill_ref(q, k, v, *, q_start: int = 0, causal: bool = True,
     return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                     window: int = 0):
+    """Oracle for kernels/flash_decode.py: gather pages dense, full softmax.
+
+    q: (B,Hq,hd); k_pages/v_pages: (N,ps,Hkv,hd); block_tables: (B,MB) int32
+    (-1 pad); lengths: (B,).  Returns the PAGED-KEYS-ONLY attention output
+    (B,Hq,hd) fp32 — the kernel's ``acc/l`` before the current token is merged.
+    Rows with lengths == 0 return zeros.
+    """
+    B, Hq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    group = Hq // Hkv
+    idx = jnp.clip(block_tables, 0, N - 1)
+    kd = k_pages[idx].reshape(B, MB * ps, Hkv, hd)      # (B, L, Hkv, hd)
+    vd = v_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    kr = jnp.repeat(kd, group, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(vd, group, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kr) * (hd ** -0.5)
+    k_pos = jnp.arange(MB * ps, dtype=jnp.int32)[None, :]
+    mask = k_pos < lengths[:, None]
+    if window:
+        mask &= k_pos > (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhs,bshd->bhd", p, vr)
+
+
 def quantize_int8_ref(x):
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)

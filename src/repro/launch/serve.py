@@ -37,35 +37,56 @@ def main(argv=None) -> int:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-budget", type=int, default=64)
     ap.add_argument("--policy", default="fcfs", choices=["fcfs", "priority"])
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: the paged engine runs under "
+                         "shard_map over a (1, tp) mesh (needs tp devices; on "
+                         "CPU export XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=<tp>)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system prompt of N tokens to every "
+                         "request (exercises CoW prefix/page sharing)")
+    ap.add_argument("--no-prefix-sharing", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = reduce_cfg(get_model_config(args.arch), args.preset)
     if args.paged and cfg.family == "audio":
         ap.error("--paged does not support enc-dec (audio) archs yet")
+    if args.tp > 1 and not args.paged:
+        ap.error("--tp requires --paged (the dense Engine stays single-device)")
     iso = ISOConfig(enabled=not args.iso_off, num_chunks=args.chunks,
                     min_chunk_tokens=16, chunk_align=16)
-    max_len = args.prompt_len + args.max_new + 8
+    max_len = args.shared_prefix + args.prompt_len + args.max_new + 8
     serving = ServingConfig(page_size=args.page_size, max_batch=args.max_batch,
                             max_len=max_len,
                             prefill_token_budget=args.prefill_budget,
-                            scheduler_policy=args.policy)
-    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                            scheduler_policy=args.policy,
+                            prefix_sharing=not args.no_prefix_sharing)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
                     serving=serving)
     key = jax.random.PRNGKey(0)
-    params = api.init_params(key, cfg, tp=1)
+    params = api.init_params(key, cfg, tp=args.tp)
     if args.paged:
-        eng = PagedEngine(config, params)
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh(config.parallel)
+        eng = PagedEngine(config, params, mesh=mesh)
     else:
         eng = Engine(config, params, mesh=None, max_batch=args.max_batch,
                      max_len=max_len, bucket=32)
 
     rng = np.random.default_rng(0)
+    system = rng.integers(2, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len))
+        prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        if args.shared_prefix:
+            prompt = np.concatenate([system, prompt])
         req = Request(
-            prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
+            prompt=prompt,
             sampling=SamplingParams(max_new_tokens=args.max_new, eos_id=-1,
                                     temperature=args.temperature, seed=i))
         if cfg.family == "audio":
@@ -90,7 +111,10 @@ def main(argv=None) -> int:
         print(f"paged: steps={m['steps']} prefill_calls={m['prefill_calls']} "
               f"preemptions={m['preemptions']} ttft={ttft * 1e3:.1f}ms | "
               f"pages={s['num_pages']}x{s['page_size']} "
-              f"kv_reserved={s['kv_bytes_reserved']}B")
+              f"kv_reserved={s['kv_bytes_reserved']}B tp={args.tp}")
+        print(f"sharing: shared_tokens={m['prefix_shared_tokens']} "
+              f"cow_copies={m['cow_copies']} "
+              f"peak_pages={m['peak_used_pages']}")
     for rid in sorted(outs)[:3]:
         print(f"  rid {rid}: {outs[rid][:10]}{'...' if len(outs[rid]) > 10 else ''}")
     return 0

@@ -249,6 +249,38 @@ def attn_decode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
     return o_proj_partial(p, out), (k_new, v_new)
 
 
+def attn_decode_paged_partial(p: dict, x, cfg: ModelConfig, layout_group: int,
+                              *, k_pages, v_pages, block_tables, lengths,
+                              window: int = 0):
+    """One-token decode straight against the paged KV pool (no dense gather).
+
+    x: (B,1,D); k_pages/v_pages: (N, ps, Hkv_loc, hd) page pool (local shard);
+    block_tables: (B, MB) int32 (-1 pad); lengths: (B,) tokens resident.
+
+    The Pallas kernel (kernels/flash_decode.py) walks the block table with an
+    online softmax and returns the partial state over paged keys; the new
+    token's own (k, v) — not yet scattered to its page — is folded in with one
+    more online-softmax step.  Returns (partial_out, (k_new, v_new)); the page
+    scatter is the stack driver's job (core/iso.run_stack_decode).
+    """
+    from repro.kernels.flash_decode import flash_decode, merge_partial_softmax
+    B = x.shape[0]
+    assert x.shape[1] == 1, "paged decode is single-token (no speculative K)"
+    q_pos = lengths[:, None].astype(jnp.int32)
+    q, k_new, v_new = project_qkv(p, x, cfg, q_pos)
+    q1 = q[:, 0].astype(jnp.float32)                     # (B, Hq_loc, hd)
+    hd = q1.shape[-1]
+    out_p, m_p, l_p = flash_decode(q1, k_pages, v_pages, block_tables,
+                                   lengths, window=window)
+    # current token: q head h reads kv head h // group (same folding as the
+    # kernel's BlockSpec index map)
+    k_self = jnp.repeat(k_new[:, 0], layout_group, axis=1).astype(jnp.float32)
+    v_self = jnp.repeat(v_new[:, 0], layout_group, axis=1).astype(jnp.float32)
+    s_self = jnp.sum(q1 * k_self, axis=-1, keepdims=True) * (hd ** -0.5)
+    out = merge_partial_softmax(out_p, m_p, l_p, s_self, v_self[:, :, None])
+    return o_proj_partial(p, out[:, None]), (k_new, v_new)
+
+
 def attn_encode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
                         kv_full):
     """Bidirectional (encoder) attention: this chunk's queries attend to the

@@ -43,12 +43,16 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig,
 
 
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
-                unroll: bool = False):
+                unroll: bool = False, block_tables=None, decode_mask=None,
+                overlap_batch: bool = False):
     if cfg.family == "audio":
+        assert block_tables is None, "paged decode does not support enc-dec"
         return whisper_lib.whisper_decode_step(params, cfg, ctx, tokens, caches,
                                                lengths, unroll=unroll)
     return dec_lib.decode_step(params, cfg, ctx, tokens, caches, lengths,
-                               unroll=unroll)
+                               unroll=unroll, block_tables=block_tables,
+                               decode_mask=decode_mask,
+                               overlap_batch=overlap_batch)
 
 
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,

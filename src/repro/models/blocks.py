@@ -42,6 +42,10 @@ class StageCtx:
     # resumed chunked prefill (paged engine): absolute position of this call's
     # first token — static int or traced scalar; chunk starts stay call-relative
     pos_offset: Any = 0
+    # paged decode (flash-decode over block tables): (B, MB) int32 page ids per
+    # request, and the (B,) bool mask of slots really decoding this step
+    block_tables: Optional[jnp.ndarray] = None
+    decode_mask: Optional[jnp.ndarray] = None
 
 
 def _n1(p, x, cfg):
@@ -89,10 +93,17 @@ def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     cfg = sctx.cfg
     xn = _n1(p, x, cfg)
     if sctx.mode == "decode":
-        partial, kv_new = attn_lib.attn_decode_partial(
-            p["attn"], xn, cfg, sctx.group_eff,
-            cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
-            window=sctx.window, cache_pos=cache.get("pos"))
+        if "k_pages" in cache:
+            partial, kv_new = attn_lib.attn_decode_paged_partial(
+                p["attn"], xn, cfg, sctx.group_eff,
+                k_pages=cache["k_pages"], v_pages=cache["v_pages"],
+                block_tables=sctx.block_tables, lengths=sctx.lengths,
+                window=sctx.window)
+        else:
+            partial, kv_new = attn_lib.attn_decode_partial(
+                p["attn"], xn, cfg, sctx.group_eff,
+                cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
+                window=sctx.window, cache_pos=cache.get("pos"))
         return partial, seq_state, {"kv": kv_new}
     if sctx.mode == "encode":
         # seq_state holds the full-sequence (k, v) projected by the scheduler
@@ -141,10 +152,17 @@ def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     xn = _n1(p, x, cfg)
     kv_state, ssm_state = seq_state if seq_state is not None else (None, None)
     if sctx.mode == "decode":
-        a_part, kv_new = attn_lib.attn_decode_partial(
-            p["attn"], xn, cfg, sctx.group_eff,
-            cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
-            window=sctx.window, cache_pos=cache.get("pos"))
+        if "k_pages" in cache:
+            a_part, kv_new = attn_lib.attn_decode_paged_partial(
+                p["attn"], xn, cfg, sctx.group_eff,
+                k_pages=cache["k_pages"], v_pages=cache["v_pages"],
+                block_tables=sctx.block_tables, lengths=sctx.lengths,
+                window=sctx.window)
+        else:
+            a_part, kv_new = attn_lib.attn_decode_partial(
+                p["attn"], xn, cfg, sctx.group_eff,
+                cache_k=cache["k"], cache_v=cache["v"], lengths=sctx.lengths,
+                window=sctx.window, cache_pos=cache.get("pos"))
         s_part, ssm_new = ssm_lib.ssm_decode_partial(
             p["ssm"], xn, cfg.ssm, cache["ssm"])
         return a_part + s_part, seq_state, {"kv": kv_new, "ssm": ssm_new}

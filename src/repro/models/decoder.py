@@ -208,8 +208,17 @@ def _build_caches(extras: Sequence[Dict], cfg: ModelConfig, B: int, S: int,
 # ---------------------------------------------------------------------------
 
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
-                lengths, unroll: bool = False) -> Tuple[jnp.ndarray, Any]:
+                lengths, unroll: bool = False, block_tables=None,
+                decode_mask=None,
+                overlap_batch: bool = False) -> Tuple[jnp.ndarray, Any]:
     """tokens: (B,1) int32; lengths: (B,) tokens already processed.
+
+    Paged decode (flash-decode over the page pool): caches carry
+    ``k_pages``/``v_pages`` per attention position and ``block_tables``
+    (B, MB) maps positions to pages; ``decode_mask`` (B,) marks the slots
+    really decoding (others scatter to the scratch page).  ``overlap_batch``
+    switches to the batch-split ISO schedule (core/iso.py) so each half's TP
+    all-reduce hides behind the other half's compute.
 
     Returns (logits_local (B,1,V_loc), updated caches).
     """
@@ -222,8 +231,16 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
         per_req = jax.vmap(lambda p: _sinusoid_at(p, cfg.d_model))(pos)
         x = (x.astype(jnp.float32) - base + per_req).astype(x.dtype)
     sctx = _stage_ctx(cfg, ctx, "decode", lengths=lengths)
-    x, new_caches = run_stack_decode(params["periods"], cfg.block_pattern, x,
-                                     caches, sctx, ctx, unroll=unroll)
+    sctx.block_tables = block_tables
+    sctx.decode_mask = decode_mask
+    if overlap_batch:
+        from repro.core.iso import run_stack_decode_overlap
+        x, new_caches = run_stack_decode_overlap(
+            params["periods"], cfg.block_pattern, x, caches, sctx, ctx,
+            unroll=unroll)
+    else:
+        x, new_caches = run_stack_decode(params["periods"], cfg.block_pattern,
+                                         x, caches, sctx, ctx, unroll=unroll)
     x = _final(params, x, cfg)
     logits = emb_lib.lm_head_local(params["embed"], x)
     return logits, new_caches

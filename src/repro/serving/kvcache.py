@@ -19,7 +19,7 @@ masking inside the kernel.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,11 +42,15 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list page allocator with per-request block tables.
+    """Free-list page allocator with per-request block tables and refcounted
+    prefix/page sharing.
 
     Invariants (asserted in tests):
-      * free + allocated == num_pages, always;
-      * a page belongs to at most one request (no aliasing / double-free);
+      * free + unique-allocated == num_pages, always;
+      * a page's refcount equals the number of block tables referencing it
+        (no aliasing beyond declared sharing, no double-free);
+      * a freshly handed-out page (``ensure`` growth or ``cow`` copy target)
+        comes from the free list — never a page another request still holds;
       * a request's capacity ``len(table) * page_size`` always covers its
         committed token count.
     """
@@ -59,6 +63,7 @@ class PageAllocator:
         self._free_set = set(self._free)
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
+        self.refcount: Dict[int, int] = {}        # page -> #tables holding it
 
     # ---- queries ----------------------------------------------------------
     @property
@@ -79,16 +84,30 @@ class PageAllocator:
         need = pages_for(n_tokens, self.page_size) - len(self.tables.get(rid, ()))
         return need <= len(self._free)
 
+    def shared_pages(self) -> int:
+        """Pages referenced by more than one block table."""
+        return sum(1 for rc in self.refcount.values() if rc > 1)
+
+    def page_shared(self, pg: int) -> bool:
+        return self.refcount.get(pg, 0) > 1
+
+    def logical_tokens(self) -> int:
+        """Tokens committed across requests (counts shared pages per sharer)."""
+        return sum(self.lengths.values())
+
     def utilization(self) -> float:
-        """Fraction of allocated page slots holding live tokens."""
+        """Committed tokens per allocated page slot.  Can exceed 1.0 when
+        prefix sharing packs several requests' tokens onto one page."""
         used = self.used_pages * self.page_size
         if not used:
             return 1.0
         return sum(self.lengths.values()) / used
 
     def fragmentation(self) -> int:
-        """Allocated-but-empty token slots (tail waste of partial pages)."""
-        return self.used_pages * self.page_size - sum(self.lengths.values())
+        """Allocated-but-empty token slots (tail waste of partial pages);
+        floored at 0 under sharing (shared slots count once)."""
+        return max(0, self.used_pages * self.page_size
+                   - sum(self.lengths.values()))
 
     # ---- mutation ---------------------------------------------------------
     def ensure(self, rid: int, n_tokens: int) -> None:
@@ -105,6 +124,9 @@ class PageAllocator:
         for _ in range(need):
             pg = self._free.pop()
             self._free_set.discard(pg)
+            assert self.refcount.get(pg, 0) == 0, \
+                f"free list handed out live page {pg}"
+            self.refcount[pg] = 1
             table.append(pg)
 
     def commit(self, rid: int, n_tokens: int) -> None:
@@ -114,15 +136,58 @@ class PageAllocator:
         assert new <= self.capacity(rid), (rid, new, self.capacity(rid))
         self.lengths[rid] = new
 
+    def adopt(self, rid: int, pages: List[int], n_tokens: int) -> None:
+        """Map another request's prefix ``pages`` into fresh request ``rid``'s
+        table (prefix sharing): refcounts bump, ``n_tokens`` are committed as
+        already resident.  The donor keeps its pages; nothing is copied."""
+        assert rid not in self.tables, f"adopt into non-fresh request {rid}"
+        assert n_tokens <= len(pages) * self.page_size
+        for pg in pages:
+            assert self.refcount.get(pg, 0) > 0, f"adopting dead page {pg}"
+            assert pg not in self._free_set
+            self.refcount[pg] += 1
+        self.tables[rid] = list(pages)
+        self.lengths[rid] = n_tokens
+
+    def cow(self, rid: int, block_idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: give ``rid`` a private copy of a shared page before
+        it writes into it.  Returns (old_page, new_page) for the device-side
+        content copy, or None if the page was already exclusive.  Raises
+        OutOfPages (mutating nothing) when no free page is available."""
+        table = self.tables[rid]
+        old = table[block_idx]
+        if self.refcount.get(old, 0) <= 1:
+            return None
+        if not self._free:
+            raise OutOfPages(f"cow of page {old}: no free pages")
+        new = self._free.pop()
+        self._free_set.discard(new)
+        assert self.refcount.get(new, 0) == 0, \
+            f"free list handed out live page {new}"
+        self.refcount[new] = 1
+        self.refcount[old] -= 1
+        table[block_idx] = new
+        return old, new
+
     def free(self, rid: int) -> List[int]:
-        """Release all of ``rid``'s pages back to the pool."""
+        """Drop all of ``rid``'s page references.  Returns the pages whose
+        refcount hit zero (actually released — the caller scrubs only those;
+        pages still shared by another request stay live)."""
         table = self.tables.pop(rid, [])
         self.lengths.pop(rid, None)
+        released = []
         for pg in table:
             assert pg not in self._free_set, f"double free of page {pg}"
-            self._free.append(pg)
-            self._free_set.add(pg)
-        return table
+            rc = self.refcount.get(pg, 0)
+            assert rc > 0, f"freeing page {pg} with refcount 0"
+            if rc == 1:
+                del self.refcount[pg]
+                self._free.append(pg)
+                self._free_set.add(pg)
+                released.append(pg)
+            else:
+                self.refcount[pg] = rc - 1
+        return released
 
     def block_table(self, rid: int, max_blocks: int) -> np.ndarray:
         """Padded (-1) block table row of static width ``max_blocks``."""
@@ -135,8 +200,89 @@ class PageAllocator:
     def stats(self) -> Dict[str, Any]:
         return {"num_pages": self.num_pages, "page_size": self.page_size,
                 "free_pages": self.free_pages, "used_pages": self.used_pages,
+                "shared_pages": self.shared_pages(),
+                "logical_tokens": self.logical_tokens(),
                 "utilization": self.utilization(),
                 "fragmentation_tokens": self.fragmentation()}
+
+
+class PrefixCache:
+    """Hash index over committed prompt prefixes for page sharing.
+
+    Every admitted request registers its prompt: one hash per page-aligned
+    prefix (``tokens[:k * page_size]`` for each full page ``k``).  A new
+    request looks up the LONGEST page-aligned prefix of its own prompt that
+    matches a live donor (hash first, then exact token verification — hash
+    collisions can suggest, never corrupt), then extends token-by-token into
+    the donor's next page so a partially-matching page can be shared too
+    (the engine CoWs it before the sharer's first divergent write).
+
+    The index holds request ids, not pages: validity is re-checked against
+    the allocator at lookup time, so donor eviction/free needs no eager
+    invalidation — a dead donor simply stops matching.
+    """
+
+    def __init__(self, page_size: int):
+        self.ps = page_size
+        self._prompts: Dict[int, np.ndarray] = {}       # rid -> prompt tokens
+        self._by_hash: Dict[int, List[int]] = {}        # prefix hash -> rids
+
+    @staticmethod
+    def _h(tokens: np.ndarray) -> int:
+        return hash(np.asarray(tokens, np.int32).tobytes())
+
+    def register(self, rid: int, prompt: np.ndarray) -> None:
+        if rid in self._prompts:
+            return                            # re-admission after preemption
+        prompt = np.asarray(prompt, np.int32)
+        self._prompts[rid] = prompt
+        for k in range(1, len(prompt) // self.ps + 1):
+            self._by_hash.setdefault(self._h(prompt[:k * self.ps]),
+                                     []).append(rid)
+
+    def forget(self, rid: int) -> None:
+        prompt = self._prompts.pop(rid, None)
+        if prompt is None:
+            return
+        for k in range(1, len(prompt) // self.ps + 1):
+            h = self._h(prompt[:k * self.ps])
+            rids = self._by_hash.get(h, [])
+            if rid in rids:
+                rids.remove(rid)
+            if not rids:
+                self._by_hash.pop(h, None)
+
+    def lookup(self, prompt: np.ndarray, alloc: "PageAllocator",
+               exclude: int = -1):
+        """Best live donor for ``prompt``.  Returns (donor_rid, shared_tokens,
+        shared_pages) or None.  ``shared_tokens`` is capped at
+        ``len(prompt) - 1`` so the sharer always prefills at least one token
+        (it needs last-position logits to sample)."""
+        prompt = np.asarray(prompt, np.int32)
+        ps = self.ps
+        for k in range(len(prompt) // ps, 0, -1):
+            for rid in self._by_hash.get(self._h(prompt[:k * ps]), ()):
+                if rid == exclude or rid not in alloc.tables:
+                    continue
+                donor = self._prompts.get(rid)
+                if donor is None or len(donor) < k * ps or \
+                        not np.array_equal(donor[:k * ps], prompt[:k * ps]):
+                    continue
+                if alloc.tokens(rid) < k * ps or \
+                        len(alloc.tables[rid]) < k:
+                    continue                  # donor hasn't prefilled this far
+                # extend token-wise into the donor's page k (partial share)
+                limit = min(len(prompt) - 1, len(donor), alloc.tokens(rid),
+                            len(alloc.tables[rid]) * ps)
+                t = k * ps
+                while t < limit and donor[t] == prompt[t]:
+                    t += 1
+                t = min(t, len(prompt) - 1)
+                if t <= 0:
+                    continue
+                n_pages = pages_for(t, ps)
+                return rid, t, list(alloc.tables[rid][:n_pages])
+        return None
 
 
 # ---------------------------------------------------------------------------

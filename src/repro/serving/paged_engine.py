@@ -18,24 +18,33 @@ next grant resumes with ``prefill(prefix_caches=..., pos_offset=start)``.
 When the pool runs dry the scheduler evicts a victim (recompute preemption:
 its pages are freed and prompt+generated re-enter the waiting queue).
 
-Single-device engine (mesh=None path of the dense engine); the shard_map
-boundary for paged serving is future work — see docs/serving.md.
+Decode reads the page pools IN PLACE through the paged flash-decode kernel
+(kernels/flash_decode.py) — no dense gather.  With ``mesh`` both jitted
+closures run inside ``shard_map`` over the TP "model" axis, and the batched
+decode uses the batch-split ISO schedule (core/iso.run_stack_decode_overlap)
+so each half's all-reduce hides behind the other half's compute.  Requests
+with a common prompt prefix share KV pages copy-on-write
+(``PageAllocator.adopt``/``cow`` + ``PrefixCache``) — see docs/serving.md.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.config import Config, ServingConfig
 from repro.core.overlap import AxisCtx
 from repro.models import api
+from repro.models.decoder import cache_specs, decoder_param_specs
 from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
-                                   gather_pages, gather_positions, pages_for,
-                                   token_page_coords)
+                                   PrefixCache, gather_pages, gather_positions,
+                                   pages_for, token_page_coords)
 from repro.serving.requests import Request, RequestState
 from repro.serving.sampler import sample
 from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
@@ -44,7 +53,6 @@ from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
 class PagedEngine:
     def __init__(self, config: Config, params, *, serving: ServingConfig = None,
                  mesh=None):
-        assert mesh is None, "paged engine is single-device for now"
         assert config.model.family != "audio", \
             "enc-dec (whisper) serving stays on the dense Engine"
         self.config = config
@@ -59,14 +67,37 @@ class PagedEngine:
         num_pages = sv.num_pages or sv.max_batch * self.max_blocks
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
 
+        # tensor-parallel serving: the whole engine step (prefill grants and
+        # the batched decode) runs inside shard_map over the "model" axis
+        self.mesh = mesh
+        if mesh is not None:
+            assert config.parallel.data == 1 and config.parallel.pods == 1, \
+                "paged TP serving shards the model axis only"
+            self.tp = config.parallel.model
+            self._ctx = AxisCtx(tp_axis="model", tp=self.tp,
+                                quantized_comm=config.iso.quantized_comm)
+        else:
+            self.tp = 1
+            self._ctx = AxisCtx()
+        # decode all-reduces hide behind the other batch half's attention
+        # (core/iso.run_stack_decode_overlap) — only meaningful under TP
+        self._decode_overlap = (mesh is not None and sv.decode_overlap
+                                and sv.max_batch >= 2)
+
         self.alloc = PageAllocator(num_pages, self.ps)
-        self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=1,
+        self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=self.tp,
                                dtype=cache_dtype)
-        self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=1,
+        self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=self.tp,
                                             dtype=cache_dtype)
         self.scheduler = TokenBudgetScheduler(
             policy=sv.scheduler_policy,
             prefill_token_budget=sv.prefill_token_budget)
+        # copy-on-write prefix sharing: attention-only stacks (recurrent
+        # families carry per-slot SSM/xLSTM state that pages cannot share)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if sv.prefix_sharing and all(k in ("attn_mlp", "attn_moe")
+                                     for k in self.cfg.block_pattern):
+            self.prefix_cache = PrefixCache(self.ps)
 
         self.slots: List[Optional[RequestState]] = [None] * sv.max_batch
         self.lengths = np.zeros(sv.max_batch, np.int64)   # tokens resident
@@ -75,11 +106,13 @@ class PagedEngine:
         self._finished: List[RequestState] = []
         self._prefill_fns: Dict[Tuple, Any] = {}
         self._decode_fn = None
-        self._ctx = AxisCtx()
+        self._copy_page_fn = None
         self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
                         "decode_tokens": 0, "completed": 0, "decode_calls": 0,
                         "prefill_calls": 0, "steps": 0, "preemptions": 0,
-                        "ttft_sum": 0.0, "ttft_n": 0}
+                        "ttft_sum": 0.0, "ttft_n": 0,
+                        "prefix_shared_tokens": 0, "cow_copies": 0,
+                        "peak_used_pages": 0}
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -117,6 +150,60 @@ class PagedEngine:
             st.prefilled = 0
             self.slots[st.slot] = st
             self.lengths[st.slot] = 0
+            self._try_share_prefix(st)
+
+    def _try_share_prefix(self, st: RequestState) -> None:
+        """Map a live donor's matching prompt-prefix pages into this request
+        (refcounted, zero-copy); prefill then resumes after the shared part."""
+        if self.prefix_cache is None or st.request.patches is not None:
+            return
+        rid = st.request.rid
+        hit = self.prefix_cache.lookup(st.request.prompt, self.alloc,
+                                       exclude=rid)
+        if hit is not None:
+            donor, t, pages = hit
+            self.alloc.adopt(rid, pages, t)
+            st.prefilled = t
+            self.lengths[st.slot] = t
+            self.metrics["prefix_shared_tokens"] += t
+        self.prefix_cache.register(rid, st.request.prompt)
+
+    def _copy_page(self, old: int, new: int) -> None:
+        """Device-side page copy for copy-on-write (all layers + positions).
+        One donated jitted call, compiled once for any (old, new) pair — the
+        eager equivalent would rebuild every pool buffer per layer."""
+        if self._copy_page_fn is None:
+            def fn(arr, old_pg, new_pg):
+                out = dict(arr)
+                out["k"] = tuple(k.at[:, new_pg].set(k[:, old_pg])
+                                 for k in arr["k"])
+                out["v"] = tuple(v.at[:, new_pg].set(v[:, old_pg])
+                                 for v in arr["v"])
+                out["pos"] = arr["pos"].at[new_pg].set(arr["pos"][old_pg])
+                return out
+            self._copy_page_fn = jax.jit(fn, donate_argnums=(0,))
+        with self._mesh_ctx():
+            self.kv.arrays = self._copy_page_fn(self.kv.arrays,
+                                                jnp.int32(old), jnp.int32(new))
+        self.metrics["cow_copies"] += 1
+
+    def _cow_range(self, rid: int, start: int, end: int) -> bool:
+        """Copy-on-write every shared page the token range [start, end) will
+        write into (evicting for the copy target if the pool is dry)."""
+        table = self.alloc.tables.get(rid, [])
+        for blk in range(start // self.ps, (end - 1) // self.ps + 1):
+            if blk >= len(table):
+                break                         # beyond the table: fresh pages
+            while True:
+                try:
+                    pair = self.alloc.cow(rid, blk)
+                    break
+                except OutOfPages:
+                    if not self._preempt_one(protect=[rid]):
+                        return False
+            if pair is not None:
+                self._copy_page(*pair)
+        return True
 
     def _release_pages(self, rid: int) -> None:
         """Free rid's pages and invalidate their position entries: attention
@@ -170,11 +257,55 @@ class PagedEngine:
         return toks
 
     # ------------------------------------------------------------------
-    # jitted closures
+    # jitted closures (wrapped in shard_map over the TP axis under a mesh)
     # ------------------------------------------------------------------
-    def _prefix_from_pages(self, kv_arrays, states_slot, bt_row):
-        """Per-position prefix caches for a resumed prefill (batch 1)."""
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _kv_specs(self):
+        kv = P(None, None, None, "model", None)   # (Pd, page, ps, HEADS, hd)
+        n = len(self.kv.kv_positions)
+        return {"k": (kv,) * n, "v": (kv,) * n, "pos": P(None, None)}
+
+    def _state_specs(self):
+        # recurrent-state leaves reuse the dense cache rules (names/ndims
+        # only); batch stays unsharded — serving TP shards the model axis
+        return cache_specs(jax.eval_shape(lambda: self.states),
+                           batch_axes=None, shard_batch=False)
+
+    def _wrap_prefill(self, fn, has_patches: bool):
+        if self.mesh is None:
+            return jax.jit(fn)
+        p_specs = decoder_param_specs(jax.eval_shape(lambda: self.params))
+        in_specs = (p_specs, P(None, None),
+                    P(None, None, None) if has_patches else None,
+                    self._kv_specs(), self._state_specs(),
+                    P(None, None), P())
+        out_specs = (P(None, "model"), self._kv_specs(), self._state_specs())
+        sm = compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+        return jax.jit(sm)
+
+    def _wrap_decode(self, fn):
+        if self.mesh is None:
+            return jax.jit(fn)
+        p_specs = decoder_param_specs(jax.eval_shape(lambda: self.params))
+        in_specs = (p_specs, P(None, None), P(None, None), P(None),
+                    self._kv_specs(), self._state_specs(), P(None))
+        out_specs = (P(None, None, "model"), self._kv_specs(),
+                     self._state_specs())
+        sm = compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+        return jax.jit(sm)
+
+    def _prefix_from_pages(self, kv_arrays, states_slot, bt_row, start):
+        """Per-position prefix caches for a resumed prefill (batch 1).
+
+        Slots at positions >= ``start`` are masked invalid: with prefix/page
+        sharing the tail of a partially-shared page still holds the DONOR's
+        KV beyond the shared prefix, which this request must not attend."""
         pos_dense = gather_positions(kv_arrays["pos"], bt_row)      # (1, L)
+        pos_dense = jnp.where(pos_dense < start, pos_dense, -1)
         prefix, kv_i = [], 0
         for i, kind in enumerate(self.cfg.block_pattern):
             c = dict(states_slot[i])
@@ -199,8 +330,8 @@ class PagedEngine:
             batch = {"tokens": tokens}
             if n_patches:
                 batch["patches"] = patches
-            prefix = self._prefix_from_pages(kv_arrays, states_slot, bt_row) \
-                if resumed else None
+            prefix = self._prefix_from_pages(kv_arrays, states_slot, bt_row,
+                                             start) if resumed else None
             out = api.prefill(params, cfg, ctx, iso, batch, logits_mode="last",
                               prefix_caches=prefix, pos_offset=start,
                               return_extras=True)
@@ -223,7 +354,7 @@ class PagedEngine:
             new_kv["pos"] = kv_arrays["pos"].at[page, off].set(positions)
             return out["logits_local"][:, -1], new_kv, tuple(new_states)
 
-        self._prefill_fns[key] = jax.jit(fn)
+        self._prefill_fns[key] = self._wrap_prefill(fn, n_patches > 0)
         return self._prefill_fns[key]
 
     def _get_decode(self):
@@ -232,21 +363,23 @@ class PagedEngine:
         cfg, ctx = self.cfg, self._ctx
         scratch = self.kv.scratch_page
         MB, ps = self.max_blocks, self.ps
+        overlap = self._decode_overlap
 
         def fn(params, toks, bt, lengths, kv_arrays, states, active):
-            pos_dense = gather_positions(kv_arrays["pos"], bt)     # (B, MB*ps)
+            # paged flash decode: the stack reads the page pools in place
+            # through the block tables (kernels/flash_decode.py) and scatters
+            # each new token's KV to its page (core/iso.run_stack_decode)
             caches, kv_i = [], 0
             for i, kind in enumerate(cfg.block_pattern):
                 c = dict(states[i])
                 if i in self.kv.kv_positions:
-                    k = gather_pages(kv_arrays["k"][kv_i], bt)
-                    c["k"], c["v"] = k, gather_pages(kv_arrays["v"][kv_i], bt)
-                    c["pos"] = jnp.broadcast_to(pos_dense[None],
-                                                (k.shape[0],) + pos_dense.shape)
+                    c["k_pages"] = kv_arrays["k"][kv_i]
+                    c["v_pages"] = kv_arrays["v"][kv_i]
                     kv_i += 1
                 caches.append(c)
-            logits, new_caches = api.decode_step(params, cfg, ctx, toks,
-                                                 tuple(caches), lengths)
+            logits, new_caches = api.decode_step(
+                params, cfg, ctx, toks, tuple(caches), lengths,
+                block_tables=bt, decode_mask=active, overlap_batch=overlap)
             B = toks.shape[0]
             blk = jnp.clip(lengths // ps, 0, MB - 1)
             page = bt[jnp.arange(B), blk]
@@ -258,13 +391,8 @@ class PagedEngine:
                 nc = new_caches[i]
                 if i in self.kv.kv_positions:
                     kv_i = self.kv.kv_positions.index(i)
-                    idx = lengths.reshape(1, B, 1, 1, 1)
-                    nk = jnp.take_along_axis(nc["k"], idx, axis=2)[:, :, 0]
-                    nv = jnp.take_along_axis(nc["v"], idx, axis=2)[:, :, 0]
-                    ks[kv_i] = ks[kv_i].at[:, page, off].set(
-                        nk.astype(ks[kv_i].dtype))
-                    vs[kv_i] = vs[kv_i].at[:, page, off].set(
-                        nv.astype(vs[kv_i].dtype))
+                    ks[kv_i] = nc["k_pages"]
+                    vs[kv_i] = nc["v_pages"]
                 # recurrent states advance only for slots that really decoded
                 sel = {}
                 for sk in ("ssm", "mlstm", "slstm"):
@@ -280,7 +408,7 @@ class PagedEngine:
                 jnp.where(active, lengths.astype(jnp.int32), -1))
             return logits, new_kv, tuple(new_states)
 
-        self._decode_fn = jax.jit(fn)
+        self._decode_fn = self._wrap_decode(fn)
         return self._decode_fn
 
     # ------------------------------------------------------------------
@@ -308,9 +436,10 @@ class PagedEngine:
             lambda a: a[:, slot:slot + 1], self.states)
         fn = self._get_prefill(n_text, n_patches, resumed=start > 0)
         t0_wall = time.perf_counter()
-        logits_last, new_kv, new_states = fn(
-            self.params, tokens, patches, self.kv.arrays, states_slot, bt_row,
-            jnp.int32(start))
+        with self._mesh_ctx():
+            logits_last, new_kv, new_states = fn(
+                self.params, tokens, patches, self.kv.arrays, states_slot,
+                bt_row, jnp.int32(start))
         jax.block_until_ready(logits_last)
         self.metrics["prefill_s"] += time.perf_counter() - t0_wall
         self.metrics["prefill_tokens"] += n_tokens
@@ -341,6 +470,8 @@ class PagedEngine:
         self.metrics["completed"] += 1
         self.metrics["decode_tokens"] += len(st.generated)
         self._release_pages(st.request.rid)
+        if self.prefix_cache is not None:
+            self.prefix_cache.forget(st.request.rid)
         self.scheduler.forget(st.request.rid)
         self._finished.append(st)
         self._by_rid.pop(st.request.rid, None)
@@ -358,13 +489,22 @@ class PagedEngine:
             st = self._by_rid.get(g.rid)
             if st is None or st.slot < 0:
                 continue                      # preempted by an earlier grant
-            if not self._ensure_pages(g.rid, g.start + g.n_tokens):
+            start, end = g.start, g.start + g.n_tokens
+            if start == 0 and st.prefilled == 0:
+                # retry prefix sharing: a donor admitted in the SAME step has
+                # committed its first chunks by now (grants run sequentially)
+                self._try_share_prefix(st)
+                start = st.prefilled
+                if end <= start:              # grant fully covered by sharing
+                    continue
+            if not self._ensure_pages(g.rid, end) or \
+                    not self._cow_range(g.rid, start, end):
                 # unreachable once add_request validated pool capacity; a
                 # silent skip here would spin run_until_complete forever
                 raise RuntimeError(
                     f"page pool too small for request {g.rid}'s prefill chunk "
                     f"even after evicting; increase ServingConfig.num_pages")
-            tok = self._run_grant(st, g.start, g.n_tokens, g.last)
+            tok = self._run_grant(st, start, end - start, g.last)
             if tok is not None:
                 events.append((g.rid, tok))
                 if st.done:
@@ -380,8 +520,9 @@ class PagedEngine:
             if st.slot < 0:
                 active.remove(st)
                 continue
-            if not self._ensure_pages(st.request.rid,
-                                      int(self.lengths[st.slot]) + 1):
+            L = int(self.lengths[st.slot])
+            if not self._ensure_pages(st.request.rid, L + 1) or \
+                    not self._cow_range(st.request.rid, L, L + 1):
                 raise RuntimeError("page pool too small for a single decode "
                                    "step; increase ServingConfig.num_pages")
         active = [s for s in active if s.slot >= 0]
@@ -398,9 +539,10 @@ class PagedEngine:
         toks = jnp.asarray(self.last_tokens[:, None].astype(np.int32))
         lens = jnp.asarray(self.lengths.astype(np.int32))
         t0 = time.perf_counter()
-        logits, new_kv, new_states = self._get_decode()(
-            self.params, toks, jnp.asarray(bt), lens, self.kv.arrays,
-            self.states, jnp.asarray(mask))
+        with self._mesh_ctx():
+            logits, new_kv, new_states = self._get_decode()(
+                self.params, toks, jnp.asarray(bt), lens, self.kv.arrays,
+                self.states, jnp.asarray(mask))
         logits = np.asarray(jax.device_get(logits))
         self.metrics["decode_s"] += time.perf_counter() - t0
         self.metrics["decode_calls"] += 1
@@ -429,6 +571,8 @@ class PagedEngine:
         self._admit()
         self._prefill_phase(events)
         self._decode_phase(events)
+        self.metrics["peak_used_pages"] = max(self.metrics["peak_used_pages"],
+                                              self.alloc.used_pages)
         return events
 
     def run_until_complete(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

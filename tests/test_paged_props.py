@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) for PageAllocator with refcounted
+prefix/page sharing: arbitrary alloc/free/share/CoW sequences never
+double-free, never hand a live page to a new owner, and conserve the pool."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.kvcache import (OutOfPages, PageAllocator,  # noqa: E402
+                                   pages_for)
+
+PAGE_SIZE = 4
+NUM_PAGES = 12
+RIDS = list(range(6))
+
+
+def _check(a: PageAllocator):
+    # conservation: every page is free xor referenced, refcounts exact
+    refs = {}
+    for rid, table in a.tables.items():
+        assert len(table) == len(set(table)), f"rid {rid} repeats a page"
+        for pg in table:
+            refs[pg] = refs.get(pg, 0) + 1
+    assert refs == a.refcount, "refcount drift"
+    for pg in refs:
+        assert pg not in a._free_set, f"page {pg} free AND referenced"
+    assert len(refs) + a.free_pages == a.num_pages, "pool not conserved"
+    for rid in a.tables:
+        assert a.tokens(rid) <= a.capacity(rid)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_allocator_share_cow_random_walk(data):
+    a = PageAllocator(NUM_PAGES, PAGE_SIZE)
+    n_ops = data.draw(st.integers(10, 80), label="n_ops")
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(["grow", "free", "adopt", "cow"]),
+                       label="op")
+        live = sorted(a.tables)
+        if op == "grow":
+            rid = data.draw(st.sampled_from(RIDS), label="rid")
+            want = a.tokens(rid) + data.draw(st.integers(1, 9), label="toks")
+            before_free = a.free_pages
+            try:
+                a.ensure(rid, want)
+                a.commit(rid, want - a.tokens(rid))
+            except OutOfPages:
+                assert a.free_pages == before_free, "failed ensure leaked"
+        elif op == "free" and live:
+            rid = data.draw(st.sampled_from(live), label="free_rid")
+            released = a.free(rid)
+            for pg in released:
+                assert a.refcount.get(pg, 0) == 0
+                assert pg in a._free_set
+        elif op == "adopt" and live:
+            donor = data.draw(st.sampled_from(live), label="donor")
+            fresh = [r for r in range(20, 60) if r not in a.tables]
+            if not fresh:
+                continue
+            rid = fresh[0]
+            k = data.draw(st.integers(1, max(1, len(a.tables[donor]))),
+                          label="k_pages")
+            k = min(k, len(a.tables[donor]))
+            if k:
+                n_tok = min(a.tokens(donor), k * PAGE_SIZE)
+                a.adopt(rid, a.tables[donor][:k], n_tok)
+                assert a.tokens(rid) == n_tok
+        elif op == "cow" and live:
+            rid = data.draw(st.sampled_from(live), label="cow_rid")
+            if a.tables[rid]:
+                blk = data.draw(
+                    st.integers(0, len(a.tables[rid]) - 1), label="blk")
+                old = a.tables[rid][blk]
+                was_shared = a.page_shared(old)
+                try:
+                    pair = a.cow(rid, blk)
+                except OutOfPages:
+                    pair = "oom"
+                if pair not in (None, "oom"):
+                    assert was_shared
+                    assert pair[0] == old and a.tables[rid][blk] == pair[1]
+                elif pair is None:
+                    assert not was_shared        # exclusive page: no copy
+        _check(a)
+    # drain everything: the pool must come back whole
+    for rid in sorted(a.tables):
+        a.free(rid)
+    assert a.free_pages == a.num_pages
+    assert not a.refcount
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fresh_pages_never_alias_live_ones(seed):
+    """Pages handed out by ensure/cow must never be held by anyone else."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(8, PAGE_SIZE)
+    for _ in range(40):
+        live = sorted(a.tables)
+        roll = rng.integers(0, 3)
+        held_before = {pg for t in a.tables.values() for pg in t}
+        if roll == 0:
+            rid = int(rng.integers(0, 4))
+            before = set(a.tables.get(rid, ()))
+            try:
+                a.ensure(rid, a.tokens(rid) + int(rng.integers(1, 8)))
+            except OutOfPages:
+                continue
+            fresh = set(a.tables[rid]) - before
+            assert not (fresh & (held_before - before)), \
+                "ensure handed out a page another request holds"
+        elif roll == 1 and live:
+            donor = live[int(rng.integers(0, len(live)))]
+            rid = 100 + int(rng.integers(0, 1000))
+            if rid not in a.tables and a.tables[donor]:
+                a.adopt(rid, a.tables[donor][:1],
+                        min(a.tokens(donor), PAGE_SIZE))
+        elif roll == 2 and live:
+            rid = live[int(rng.integers(0, len(live)))]
+            if a.tables[rid]:
+                blk = int(rng.integers(0, len(a.tables[rid])))
+                try:
+                    pair = a.cow(rid, blk)
+                except OutOfPages:
+                    continue
+                if pair is not None:
+                    assert pair[1] not in held_before, \
+                        "cow target aliases a live page"
+        _check(a)

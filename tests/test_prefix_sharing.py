@@ -1,0 +1,207 @@
+"""Copy-on-write prefix/page sharing: allocator-level semantics and the
+engine-level regression grid (identical tokens, fewer pages, sharer survives
+donor eviction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_hybrid, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.kvcache import (OutOfPages, PageAllocator, PrefixCache,
+                                   pages_for)
+from repro.serving.requests import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts, adopt, cow (pure python)
+# ---------------------------------------------------------------------------
+
+def test_adopt_shares_pages_and_free_keeps_sharer():
+    a = PageAllocator(num_pages=8, page_size=4)
+    a.ensure(1, 10)                            # 3 pages
+    a.commit(1, 10)
+    donor_pages = list(a.tables[1])
+    a.adopt(2, donor_pages[:2], 8)
+    assert a.used_pages == 3                   # nothing new allocated
+    assert a.shared_pages() == 2
+    assert a.tokens(2) == 8
+    # donor eviction releases only its exclusive page
+    released = a.free(1)
+    assert released == [donor_pages[2]]
+    assert a.tables[2] == donor_pages[:2]      # sharer untouched
+    assert a.shared_pages() == 0               # now exclusively the sharer's
+    assert a.free(2) == donor_pages[:2]
+    assert a.free_pages == a.num_pages
+
+
+def test_cow_detaches_shared_page():
+    a = PageAllocator(num_pages=8, page_size=4)
+    a.ensure(1, 8)
+    a.commit(1, 8)
+    a.adopt(2, list(a.tables[1]), 7)
+    old = a.tables[2][1]
+    pair = a.cow(2, 1)
+    assert pair is not None and pair[0] == old
+    new = pair[1]
+    assert a.tables[2][1] == new and a.tables[1][1] == old
+    assert a.refcount[old] == 1 and a.refcount[new] == 1
+    assert a.cow(2, 1) is None                 # already exclusive
+    # second sharer of page 0 still refcounted correctly
+    assert a.refcount[a.tables[1][0]] == 2
+
+
+def test_cow_out_of_pages_mutates_nothing():
+    a = PageAllocator(num_pages=2, page_size=4)
+    a.ensure(1, 8)
+    a.commit(1, 8)
+    a.adopt(2, list(a.tables[1]), 7)
+    before = (list(a.tables[2]), dict(a.refcount))
+    with pytest.raises(OutOfPages):
+        a.cow(2, 0)
+    assert (list(a.tables[2]), dict(a.refcount)) == before
+
+
+def test_prefix_cache_hash_lookup_verifies_tokens():
+    a = PageAllocator(num_pages=16, page_size=4)
+    pc = PrefixCache(page_size=4)
+    donor = np.arange(2, 14, dtype=np.int32)   # 12 tokens = 3 pages
+    pc.register(1, donor)
+    a.ensure(1, 12)
+    a.commit(1, 12)
+    # full aligned match + token-wise extension into the partial page
+    hit = pc.lookup(np.concatenate([donor, [99, 98]]).astype(np.int32), a)
+    assert hit is not None
+    rid, t, pages = hit
+    assert rid == 1 and t == 12 and pages == a.tables[1][:3]
+    # diverging mid-page: only the aligned prefix + LCP shares
+    q = donor.copy()
+    q[9] = 77                                  # diverge inside page 2
+    hit = pc.lookup(q, a)
+    assert hit is not None and hit[1] == 9 and len(hit[2]) == 3
+    # identical prompt: capped at len - 1 so one token is always prefilled
+    hit = pc.lookup(donor, a)
+    assert hit is not None and hit[1] == 11
+    # dead donor stops matching, no eager invalidation needed
+    a.free(1)
+    assert pc.lookup(np.concatenate([donor, [99]]).astype(np.int32), a) is None
+
+
+# ---------------------------------------------------------------------------
+# engine regression: shared-prompt workload
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, iso, params, *, sharing, num_pages=0, max_batch=2,
+            max_len=96, budget=64):
+    sv = ServingConfig(page_size=8, max_batch=max_batch, max_len=max_len,
+                       prefill_token_budget=budget, num_pages=num_pages,
+                       prefix_sharing=sharing)
+    return PagedEngine(Config(model=cfg, parallel=ParallelConfig(data=1,
+                                                                 model=1),
+                              iso=iso, serving=sv), params)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    return cfg, iso, params
+
+
+def _run(eng, prompts, new=6):
+    rids = [eng.add_request(Request(
+        prompt=p.copy(), sampling=SamplingParams(max_new_tokens=new,
+                                                 eos_id=-1)))
+            for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids]
+
+
+def test_shared_prompt_identical_tokens_fewer_pages(dense_setup):
+    cfg, iso, params = dense_setup
+    rng = np.random.default_rng(11)
+    system = rng.integers(2, 64, 40).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(2, 64, n).astype(np.int32)])
+               for n in (9, 13)]
+
+    shared_eng = _engine(cfg, iso, params, sharing=True)
+    shared = _run(shared_eng, prompts)
+    plain_eng = _engine(cfg, iso, params, sharing=False)
+    plain = _run(plain_eng, prompts)
+
+    assert shared == plain
+    m = shared_eng.metrics
+    assert m["prefix_shared_tokens"] >= 40
+    assert m["peak_used_pages"] < plain_eng.metrics["peak_used_pages"]
+    # all refcounts unwound after completion
+    assert shared_eng.alloc.free_pages == shared_eng.alloc.num_pages
+    assert shared_eng.alloc.shared_pages() == 0
+
+
+def test_identical_prompts_trigger_cow(dense_setup):
+    """An identical prompt shares through the donor's partial last page; the
+    sharer's first write must copy-on-write, never corrupt the donor."""
+    cfg, iso, params = dense_setup
+    rng = np.random.default_rng(12)
+    p = rng.integers(2, 64, 37).astype(np.int32)   # NOT page-aligned
+
+    shared_eng = _engine(cfg, iso, params, sharing=True)
+    shared = _run(shared_eng, [p, p])
+    plain = _run(_engine(cfg, iso, params, sharing=False), [p, p])
+    assert shared == plain
+    assert shared[0] == shared[1]                  # greedy: same stream
+    m = shared_eng.metrics
+    assert m["prefix_shared_tokens"] > 0
+    assert m["cow_copies"] > 0
+
+
+def test_eviction_of_one_sharer_preserves_the_other(dense_setup):
+    """Freeing one sharer's pages must not invalidate the survivor's KV."""
+    cfg, iso, params = dense_setup
+    rng = np.random.default_rng(13)
+    system = rng.integers(2, 64, 32).astype(np.int32)
+    pa = np.concatenate([system, rng.integers(2, 64, 5).astype(np.int32)])
+    pb = np.concatenate([system, rng.integers(2, 64, 7).astype(np.int32)])
+
+    eng = _engine(cfg, iso, params, sharing=True, max_batch=2)
+    ra = eng.add_request(Request(prompt=pa.copy(),
+                                 sampling=SamplingParams(max_new_tokens=3,
+                                                         eos_id=-1)))
+    rb = eng.add_request(Request(prompt=pb.copy(),
+                                 sampling=SamplingParams(max_new_tokens=12,
+                                                         eos_id=-1)))
+    outs = eng.run_until_complete()   # A finishes (and frees) well before B
+    assert eng.metrics["prefix_shared_tokens"] > 0
+
+    # unshared reference with the same per-request sampling budgets
+    eng2 = _engine(cfg, iso, params, sharing=False, max_batch=2)
+    ra2 = eng2.add_request(Request(prompt=pa.copy(),
+                                   sampling=SamplingParams(max_new_tokens=3,
+                                                           eos_id=-1)))
+    rb2 = eng2.add_request(Request(prompt=pb.copy(),
+                                   sampling=SamplingParams(max_new_tokens=12,
+                                                           eos_id=-1)))
+    ref = eng2.run_until_complete()
+    assert outs[ra] == ref[ra2]
+    assert outs[rb] == ref[rb2]
+
+
+def test_sharing_disabled_for_recurrent_archs():
+    """Hybrid (SSM-carrying) stacks must not share pages: per-slot recurrent
+    state cannot be adopted."""
+    cfg = tiny_hybrid(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _engine(cfg, iso, params, sharing=True)
+    assert eng.prefix_cache is None
+    rng = np.random.default_rng(14)
+    p = rng.integers(2, 64, 24).astype(np.int32)
+    outs = _run(eng, [p, p], new=3)
+    assert eng.metrics["prefix_shared_tokens"] == 0
+    assert outs[0] == outs[1]

@@ -1,0 +1,92 @@
+"""Multi-device (8 host CPUs, subprocess) paged TP serving: the shard_map
+PagedEngine — flash-decode kernel over block tables, batch-split ISO decode
+overlap, CoW prefix sharing — must emit token-identical greedy streams to the
+single-device DENSE engine on a mixed-length batch.  Subprocess because XLA
+locks the device count at first init (the main pytest process keeps 1 device).
+
+Kept out of the slow lane: CI runs this in the dedicated multi-device job
+(.github/workflows/ci.yml) with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import (Config, ISOConfig, ModelConfig, ParallelConfig,
+                          ServingConfig)
+from repro.launch.mesh import make_mesh
+from repro.models import api
+from repro.serving import Engine, PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+key = jax.random.PRNGKey(0)
+iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=8, chunk_align=8)
+cfg = ModelConfig(name="t-dense", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  qk_norm=True)
+sp = lambda n=5: SamplingParams(max_new_tokens=n, eos_id=-1)
+rng = np.random.default_rng(3)
+prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (70, 12, 33, 7)]
+
+# ---- single-device dense reference ----------------------------------------
+config1 = Config(model=cfg, parallel=ParallelConfig(data=1, model=1), iso=iso)
+params1 = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+dense = Engine(config1, params1, mesh=None, max_batch=2, max_len=160,
+               bucket=16)
+d_rids = [dense.add_request(Request(prompt=p.copy(), sampling=sp()))
+          for p in prompts]
+d_out = dense.run_until_complete()
+
+# ---- TP=8 paged engine (shard_map + flash decode + overlap) ---------------
+pc = ParallelConfig(data=1, model=8)
+mesh = make_mesh(pc)
+params8 = api.init_params(key, cfg, tp=8, dtype=jnp.float32)
+sv = ServingConfig(page_size=8, max_batch=2, max_len=160,
+                   prefill_token_budget=16)
+eng = PagedEngine(Config(model=cfg, parallel=pc, iso=iso, serving=sv),
+                  params8, mesh=mesh)
+assert eng._decode_overlap, "TP decode must use the batch-split ISO schedule"
+p_rids = [eng.add_request(Request(prompt=p.copy(), sampling=sp()))
+          for p in prompts]
+p_out = eng.run_until_complete()
+for dr, pr in zip(d_rids, p_rids):
+    assert d_out[dr] == p_out[pr], (dr, d_out[dr], p_out[pr])
+print("ok tp-paged==dense", flush=True)
+
+# ---- prefix sharing under TP: fewer pages, identical tokens ---------------
+system = rng.integers(2, 64, 40).astype(np.int32)
+shared_prompts = [np.concatenate([system,
+                                  rng.integers(2, 64, n).astype(np.int32)])
+                  for n in (9, 13)]
+
+def run_tp(sharing):
+    svx = ServingConfig(page_size=8, max_batch=2, max_len=160,
+                        prefill_token_budget=64, prefix_sharing=sharing)
+    e = PagedEngine(Config(model=cfg, parallel=pc, iso=iso, serving=svx),
+                    params8, mesh=mesh)
+    rids = [e.add_request(Request(prompt=p.copy(), sampling=sp(6)))
+            for p in shared_prompts]
+    outs = e.run_until_complete()
+    return [outs[r] for r in rids], e
+
+tok_s, eng_s = run_tp(True)
+tok_p, eng_p = run_tp(False)
+assert tok_s == tok_p, (tok_s, tok_p)
+assert eng_s.metrics["prefix_shared_tokens"] >= 40
+assert eng_s.metrics["peak_used_pages"] < eng_p.metrics["peak_used_pages"], (
+    eng_s.metrics["peak_used_pages"], eng_p.metrics["peak_used_pages"])
+st = eng_s.page_stats()
+assert "shared_pages" in st and st["free_pages"] == st["num_pages"]
+print("ok tp-prefix-sharing", flush=True)
+print("ALL_TP_PAGED_OK")
+"""
+
+
+def test_tp_paged_engine_subprocess():
+    res = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "ALL_TP_PAGED_OK" in res.stdout
