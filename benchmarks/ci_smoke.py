@@ -1,0 +1,78 @@
+"""CI bench-smoke: engine bench + perf-ledger smoke -> BENCH_pr.json.
+
+Runs on every push (ci.yml ``bench-smoke`` job) so the perf trajectory is
+recorded per commit instead of staying empty:
+
+  * ``benchmarks/engine_bench.py`` end-to-end on CPU — ISO vs baseline,
+    paged vs dense (KV bytes, TTFT), CoW prefix sharing, and now the
+    bucketed-prefill counters (pad tokens, compiled-closure count);
+  * ``benchmarks/perf_ledger.py --smoke`` in a subprocess (it forces 512
+    placeholder XLA devices at import, which must not leak into the
+    engine-bench process whose jit runs on the single real CPU device).
+
+The artifact is a single JSON document:
+
+    {"schema": "bench-smoke-v1", "env": {...}, "wall_s": ...,
+     "engine": [{"name", "us_per_call", "derived"}, ...],
+     "perf_ledger": [{"ledger", "variant", "compute_s", ...}, ...]}
+
+    PYTHONPATH=src python -m benchmarks.ci_smoke --out BENCH_pr.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_pr.json")
+    ap.add_argument("--skip-ledger", action="store_true",
+                    help="engine bench only (fast local run)")
+    args = ap.parse_args(argv)
+
+    import jax
+    from benchmarks import engine_bench
+
+    rows = []
+
+    def emit(name: str, us: float, derived: str = "") -> None:
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    t0 = time.perf_counter()
+    engine_bench.run(emit)
+    ledger = []
+    if not args.skip_ledger:
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "ledger.json")
+            subprocess.run(
+                [sys.executable, "-m", "benchmarks.perf_ledger", "--smoke",
+                 "--json", path],
+                check=True, env=dict(os.environ))
+            with open(path) as f:
+                ledger = json.load(f)
+    doc = {
+        "schema": "bench-smoke-v1",
+        "env": {"python": platform.python_version(),
+                "platform": platform.platform(),
+                "jax": jax.__version__,
+                "backend": jax.default_backend()},
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "engine": rows,
+        "perf_ledger": ledger,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} engine rows, "
+          f"{len(ledger)} ledger rows)")
+
+
+if __name__ == "__main__":
+    main()

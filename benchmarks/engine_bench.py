@@ -126,6 +126,15 @@ def run(emit):
          f"prefill_calls={m['prefill_calls']};steps={m['steps']};"
          f"tokens_equal={equal}")
     assert equal, "paged engine changed generated tokens!"
+    # grant-size bucketing: compiled-closure count stays O(#buckets) and the
+    # compile-guard bound holds on this mixed-length trace
+    compiles = peng.prefill_compile_count()
+    bound = peng.max_prefill_compiles()
+    assert bound is None or compiles <= bound, (compiles, bound)
+    emit("engine/bucketed_prefill", wall_p * 1e6,
+         f"prefill_compiles={compiles};compile_bound={bound};"
+         f"pad_tokens={m['prefill_pad_tokens']};"
+         f"buckets={len(peng._buckets or ())}")
 
     # ---- CoW prefix sharing: shared-system-prompt workload ----------------
     sh_lengths = (96, 96, 96)

@@ -3,9 +3,16 @@
 Standalone (takes ~10 min of compiles; not part of `benchmarks.run`):
 
     PYTHONPATH=src python -m benchmarks.perf_ledger
+
+CI runs the ``--smoke`` subset (one ledger, two variants) and ``--json`` dumps
+the rows for the bench-smoke artifact (benchmarks/ci_smoke.py).
 """
+import argparse
+import json
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 
 LEDGERS = [
     ("H1: kimi-k2-1t-a32b x train_4k", "kimi-k2-1t-a32b", "train_4k", [
@@ -26,10 +33,21 @@ LEDGERS = [
     ]),
 ]
 
+# CI bench-smoke subset: one prefill ledger, baseline + one lever — enough to
+# keep the perf trajectory populated without the full ~10 min of compiles
+SMOKE_LEDGERS = [
+    ("H3: qwen3-8b x prefill_32k", "qwen3-8b", "prefill_32k", [
+        ("baseline", {}),
+        ("int8 TP collectives", {"quantized": True}),
+    ]),
+]
 
-def main():
+
+def run_ledgers(ledgers):
+    """Lower + roofline every (ledger, variant); returns structured rows."""
     from repro.launch.dryrun import lower_shape
-    for title, arch, shape, variants in LEDGERS:
+    rows = []
+    for title, arch, shape, variants in ledgers:
         print(f"\n=== {title} ===")
         print(f"{'variant':38s} {'compute':>10s} {'memory<=':>10s} "
               f"{'collective':>11s}")
@@ -38,6 +56,25 @@ def main():
             ro = r["roofline"]
             print(f"{label:38s} {ro['compute_s']:10.3g} {ro['memory_s']:10.3g} "
                   f"{ro['collective_s']:11.3g}")
+            rows.append({"ledger": title, "arch": arch, "shape": shape,
+                         "variant": label,
+                         "compute_s": float(ro["compute_s"]),
+                         "memory_s": float(ro["memory_s"]),
+                         "collective_s": float(ro["collective_s"])})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: one ledger, two variants")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump the rows as JSON")
+    args = ap.parse_args(argv)
+    rows = run_ledgers(SMOKE_LEDGERS if args.smoke else LEDGERS)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

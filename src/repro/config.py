@@ -188,6 +188,15 @@ class ServingConfig:
     # the same KV pages (refcounted); attention-only stacks, off for
     # recurrent families (their per-slot state cannot be shared)
     prefix_sharing: bool = True
+    # grant-size bucketing: pad every prefill grant up to a bucket length
+    # (powers of two by default — core/chunking.grant_buckets) so the engine
+    # compiles O(#buckets) prefill closures instead of one per distinct grant
+    # length.  Padded tail tokens are masked out of attention and KV scatter.
+    # Attention-only stacks; recurrent families run unbucketed (pad tokens
+    # would advance their SSM/xLSTM state).
+    grant_bucketing: bool = True
+    grant_buckets: Tuple[int, ...] = ()   # empty -> power-of-two ladder
+    min_grant_bucket: int = 16
 
 
 @dataclass(frozen=True)

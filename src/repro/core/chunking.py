@@ -89,6 +89,42 @@ def auto_split(seq_len: int, n: int, cfg: ModelConfig, hw_name: str = "v5e",
     return best
 
 
+def grant_buckets(max_tokens: int, min_bucket: int = 16,
+                  explicit: Sequence[int] = ()) -> Tuple[int, ...]:
+    """Grant-size buckets for compile-stable chunked prefill.
+
+    The paged engine pads every prefill grant up to the next bucket length so
+    ``PagedEngine._prefill_fns`` compiles one closure per bucket instead of
+    one per distinct grant length (the compile count is bounded by
+    O(#buckets) regardless of traffic).  Default: powers of two from
+    ``min_bucket``, with the top bucket capped at ``max_tokens`` (any grant
+    is at most the request's whole prompt, itself <= max_len).  ``explicit``
+    overrides the ladder; it must still cover ``max_tokens``.
+    """
+    if explicit:
+        out = tuple(sorted(set(int(b) for b in explicit)))
+        assert out[0] >= 1 and out[-1] >= max_tokens, \
+            f"explicit buckets {out} do not cover max_tokens={max_tokens}"
+        return out
+    b, out = max(1, min_bucket), []
+    while b < max_tokens:
+        out.append(b)
+        b *= 2
+    # cap the top bucket at max_tokens: no grant can exceed it, and a full
+    # power-of-two top would pad the largest grants up to ~2x
+    out.append(min(b, max_tokens))
+    return tuple(out)
+
+
+def round_to_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n (buckets ascending; asserts coverage)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise AssertionError(f"grant of {n} tokens exceeds largest bucket "
+                         f"{buckets[-1]}")
+
+
 def split_chunks(seq_len: int, iso: ISOConfig, cfg: ModelConfig, *,
                  align: int = 0, tp: int = 16, hw_name: str = "v5e"
                  ) -> Tuple[int, ...]:

@@ -1,0 +1,184 @@
+"""Paged flash-prefill kernel (Pallas/TPU): chunk queries over block tables.
+
+The prefill-side sibling of kernels/flash_decode.py.  A resumed prefill chunk
+(the ISO scheduling quantum of serving/scheduler.py) attends its request's
+page-resident KV prefix IN PLACE — no dense gather of the prefix before the
+call — walking the block table page by page with an online softmax.
+
+Layout (mirrors PagedKVCache, minus the period dim which the caller scans):
+
+    q            (B, Hq, Sq, hd)    one prefill chunk per request (Sq may be
+                                    bucket-padded; pad rows produce garbage
+                                    that the caller masks/ignores)
+    k/v pages    (N, ps, Hkv, hd)   page pool, N includes the scratch page
+    block_tables (B, MB) int32      page ids, -1 pad (sanitised to 0 here)
+    prefix_lens  (B,)    int32      valid paged-prefix tokens: key position
+                                    ``j*ps + o`` is attended iff < prefix_len
+    q_starts     (B,)    int32      absolute position of q[:, :, 0]
+
+Grid is (batch, kv_head, q_block, page) with the page dimension iterated
+sequentially (minor-most), exactly like the k-block dimension of
+kernels/flash_prefill.py.  Block tables / prefix lengths / query starts ride
+in via ``PrefetchScalarGridSpec`` scalar prefetch so the k/v BlockSpec index
+maps resolve ``page -> pool slot`` before the kernel body runs (the TPU DMA
+pattern for paged attention).  GQA is handled by blocking queries as
+(Hkv, group, block_q): every grid step attends one kv head's whole query
+group for one query block.
+
+A request's pages cover positions [0, prefix_len) contiguously, so key
+positions are pure arithmetic (``j*ps + offset``) — no gathered position
+array.  The ``prefix_len`` mask also implements the prefix-sharing rule
+(donor KV beyond the shared prefix sits at positions >= prefix_len) and
+causality against the prefix is implied (every prefix position < q_start
+<= q_pos); only the sliding window needs the per-row query position.
+
+The kernel returns the *partial* softmax state ``(out, m, l)`` over the paged
+prefix only; the caller folds the chunk's intra-call attention (earlier ISO
+chunks of the same grant + the chunk itself, causal) in with one dense
+partial-softmax merge — see layers/attention.attn_prefill_paged_partial.
+That split keeps the pool read-only inside the kernel; the chunk's KV is
+scattered to its pages afterwards by the engine.
+
+``interpret=True`` (the default) runs the same kernel under the Pallas
+interpreter — the CPU-container fallback, mirroring flash_decode.py.  On real
+TPU hardware ``ps``/``hd`` should be multiples of the (8, 128) register tile
+and ``block_q`` of the sublane count; tiny test shapes rely on interpret
+mode's laxness.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(bt_ref, len_ref, qs_ref, q_ref, k_ref, v_ref,
+                    o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                    page_size: int, block_q: int, window: int,
+                    num_pages: int):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (group, bq, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    group, bq, hd = q.shape
+    q2 = q.reshape(group * bq, hd)
+    s = jnp.dot(q2, k.T) * (hd ** -0.5)                 # (group*bq, ps)
+
+    prefix_len = len_ref[b]                             # valid prefix tokens
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # causality vs the prefix is implied: every valid prefix position is
+    # < q_start <= q_pos.  Only the window mask needs the query position.
+    mask = k_pos < prefix_len
+    if window:
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        q_pos = qs_ref[b] + iq * block_q + jax.lax.rem(row, bq)
+        mask &= k_pos > q_pos - window
+    # explicit mask multiply (not just -inf fill): a fully-masked page keeps
+    # m at NEG_INF and exp(0)=1 would otherwise leak weight per masked key
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (group*bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur) * mask
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_cur
+
+    @pl.when(j == num_pages - 1)
+    def _finish():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = out.reshape(group, bq, hd).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...].reshape(group, bq, 1).astype(m_ref.dtype)
+        l_ref[0, 0] = l.reshape(group, bq, 1).astype(l_ref.dtype)
+
+
+def flash_prefill_paged(q, k_pages, v_pages, block_tables, prefix_lens,
+                        q_starts, *, window: int = 0, block_q: int = 128,
+                        interpret: bool = True):
+    """Paged flash attention of one prefill chunk against its KV prefix.
+
+    q: (B, Hq, Sq, hd); k_pages/v_pages: (N, ps, Hkv, hd); block_tables:
+    (B, MB) int32 (-1 pad); prefix_lens: (B,) int32 valid prefix tokens;
+    q_starts: (B,) int32 absolute position of each row's first query.
+
+    Returns ``(out, m, l)`` fp32 partial softmax state over the paged prefix:
+    out (B, Hq, Sq, hd) = acc / l, m (B, Hq, Sq, 1) running max, l
+    (B, Hq, Sq, 1) running denominator.  Rows with ``prefix_lens == 0`` come
+    back as (0, NEG_INF, 0) — the caller's merge with the chunk's own
+    attention then reduces to plain causal self-attention.
+    """
+    B, Hq, Sq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+
+    block_q = min(block_q, max(8, Sq))
+    sq_p = math.ceil(Sq / block_q) * block_q
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - Sq), (0, 0)))
+    nq = sq_p // block_q
+
+    # pad table entries (-1) alias page 0; they are always masked because a
+    # request's pages cover positions [0, prefix_len) contiguously
+    bt = jnp.clip(block_tables, 0, N - 1).astype(jnp.int32)
+    qg = qp.reshape(B, Hkv, group, sq_p, hd)
+
+    kernel = functools.partial(_prefill_kernel, page_size=ps, block_q=block_q,
+                               window=window, num_pages=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,            # block_tables, prefix_lens, q_starts
+        grid=(B, Hkv, nq, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, block_q, hd),
+                         lambda b, h, i, j, bt, ln, qs: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, j, bt, ln, qs: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, j, bt, ln, qs: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, block_q, hd),
+                         lambda b, h, i, j, bt, ln, qs: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, group, block_q, 1),
+                         lambda b, h, i, j, bt, ln, qs: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, group, block_q, 1),
+                         lambda b, h, i, j, bt, ln, qs: (b, h, 0, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group * block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((group * block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((group * block_q, hd), jnp.float32),  # running acc
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, group, sq_p, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, group, sq_p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, group, sq_p, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, prefix_lens.astype(jnp.int32), q_starts.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return (out.reshape(B, Hq, sq_p, hd)[:, :, :Sq],
+            m.reshape(B, Hq, sq_p, 1)[:, :, :Sq],
+            l.reshape(B, Hq, sq_p, 1)[:, :, :Sq])

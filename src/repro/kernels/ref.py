@@ -57,6 +57,43 @@ def paged_decode_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return jnp.einsum("bhs,bshd->bhd", p, vr)
 
 
+def paged_prefill_ref(q, k_pages, v_pages, block_tables, prefix_lens,
+                      q_starts, *, window: int = 0):
+    """Oracle for kernels/flash_prefill_paged.py: gather the prefix dense,
+    full softmax, return the kernel's partial state over paged keys only.
+
+    q: (B,Hq,Sq,hd); k_pages/v_pages: (N,ps,Hkv,hd); block_tables: (B,MB)
+    int32 (-1 pad); prefix_lens: (B,) valid prefix tokens; q_starts: (B,)
+    absolute position of each row's first query.  Returns ``(out, m, l)``
+    fp32: out = acc/l (zeros where the row attends nothing), m the masked
+    row max (NEG_INF when empty), l the softmax denominator at m.
+    """
+    NEG_INF = -1e30
+    B, Hq, Sq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    group = Hq // Hkv
+    idx = jnp.clip(block_tables, 0, N - 1)
+    kd = k_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    vd = v_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    kr = jnp.repeat(kd, group, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(vd, group, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bshd->bhqs", q.astype(jnp.float32),
+                   kr) * (hd ** -0.5)
+    k_pos = jnp.arange(MB * ps, dtype=jnp.int32)[None, None, None, :]
+    mask = k_pos < prefix_lens[:, None, None, None]
+    if window:
+        q_pos = (q_starts[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
+                 )[:, None, :, None]
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqs,bshd->bhqd", p, vr) / jnp.maximum(l, 1e-30)
+    return out, m, l
+
+
 def quantize_int8_ref(x):
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)

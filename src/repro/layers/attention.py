@@ -145,26 +145,63 @@ def sdpa(q, k, v, *, q_pos, k_pos, causal: bool = True, window: int = 0,
     k,v: (B,Sk,Hkv,hd)
     q_pos: (B,Sq) int32 absolute positions; k_pos: (B,Sk).
     k_valid: optional (B,Sk) bool — cache slots actually filled.
+
+    The normalised view of ``sdpa_partial`` (acc/l; fully-masked rows -> 0).
+    """
+    out, _, _ = sdpa_partial(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                             window=window, k_valid=k_valid,
+                             group_eff=group_eff)
+    return out
+
+
+def sdpa_partial(q, k, v, *, q_pos, k_pos, causal: bool = True,
+                 window: int = 0, k_valid=None, group_eff: int = 1):
+    """``sdpa`` that returns the flash partial-softmax state instead of the
+    normalised output: ``(out, m, l)`` with out (B,Sq,Hq,hd) = acc/l fp32,
+    m/l (B,Sq,Hq,1) the running max and denominator.  Fully-masked rows come
+    back as (0, NEG_INF-ish, 0) — combining states via
+    ``merge_softmax_states`` then ignores them exactly.
     """
     B, Sq, Hq, hd = q.shape
-    Hkv = k.shape[2]
+    Sk, Hkv = k.shape[1], k.shape[2]
     assert Hq == Hkv * group_eff, (Hq, Hkv, group_eff)
     qg = q.reshape(B, Sq, Hkv, group_eff, hd)
     scale = hd ** -0.5
-    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
-    mask = jnp.ones((B, Sq, k.shape[1]), bool)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.ones((B, Sq, Sk), bool)
     if causal:
         mask &= k_pos[:, None, :] <= q_pos[:, :, None]
     if window:
         mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
     if k_valid is not None:
         mask &= k_valid[:, None, :]
-    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
-    probs = jax.nn.softmax(scores, axis=-1)
-    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows (pad) -> 0
-    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v.astype(jnp.float32))
-    return out.reshape(B, Sq, Hq, hd)
+    mask_b = mask[:, None, None]                        # (B,1,1,Sq,Sk)
+    s = jnp.where(mask_b, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)              # (B,Hkv,g,Sq,1)
+    # explicit mask multiply: a fully-masked row has s == m == -1e30 and
+    # exp(0) would otherwise leak weight 1 per masked key
+    p = jnp.exp(s - m) * mask_b
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", p, v.astype(jnp.float32))
+    out = out.reshape(B, Sq, Hq, hd) / jnp.maximum(
+        l.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, 1), 1e-30)
+    return (out, m.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, 1),
+            l.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, 1))
+
+
+def merge_softmax_states(o_a, m_a, l_a, o_b, m_b, l_b):
+    """Combine two flash partial-softmax states over disjoint key sets.
+
+    Each state is (out, m, l) as returned by ``sdpa_partial`` /
+    ``kernels.flash_prefill_paged`` (out = acc/l).  Returns the normalised
+    attention output over the union of both key sets, fp32.  A state with
+    l == 0 (nothing attended) contributes nothing.
+    """
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m) * l_a
+    wb = jnp.exp(m_b - m) * l_b
+    return (o_a * wa + o_b * wb) / jnp.maximum(wa + wb, 1e-30)
 
 
 def o_proj_partial(p: dict, attn_out) -> jnp.ndarray:
@@ -178,13 +215,17 @@ def o_proj_partial(p: dict, attn_out) -> jnp.ndarray:
 
 def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
                          start_pos, prefix_kv: Optional[Tuple] = None,
-                         prefix_pos=None, window: int = 0, causal: bool = True):
+                         prefix_pos=None, window: int = 0, causal: bool = True,
+                         k_limit=None):
     """Chunked-prefill attention.  ``start_pos``: scalar absolute position of the
     chunk's first token (static or traced).  ``prefix_kv``: (k,v) of all previous
     chunks (local shard).  ``prefix_pos``: optional (B, S_prefix) absolute position
     of each prefix slot, -1 = empty — required when the prefix comes from a paged
     cache (resumed chunked prefill), where slots are padded and slot != position.
     Without it the prefix is assumed dense and contiguous from position 0.
+    ``k_limit``: optional scalar (traced) absolute position bound — keys at
+    positions >= k_limit are masked (bucket-padded tail tokens must not be
+    attended; see grant-size bucketing in serving/paged_engine.py).
     Returns (partial_out, (k,v) of THIS chunk for the growing prefix).
     """
     B, S, _ = x.shape
@@ -206,6 +247,9 @@ def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
     else:
         k_all, v_all = k, v
         k_pos = q_pos
+    if k_limit is not None:
+        lim = k_pos < k_limit
+        k_valid = lim if k_valid is None else (k_valid & lim)
     if cfg.attn_impl == "blockwise":
         out = sdpa_blockwise(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
                              causal=causal, window=window, k_valid=k_valid,
@@ -213,6 +257,54 @@ def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
     else:
         out = sdpa(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos, causal=causal,
                    window=window, k_valid=k_valid, group_eff=layout_group)
+    return o_proj_partial(p, out), (k, v)
+
+
+def attn_prefill_paged_partial(p: dict, x, cfg: ModelConfig,
+                               layout_group: int, *, k_pages, v_pages,
+                               block_tables, prefix_lens, start_pos,
+                               intra_kv: Optional[Tuple] = None,
+                               intra_pos=None, window: int = 0, k_limit=None):
+    """Chunked-prefill attention against a PAGED KV prefix (no dense gather).
+
+    x: (B,S,D) one ISO chunk; k_pages/v_pages: (N, ps, Hkv_loc, hd) page pool
+    (local shard); block_tables: (B, MB) int32 (-1 pad); prefix_lens: (B,)
+    int32 resident prefix tokens (key position j*ps+o attended iff
+    < prefix_len — also the prefix-sharing rule: donor KV beyond the shared
+    prefix sits at positions >= prefix_len).  ``start_pos``: scalar absolute
+    position of the chunk's first token (traced).  ``intra_kv``/``intra_pos``:
+    (k, v) and positions of earlier ISO chunks WITHIN this call (not yet in
+    pages).  ``k_limit``: as in ``attn_prefill_partial`` (bucket pad mask).
+
+    The Pallas kernel (kernels/flash_prefill_paged.py) walks the block table
+    with an online softmax and returns the partial state over the paged
+    prefix; the intra-call keys (earlier chunks + the chunk itself, causal)
+    are folded in with one dense partial-softmax merge.  Returns
+    (partial_out, (k, v) of THIS chunk); the page scatter is the engine's job.
+    """
+    from repro.kernels.flash_prefill_paged import flash_prefill_paged
+    B, S, _ = x.shape
+    q_pos = (start_pos + jnp.arange(S, dtype=jnp.int32))[None, :].repeat(B, 0)
+    q, k, v = project_qkv(p, x, cfg, q_pos)
+    q_starts = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+    out_p, m_p, l_p = flash_prefill_paged(
+        q.transpose(0, 2, 1, 3), k_pages, v_pages, block_tables,
+        prefix_lens, q_starts, window=window)
+    out_p = out_p.transpose(0, 2, 1, 3)                 # (B,S,Hq,hd)
+    m_p = m_p.transpose(0, 2, 1, 3)
+    l_p = l_p.transpose(0, 2, 1, 3)
+    if intra_kv is not None:
+        ik, iv = intra_kv
+        k_all = jnp.concatenate([ik, k], axis=1)
+        v_all = jnp.concatenate([iv, v], axis=1)
+        k_pos = jnp.concatenate([intra_pos.astype(jnp.int32), q_pos], axis=1)
+    else:
+        k_all, v_all, k_pos = k, v, q_pos
+    k_valid = (k_pos < k_limit) if k_limit is not None else None
+    out_i, m_i, l_i = sdpa_partial(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
+                                   causal=True, window=window,
+                                   k_valid=k_valid, group_eff=layout_group)
+    out = merge_softmax_states(out_p, m_p, l_p, out_i, m_i, l_i)
     return o_proj_partial(p, out), (k, v)
 
 

@@ -46,6 +46,10 @@ class StageCtx:
     # request, and the (B,) bool mask of slots really decoding this step
     block_tables: Optional[jnp.ndarray] = None
     decode_mask: Optional[jnp.ndarray] = None
+    # grant-size bucketing (paged prefill): number of REAL tokens in this call
+    # (traced scalar) — call-relative positions >= valid_len are pad and must
+    # neither be attended as keys nor scatter KV.  None = no padding.
+    valid_len: Any = None
 
 
 def _n1(p, x, cfg):
@@ -89,6 +93,40 @@ def _static_zero(off) -> bool:
     return isinstance(off, int) and off == 0
 
 
+def _prefill_attn(p_attn, xn, kv_state, cache, sctx: StageCtx, start_pos, B):
+    """One chunk's prefill attention, dispatched on the cache layout.
+
+    A cache exposing ``k_pages``/``v_pages`` means the persistent prefix
+    lives in the page pool: the chunk attends it IN PLACE through the paged
+    flash-prefill kernel (block tables + prefix lengths ride in via
+    ``sctx.block_tables``/``sctx.lengths``), and only the intra-call KV
+    (``kv_state``, earlier ISO chunks of this call) is attended densely.
+    Otherwise the classic path: dense/gathered prefix via ``_resume_prefix``.
+    Returns (partial, kv_new of this chunk)."""
+    cfg = sctx.cfg
+    k_limit = None
+    if sctx.valid_len is not None:
+        k_limit = sctx.pos_offset + sctx.valid_len
+    if cache is not None and "k_pages" in cache:
+        intra_pos = None
+        if kv_state is not None:
+            intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
+            intra_pos = jnp.broadcast_to(intra[None], (B, start_pos))
+        return attn_lib.attn_prefill_paged_partial(
+            p_attn, xn, cfg, sctx.group_eff,
+            k_pages=cache["k_pages"], v_pages=cache["v_pages"],
+            block_tables=sctx.block_tables, prefix_lens=sctx.lengths,
+            start_pos=sctx.pos_offset + start_pos,
+            intra_kv=kv_state, intra_pos=intra_pos,
+            window=sctx.window, k_limit=k_limit)
+    prefix_kv, prefix_pos = _resume_prefix(kv_state, cache, sctx, start_pos, B)
+    return attn_lib.attn_prefill_partial(
+        p_attn, xn, cfg, sctx.group_eff,
+        start_pos=sctx.pos_offset + start_pos,
+        prefix_kv=prefix_kv, prefix_pos=prefix_pos, window=sctx.window,
+        k_limit=k_limit)
+
+
 def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
     cfg = sctx.cfg
     xn = _n1(p, x, cfg)
@@ -110,12 +148,8 @@ def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
         partial = attn_lib.attn_encode_partial(
             p["attn"], xn, cfg, sctx.group_eff, kv_full=seq_state)
         return partial, seq_state, {}
-    prefix_kv, prefix_pos = _resume_prefix(seq_state, cache, sctx, start_pos,
-                                           x.shape[0])
-    partial, kv_new = attn_lib.attn_prefill_partial(
-        p["attn"], xn, cfg, sctx.group_eff,
-        start_pos=sctx.pos_offset + start_pos,
-        prefix_kv=prefix_kv, prefix_pos=prefix_pos, window=sctx.window)
+    partial, kv_new = _prefill_attn(p["attn"], xn, seq_state, cache, sctx,
+                                    start_pos, x.shape[0])
     if seq_state is None:
         new_state = kv_new
     else:
@@ -168,12 +202,8 @@ def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
         return a_part + s_part, seq_state, {"kv": kv_new, "ssm": ssm_new}
     if ssm_state is None and cache is not None and "ssm" in cache:
         ssm_state = cache["ssm"]          # resumed chunked prefill carry
-    prefix_kv, prefix_pos = _resume_prefix(kv_state, cache, sctx, start_pos,
-                                           x.shape[0])
-    a_part, kv_new = attn_lib.attn_prefill_partial(
-        p["attn"], xn, cfg, sctx.group_eff,
-        start_pos=sctx.pos_offset + start_pos,
-        prefix_kv=prefix_kv, prefix_pos=prefix_pos, window=sctx.window)
+    a_part, kv_new = _prefill_attn(p["attn"], xn, kv_state, cache, sctx,
+                                   start_pos, x.shape[0])
     s_part, ssm_new = ssm_lib.ssm_partial(p["ssm"], xn, cfg.ssm, ssm_state)
     if kv_state is None:
         kv_acc = kv_new

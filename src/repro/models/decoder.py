@@ -104,6 +104,7 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
             cache_len: int = 0, remat: bool = False, unroll: bool = False,
             layer_statics=None, mode: str = "prefill",
             prefix_caches=None, pos_offset=0,
+            block_tables=None, prefix_lens=None, valid_len=None,
             return_extras: bool = False) -> Dict[str, Any]:
     """Run the stack over a full prompt — or one resumed slice of it — with the
     ISO schedule.
@@ -118,6 +119,14 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     traced scalar) is the absolute position of this call's first token.  The
     call's own chunking still happens here, so ISO overlap applies within the
     resumed slice exactly as in a monolithic prefill.
+
+    Paged resumed prefill: when ``prefix_caches`` carries page pools
+    (``k_pages``/``v_pages``) instead of a gathered dense prefix, pass
+    ``block_tables`` (B, MB) and ``prefix_lens`` (B,) so attention reads the
+    prefix in place through the paged flash-prefill kernel.  ``valid_len``
+    (traced scalar) marks how many of this call's tokens are real — the
+    bucket-padded tail beyond it is masked out of attention (grant-size
+    bucketing; see serving/paged_engine.py).
     """
     if embeds is None:
         embeds = embed_tokens(params, tokens, cfg, ctx)
@@ -143,6 +152,9 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     assert layer_statics is None or prefix_caches is None
     sctx = _stage_ctx(cfg, ctx, mode)
     sctx.pos_offset = pos_offset
+    sctx.block_tables = block_tables
+    sctx.lengths = prefix_lens
+    sctx.valid_len = valid_len
     xs_final, extras = run_stack_prefill(
         params["periods"], cfg.block_pattern, x_chunks, tuple(starts), sctx, ctx,
         layer_statics=layer_statics if prefix_caches is None else prefix_caches,

@@ -39,12 +39,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.config import Config, ServingConfig
+from repro.core.chunking import grant_buckets, round_to_bucket
 from repro.core.overlap import AxisCtx
+from repro.layers import embeddings as emb_lib
 from repro.models import api
 from repro.models.decoder import cache_specs, decoder_param_specs
 from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
-                                   PrefixCache, gather_pages, gather_positions,
-                                   pages_for, token_page_coords)
+                                   PrefixCache, pages_for, token_page_coords)
 from repro.serving.requests import Request, RequestState
 from repro.serving.sampler import sample
 from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
@@ -89,9 +90,23 @@ class PagedEngine:
                                dtype=cache_dtype)
         self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=self.tp,
                                             dtype=cache_dtype)
+        # grant-size bucketing: pad every prefill grant up to a bucket length
+        # so compilation is keyed on the bucket — O(#buckets) compiled
+        # closures instead of one per distinct grant length.  Attention-only
+        # stacks (pad tokens are masked out of attention and KV scatter, but
+        # would advance recurrent SSM/xLSTM state), and no patch-carrying
+        # models: patch grants run unbucketed, which would break the
+        # max_prefill_compiles() bound their closures share.
+        self._buckets = None
+        if sv.grant_bucketing and self.cfg.num_patches == 0 and \
+                all(k in ("attn_mlp", "attn_moe")
+                    for k in self.cfg.block_pattern):
+            self._buckets = grant_buckets(sv.max_len, sv.min_grant_bucket,
+                                          sv.grant_buckets)
         self.scheduler = TokenBudgetScheduler(
             policy=sv.scheduler_policy,
-            prefill_token_budget=sv.prefill_token_budget)
+            prefill_token_budget=sv.prefill_token_budget,
+            grant_buckets=self._buckets)
         # copy-on-write prefix sharing: attention-only stacks (recurrent
         # families carry per-slot SSM/xLSTM state that pages cannot share)
         self.prefix_cache: Optional[PrefixCache] = None
@@ -112,7 +127,7 @@ class PagedEngine:
                         "prefill_calls": 0, "steps": 0, "preemptions": 0,
                         "ttft_sum": 0.0, "ttft_n": 0,
                         "prefix_shared_tokens": 0, "cow_copies": 0,
-                        "peak_used_pages": 0}
+                        "peak_used_pages": 0, "prefill_pad_tokens": 0}
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -280,7 +295,7 @@ class PagedEngine:
         in_specs = (p_specs, P(None, None),
                     P(None, None, None) if has_patches else None,
                     self._kv_specs(), self._state_specs(),
-                    P(None, None), P())
+                    P(None, None), P(), P())
         out_specs = (P(None, "model"), self._kv_specs(), self._state_specs())
         sm = compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)
@@ -298,27 +313,35 @@ class PagedEngine:
                               out_specs=out_specs, check_vma=False)
         return jax.jit(sm)
 
-    def _prefix_from_pages(self, kv_arrays, states_slot, bt_row, start):
-        """Per-position prefix caches for a resumed prefill (batch 1).
+    def _paged_prefix(self, kv_arrays, states_slot):
+        """Per-position prefill caches exposing the page pools IN PLACE.
 
-        Slots at positions >= ``start`` are masked invalid: with prefix/page
-        sharing the tail of a partially-shared page still holds the DONOR's
-        KV beyond the shared prefix, which this request must not attend."""
-        pos_dense = gather_positions(kv_arrays["pos"], bt_row)      # (1, L)
-        pos_dense = jnp.where(pos_dense < start, pos_dense, -1)
+        The paged flash-prefill kernel (kernels/flash_prefill_paged.py) reads
+        the prefix straight through the block table — no dense gather.  The
+        kernel's ``k_pos < prefix_len`` masking also covers prefix sharing
+        (the tail of a partially-shared page holds the DONOR's KV at
+        positions >= the shared length, which this request must not attend).
+        Recurrent positions carry their per-slot SSM/xLSTM state."""
         prefix, kv_i = [], 0
         for i, kind in enumerate(self.cfg.block_pattern):
             c = dict(states_slot[i])
             if i in self.kv.kv_positions:
-                k = gather_pages(kv_arrays["k"][kv_i], bt_row)
-                c["k"], c["v"] = k, gather_pages(kv_arrays["v"][kv_i], bt_row)
-                c["pos"] = jnp.broadcast_to(pos_dense[None],
-                                            (k.shape[0],) + pos_dense.shape)
+                c["k_pages"] = kv_arrays["k"][kv_i]
+                c["v_pages"] = kv_arrays["v"][kv_i]
                 kv_i += 1
             prefix.append(c)
         return tuple(prefix)
 
     def _get_prefill(self, n_text: int, n_patches: int, resumed: bool):
+        """Jitted prefill closure for a (padded) grant shape.
+
+        ``n_text`` is the BUCKET-PADDED text length: with bucketing on, the
+        key space is (bucket, patches, fresh|resumed) — O(#buckets) compiled
+        closures total, regardless of how many distinct grant lengths the
+        traffic produces.  The closure takes the REAL token count ``n_real``
+        as a traced scalar: pad-tail tokens are masked out of attention
+        (``valid_len`` -> StageCtx), scatter to the scratch page, and the
+        sampled logits come from the last real position."""
         key = (n_text, n_patches, resumed)
         if key in self._prefill_fns:
             return self._prefill_fns[key]
@@ -326,17 +349,27 @@ class PagedEngine:
         T = n_text + n_patches
         scratch = self.kv.scratch_page
 
-        def fn(params, tokens, patches, kv_arrays, states_slot, bt_row, start):
+        def fn(params, tokens, patches, kv_arrays, states_slot, bt_row, start,
+               n_real):
             batch = {"tokens": tokens}
             if n_patches:
                 batch["patches"] = patches
-            prefix = self._prefix_from_pages(kv_arrays, states_slot, bt_row,
-                                             start) if resumed else None
-            out = api.prefill(params, cfg, ctx, iso, batch, logits_mode="last",
-                              prefix_caches=prefix, pos_offset=start,
-                              return_extras=True)
+            prefix = self._paged_prefix(kv_arrays, states_slot) \
+                if resumed else None
+            out = api.prefill(
+                params, cfg, ctx, iso, batch, logits_mode="none",
+                prefix_caches=prefix, pos_offset=start,
+                block_tables=bt_row if resumed else None,
+                prefix_lens=jnp.reshape(start, (1,)) if resumed else None,
+                valid_len=n_real, return_extras=True)
+            # logits of the last REAL token (the pad tail carries garbage)
+            h_last = jax.lax.dynamic_slice_in_dim(out["hidden"], n_real - 1, 1,
+                                                  axis=1)
+            logits_last = emb_lib.lm_head_local(params["embed"], h_last)[:, 0]
             positions = start + jnp.arange(T, dtype=jnp.int32)
             page, off = token_page_coords(positions, bt_row[0], self.ps, scratch)
+            # pad-tail tokens must not scatter KV into live pages
+            page = jnp.where(jnp.arange(T) < n_real, page, scratch)
             new_kv = dict(kv_arrays)
             ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
             new_states = []
@@ -352,10 +385,25 @@ class PagedEngine:
                                    if sk in ex})
             new_kv["k"], new_kv["v"] = tuple(ks), tuple(vs)
             new_kv["pos"] = kv_arrays["pos"].at[page, off].set(positions)
-            return out["logits_local"][:, -1], new_kv, tuple(new_states)
+            return logits_last, new_kv, tuple(new_states)
 
         self._prefill_fns[key] = self._wrap_prefill(fn, n_patches > 0)
         return self._prefill_fns[key]
+
+    # ---- compile accounting (CI compile-guard lane) -------------------
+    def prefill_compile_count(self) -> int:
+        """Total prefill-closure compilations so far (one jit cache entry per
+        compiled executable)."""
+        return sum(compat.jit_cache_size(fn)
+                   for fn in self._prefill_fns.values())
+
+    def max_prefill_compiles(self) -> Optional[int]:
+        """Upper bound on prefill compilations under bucketing: one closure
+        per (bucket, fresh|resumed) pair.  None when bucketing is off (one
+        closure per distinct grant length — unbounded under mixed traffic)."""
+        if self._buckets is None:
+            return None
+        return 2 * len(self._buckets)
 
     def _get_decode(self):
         if self._decode_fn is not None:
@@ -414,9 +462,19 @@ class PagedEngine:
     # ------------------------------------------------------------------
     # step phases
     # ------------------------------------------------------------------
+    def _pad_len(self, st: RequestState, n_tokens: int) -> int:
+        """Bucket-rounded forward-call length for a grant (== n_tokens when
+        bucketing is off or the request carries patch embeddings)."""
+        if self._buckets is None or st.request.patches is not None:
+            return n_tokens
+        return round_to_bucket(n_tokens, self._buckets)
+
     def _run_grant(self, st: RequestState, start: int, n_tokens: int,
-                   last: bool) -> Optional[int]:
-        """Execute one prefill grant; returns the sampled token if ``last``."""
+                   padded: int, last: bool) -> Optional[int]:
+        """Execute one prefill grant; returns the sampled token if ``last``.
+
+        ``padded``: bucket length of the forward call (>= n_tokens); the
+        pad tail is zero tokens, masked out of attention and KV scatter."""
         req = st.request
         slot = st.slot
         n_patches = self._eff_extra(req) if start == 0 else 0
@@ -426,23 +484,26 @@ class PagedEngine:
         t0 = max(0, start - self._eff_extra(req)) if req.patches is not None \
             else start
         n_text = n_tokens - n_patches
-        text = toks_all[t0:t0 + n_text]
-        tokens = jnp.asarray(text[None].astype(np.int32))
+        buf = np.zeros(padded - n_patches, np.int32)
+        buf[:n_text] = toks_all[t0:t0 + n_text]
+        tokens = jnp.asarray(buf[None])
         patches = jnp.asarray(req.patches[None]) if n_patches else None
 
         bt_row = jnp.asarray(self.alloc.block_table(req.rid,
                                                     self.max_blocks)[None])
         states_slot = jax.tree_util.tree_map(
             lambda a: a[:, slot:slot + 1], self.states)
-        fn = self._get_prefill(n_text, n_patches, resumed=start > 0)
+        fn = self._get_prefill(padded - n_patches, n_patches,
+                               resumed=start > 0)
         t0_wall = time.perf_counter()
         with self._mesh_ctx():
             logits_last, new_kv, new_states = fn(
                 self.params, tokens, patches, self.kv.arrays, states_slot,
-                bt_row, jnp.int32(start))
+                bt_row, jnp.int32(start), jnp.int32(n_tokens))
         jax.block_until_ready(logits_last)
         self.metrics["prefill_s"] += time.perf_counter() - t0_wall
         self.metrics["prefill_tokens"] += n_tokens
+        self.metrics["prefill_pad_tokens"] += padded - n_tokens
         self.metrics["prefill_calls"] += 1
 
         self.kv.arrays = new_kv
@@ -504,7 +565,17 @@ class PagedEngine:
                 raise RuntimeError(
                     f"page pool too small for request {g.rid}'s prefill chunk "
                     f"even after evicting; increase ServingConfig.num_pages")
-            tok = self._run_grant(st, start, end - start, g.last)
+            # the scheduler owns grant rounding (g.padded); re-round only
+            # when same-step prefix sharing shrank the grant, and never pad
+            # patch-carrying grants (the scheduler is model-agnostic)
+            n = end - start
+            if st.request.patches is not None:
+                padded = n
+            elif start == g.start and n == g.n_tokens:
+                padded = g.padded or n
+            else:
+                padded = self._pad_len(st, n)
+            tok = self._run_grant(st, start, n, padded, g.last)
             if tok is not None:
                 events.append((g.rid, tok))
                 if st.done:

@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.config import ISOConfig, ModelConfig
-from repro.core.chunking import split_chunks
+from repro.core.chunking import round_to_bucket, split_chunks
 
 
 @dataclass
@@ -29,6 +29,9 @@ class PrefillGrant:
     start: int                 # tokens already prefilled (absolute offset)
     n_tokens: int              # tokens granted this step
     last: bool                 # True if this grant finishes the prompt
+    padded: int = 0            # bucket-rounded grant length (== n_tokens
+                               # when bucketing is off); the engine pads the
+                               # forward call to this length and masks the tail
 
 
 def plan_chunks(prompt_len: int, iso: ISOConfig, cfg: ModelConfig,
@@ -46,11 +49,16 @@ class TokenBudgetScheduler:
     owns ordering, budget accounting and victim selection, so its properties
     are testable without a model."""
 
-    def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512):
+    def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512,
+                 grant_buckets: Optional[Tuple[int, ...]] = None):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown scheduler policy {policy!r}")
         self.policy = policy
         self.budget = max(1, prefill_token_budget)
+        # grant-size bucketing: every grant's forward-call length is rounded
+        # up to a bucket so the engine's compiled-prefill count stays
+        # O(#buckets).  None = no bucketing (padded == n_tokens).
+        self.grant_buckets = tuple(grant_buckets) if grant_buckets else None
         self._arrival: Dict[int, int] = {}
         self._priority: Dict[int, int] = {}
         self._clock = 0
@@ -122,8 +130,11 @@ class TokenBudgetScheduler:
             if take == 0:
                 continue                      # budget exhausted for non-head
             remaining = max(0, remaining - take)
+            padded = take if self.grant_buckets is None else \
+                round_to_bucket(take, self.grant_buckets)
             grants.append(PrefillGrant(rid=rid, start=done, n_tokens=take,
-                                       last=done + take >= ends[-1]))
+                                       last=done + take >= ends[-1],
+                                       padded=padded))
             if remaining == 0:
                 break
         return grants

@@ -1,0 +1,78 @@
+"""CI compile-guard lane: prefill compilation count stays O(#buckets).
+
+Runs the paged engine over a mixed-length trace with many distinct prompt
+(and therefore grant) lengths and asserts, via a real jit-cache compile
+counter (compat.jit_cache_size), that
+
+  * total prefill compilations <= the engine's published bound
+    (2 * #buckets: one closure per (bucket, fresh|resumed) pair);
+  * bucketing actually collapsed shapes (compilations < distinct prompt
+    lengths in the trace);
+  * each compiled closure was compiled exactly ONCE (a traced-vs-static
+    regression — e.g. a Python int sneaking into the closure key — would
+    recompile an existing key and trip this);
+  * the single decode closure also compiled exactly once.
+
+This is the regression guard for the grant-size bucketing tentpole: before
+bucketing, `_prefill_fns` compiled one closure per distinct grant length.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import iso_cfg, tiny_dense
+from repro import compat
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+
+def _run_trace(lengths, *, grant_bucketing=True, new=3):
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso,
+                    serving=ServingConfig(page_size=8, max_batch=4,
+                                          max_len=160,
+                                          prefill_token_budget=24,
+                                          grant_bucketing=grant_bucketing))
+    eng = PagedEngine(config, params)
+    rng = np.random.default_rng(0)
+    for n in lengths:
+        eng.add_request(Request(
+            prompt=rng.integers(2, 64, n).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=new, eos_id=-1)))
+    out = eng.run_until_complete()
+    assert len(out) == len(lengths), "trace did not complete"
+    return eng
+
+
+def test_prefill_compiles_bounded_by_buckets():
+    # 14 distinct prompt lengths, straddling bucket boundaries, several long
+    # enough to force resumed grants under the 24-token budget
+    lengths = (7, 9, 12, 15, 16, 17, 23, 31, 33, 41, 55, 63, 70, 90)
+    eng = _run_trace(lengths)
+    bound = eng.max_prefill_compiles()
+    assert bound is not None, "bucketing unexpectedly disabled"
+    compiles = eng.prefill_compile_count()
+    assert compiles <= bound, \
+        f"{compiles} prefill compilations exceed the bucket bound {bound}"
+    assert compiles < len(set(lengths)), \
+        "bucketing failed to collapse distinct grant lengths " \
+        f"({compiles} compiles for {len(set(lengths))} lengths)"
+    # far more grants ran than closures compiled (the whole point)
+    assert eng.metrics["prefill_calls"] > compiles
+    # no key recompiled: every cache holds exactly one executable
+    for key, fn in eng._prefill_fns.items():
+        assert compat.jit_cache_size(fn) == 1, \
+            f"prefill closure {key} recompiled"
+    assert compat.jit_cache_size(eng._decode_fn) == 1, "decode recompiled"
+
+
+def test_unbucketed_engine_reports_no_bound():
+    eng = _run_trace((9, 17, 33), grant_bucketing=False)
+    assert eng.max_prefill_compiles() is None
+    assert eng.metrics["prefill_pad_tokens"] == 0

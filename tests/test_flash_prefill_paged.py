@@ -1,0 +1,346 @@
+"""Paged flash-prefill kernel parity + grant-size bucketing equivalence.
+
+Three layers of checking:
+  * kernel vs the pure-jnp oracle (kernels/ref.paged_prefill_ref) across page
+    sizes, boundary prefix lengths (chunk == page, chunk straddling pages),
+    pos_offset > 0, fp32/bf16 pools and sliding windows;
+  * layer level: ``attn_prefill_paged_partial`` (kernel + dense intra merge)
+    vs ``attn_prefill_partial`` fed the densely GATHERED prefix — including
+    bucket-padded tails (``k_limit``) and intra-call chunk KV;
+  * engine level: bucketed paged prefill emits token streams identical to the
+    dense unbucketed engine (deterministic boundary grid + a hypothesis
+    random walk), and resumed grants never touch the dense prefix gather.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import iso_cfg, tiny_dense
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.kernels.flash_prefill_paged import flash_prefill_paged
+from repro.kernels.ref import paged_prefill_ref
+from repro.layers import attention as attn_lib
+from repro.layers.heads import head_layout
+from repro.models import api
+from repro.serving import Engine, PagedEngine, Request
+from repro.serving.kvcache import gather_pages, gather_positions
+from repro.serving.requests import SamplingParams
+
+
+def _make_paged(rng, prefix_lens, page_size, hkv, hd, num_pages, dtype):
+    """Random page pool + block tables holding ``prefix_lens[b]`` tokens."""
+    B = len(prefix_lens)
+    max_blocks = -(-max(max(prefix_lens), 1) // page_size) + 1
+    k_pages = np.zeros((num_pages + 1, page_size, hkv, hd), np.float32)
+    v_pages = np.zeros_like(k_pages)
+    bt = np.full((B, max_blocks), -1, np.int32)
+    free = list(range(num_pages))
+    for b, L in enumerate(prefix_lens):
+        for blk in range(-(-L // page_size)):
+            pg = free.pop()
+            bt[b, blk] = pg
+            # fill the WHOLE page: tokens beyond the prefix are poison the
+            # prefix_len mask must hide (the prefix-sharing donor-tail rule)
+            k_pages[pg] = rng.standard_normal((page_size, hkv, hd))
+            v_pages[pg] = rng.standard_normal((page_size, hkv, hd))
+    return (jnp.asarray(k_pages, dtype), jnp.asarray(v_pages, dtype),
+            jnp.asarray(bt), jnp.asarray(np.asarray(prefix_lens, np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("page_size", [8, 16])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_kernel_page_boundary_grid(page_size, dtype, tol):
+    rng = np.random.default_rng(0)
+    ps = page_size
+    prefix_lens = [0, 1, ps - 1, ps, ps + 1, 3 * ps - 2, 2 * ps]
+    hq, hkv, hd = 4, 2, 16
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=32, dtype=dtype)
+    for Sq in (ps, ps + 3):                   # chunk == page and straddling
+        q = jnp.asarray(rng.standard_normal((len(prefix_lens), hq, Sq, hd)),
+                        dtype)
+        out, m, l = flash_prefill_paged(q, k_pages, v_pages, bt, lens, lens,
+                                        block_q=8)
+        ro, rm, rl = paged_prefill_ref(q, k_pages, v_pages, bt, lens, lens)
+        assert float(jnp.max(jnp.abs(out - ro))) < tol
+        assert float(jnp.max(jnp.abs(l - rl))) < tol * 10
+        # empty-prefix rows return the neutral state (0, NEG_INF, 0)
+        assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+        assert float(l[0].max()) == 0.0
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_kernel_sliding_window(window):
+    rng = np.random.default_rng(1)
+    ps, hq, hkv, hd = 8, 4, 4, 16
+    prefix_lens = [3, 11, 24, 17]
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=24, dtype=jnp.float32)
+    Sq = 6
+    q = jnp.asarray(rng.standard_normal((len(prefix_lens), hq, Sq, hd)),
+                    jnp.float32)
+    # queries start right after the prefix (the resumed-grant layout)
+    out, _, _ = flash_prefill_paged(q, k_pages, v_pages, bt, lens, lens,
+                                    window=window, block_q=8)
+    ro, _, _ = paged_prefill_ref(q, k_pages, v_pages, bt, lens, lens,
+                                 window=window)
+    assert float(jnp.max(jnp.abs(out - ro))) < 1e-5
+
+
+def test_kernel_pos_offset_within_grant():
+    """The second ISO chunk of a grant starts pos_offset + chunk_start tokens
+    in; its window/position masking must use the true absolute positions."""
+    rng = np.random.default_rng(2)
+    ps, hq, hkv, hd = 8, 2, 2, 16
+    prefix_lens = [13, 21]
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=16, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((2, hq, 5, hd)), jnp.float32)
+    q_starts = lens + 7                       # mid-call chunk offset
+    out, _, _ = flash_prefill_paged(q, k_pages, v_pages, bt, lens, q_starts,
+                                    window=9, block_q=8)
+    ro, _, _ = paged_prefill_ref(q, k_pages, v_pages, bt, lens, q_starts,
+                                 window=9)
+    assert float(jnp.max(jnp.abs(out - ro))) < 1e-5
+
+
+def test_merge_softmax_states_matches_full_softmax():
+    """Splitting the key set and merging partial states == one softmax."""
+    rng = np.random.default_rng(3)
+    B, Sq, Hq, hd, Sk = 2, 5, 4, 16, 12
+    q = jnp.asarray(rng.standard_normal((B, Sq, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sk, Hq, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sk, Hq, hd)), jnp.float32)
+    q_pos = jnp.broadcast_to(Sk + jnp.arange(Sq)[None], (B, Sq)).astype(
+        jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk)).astype(jnp.int32)
+    full = attn_lib.sdpa(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=True)
+    cut = 7
+    oa, ma, la = attn_lib.sdpa_partial(q, k[:, :cut], v[:, :cut], q_pos=q_pos,
+                                       k_pos=k_pos[:, :cut], causal=True)
+    ob, mb, lb = attn_lib.sdpa_partial(q, k[:, cut:], v[:, cut:], q_pos=q_pos,
+                                       k_pos=k_pos[:, cut:], causal=True)
+    merged = attn_lib.merge_softmax_states(oa, ma, la, ob, mb, lb)
+    assert float(jnp.max(jnp.abs(merged - full))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# layer level: paged path == dense-gathered path
+# ---------------------------------------------------------------------------
+
+def _layer_oracle_pair(rng, *, prefix_len, S_chunk, n_pad=0, window=0,
+                       intra=0):
+    """Build matched inputs for the paged and dense-gathered prefill paths."""
+    cfg = tiny_dense(vocab_size=32, sliding_window=window)
+    layout_group = cfg.num_heads // cfg.num_kv_heads
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = 8
+    k_pages, v_pages, bt, lens = _make_paged(rng, [prefix_len], ps, hkv, hd,
+                                             num_pages=16, dtype=jnp.float32)
+    p = attn_lib.init_attention(
+        jax.random.PRNGKey(0), cfg,
+        head_layout(cfg.num_heads, cfg.num_kv_heads, 1), dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, S_chunk, cfg.d_model)) * 0.2,
+                    jnp.float32)
+    return cfg, layout_group, p, x, k_pages, v_pages, bt, lens, ps
+
+
+@pytest.mark.parametrize("prefix_len,S_chunk,n_pad,window",
+                         [(8, 8, 0, 0),        # chunk == page
+                          (13, 11, 0, 0),      # straddling pages
+                          (13, 16, 5, 0),      # bucket-padded tail
+                          (19, 9, 3, 12)])     # window + pad
+def test_layer_paged_equals_dense_gather(prefix_len, S_chunk, n_pad, window):
+    rng = np.random.default_rng(4)
+    cfg, group, p, x, k_pages, v_pages, bt, lens, ps = _layer_oracle_pair(
+        rng, prefix_len=prefix_len, S_chunk=S_chunk, window=window)
+    start = jnp.int32(prefix_len)
+    n_real = S_chunk - n_pad
+    k_limit = (start + n_real) if n_pad else None
+
+    paged, kv_paged = attn_lib.attn_prefill_paged_partial(
+        p, x, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, prefix_lens=lens, start_pos=start,
+        window=window, k_limit=k_limit)
+
+    # oracle: gather the prefix dense (the pre-kernel engine path)
+    pos_pages = jnp.full(k_pages.shape[:2], -1, jnp.int32)
+    for blk in range(-(-prefix_len // ps)):
+        n = min(ps, prefix_len - blk * ps)
+        pos_pages = pos_pages.at[bt[0, blk], :n].set(
+            blk * ps + jnp.arange(n, dtype=jnp.int32))
+    kd = gather_pages(k_pages[None], bt)[0]
+    vd = gather_pages(v_pages[None], bt)[0]
+    posd = gather_positions(pos_pages, bt)
+    posd = jnp.where(posd < prefix_len, posd, -1)
+    dense, kv_dense = attn_lib.attn_prefill_partial(
+        p, x, cfg, group, start_pos=start, prefix_kv=(kd, vd),
+        prefix_pos=posd, window=window, k_limit=k_limit)
+
+    real = np.s_[:, :n_real]
+    assert float(jnp.max(jnp.abs(paged[real] - dense[real]))) < 1e-4
+    assert float(jnp.max(jnp.abs(kv_paged[0] - kv_dense[0]))) < 1e-5
+
+
+def test_layer_intra_call_chunk_kv():
+    """Second ISO chunk of a grant: paged prefix via kernel + first chunk's
+    KV attended densely must equal the all-dense reference."""
+    rng = np.random.default_rng(5)
+    prefix_len, S1, S2 = 11, 6, 7
+    cfg, group, p, x_all, k_pages, v_pages, bt, lens, ps = _layer_oracle_pair(
+        rng, prefix_len=prefix_len, S_chunk=S1 + S2)
+    x1, x2 = x_all[:, :S1], x_all[:, S1:]
+    start = jnp.int32(prefix_len)
+
+    _, kv1 = attn_lib.attn_prefill_paged_partial(
+        p, x1, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, prefix_lens=lens, start_pos=start)
+    intra_pos = (prefix_len + jnp.arange(S1, dtype=jnp.int32))[None]
+    paged2, _ = attn_lib.attn_prefill_paged_partial(
+        p, x2, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, prefix_lens=lens, start_pos=start + S1,
+        intra_kv=kv1, intra_pos=intra_pos)
+
+    pos_pages = jnp.full(k_pages.shape[:2], -1, jnp.int32)
+    for blk in range(-(-prefix_len // ps)):
+        n = min(ps, prefix_len - blk * ps)
+        pos_pages = pos_pages.at[bt[0, blk], :n].set(
+            blk * ps + jnp.arange(n, dtype=jnp.int32))
+    kd = gather_pages(k_pages[None], bt)[0]
+    vd = gather_pages(v_pages[None], bt)[0]
+    posd = gather_positions(pos_pages, bt)
+    _, kv1_d = attn_lib.attn_prefill_partial(
+        p, x1, cfg, group, start_pos=start, prefix_kv=(kd, vd),
+        prefix_pos=posd)
+    dense2, _ = attn_lib.attn_prefill_partial(
+        p, x2, cfg, group, start_pos=start + S1,
+        prefix_kv=(jnp.concatenate([kd, kv1_d[0]], 1),
+                   jnp.concatenate([vd, kv1_d[1]], 1)),
+        prefix_pos=jnp.concatenate([posd, intra_pos], 1))
+    assert float(jnp.max(jnp.abs(paged2 - dense2))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# engine level: bucketed paged == dense unbucketed, no dense gather
+# ---------------------------------------------------------------------------
+
+def _dense_ref(cfg, iso, params, prompts, new):
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso)
+    eng = Engine(config, params, mesh=None, max_batch=2, max_len=160,
+                 bucket=16)
+    rids = [eng.add_request(Request(
+        prompt=p.copy(), sampling=SamplingParams(max_new_tokens=new,
+                                                 eos_id=-1)))
+        for p in prompts]
+    out = eng.run_until_complete()
+    return [out[r] for r in rids]
+
+
+def _paged_run(cfg, iso, params, prompts, new, **sv_kw):
+    sv = dict(page_size=8, max_batch=2, max_len=160, prefill_token_budget=16)
+    sv.update(sv_kw)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso, serving=ServingConfig(**sv))
+    eng = PagedEngine(config, params)
+    rids = [eng.add_request(Request(
+        prompt=p.copy(), sampling=SamplingParams(max_new_tokens=new,
+                                                 eos_id=-1)))
+        for p in prompts]
+    out = eng.run_until_complete()
+    return [out[r] for r in rids], eng
+
+
+def test_engine_bucketed_matches_dense_boundary_lengths():
+    """Grant lengths hitting bucket boundaries exactly, one below, one above,
+    and resumed mid-bucket grants — all must match the dense stream."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(6)
+    lengths = (16, 15, 17, 32, 33, 70, 7)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in lengths]
+    ref = _dense_ref(cfg, iso, params, prompts, new=5)
+    got, eng = _paged_run(cfg, iso, params, prompts, new=5)
+    assert got == ref
+    assert eng._buckets is not None
+    assert eng.metrics["prefill_pad_tokens"] > 0, "bucketing never padded"
+
+
+def test_engine_bucketing_off_still_matches():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (23, 41)]
+    ref = _dense_ref(cfg, iso, params, prompts, new=4)
+    got, eng = _paged_run(cfg, iso, params, prompts, new=4,
+                          grant_bucketing=False)
+    assert got == ref
+    assert eng._buckets is None
+    assert eng.metrics["prefill_pad_tokens"] == 0
+
+
+def test_resumed_grants_never_dense_gather(monkeypatch):
+    """The paged prefill kernel replaced the per-grant dense prefix gather;
+    a resumed grant calling gather_pages again would be a regression."""
+    import repro.serving.kvcache as kvcache_mod
+
+    def _boom(*a, **k):
+        raise AssertionError("resumed prefill called the dense prefix gather")
+
+    monkeypatch.setattr(kvcache_mod, "gather_pages", _boom)
+    monkeypatch.setattr(kvcache_mod, "gather_positions", _boom)
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(2, 64, 70).astype(np.int32)]   # forces resume
+    got, eng = _paged_run(cfg, iso, params, prompts, new=3)
+    assert len(got[0]) == 3
+    resumed_keys = [k for k in eng._prefill_fns if k[2]]
+    assert resumed_keys, "workload never exercised a resumed grant"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis random walk (skipped when hypothesis is missing, like
+# test_paged_props.py — CI installs it; guarded per-test so the rest of this
+# module still runs without it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                            # pragma: no cover - env dep
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(st.integers(min_value=3, max_value=90), min_size=1,
+                    max_size=4),
+           st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def test_random_walk_bucketed_paged_equals_dense(lengths, seed):
+        """Property: for ANY mixed-length workload, paged-bucketed prefill
+        emits token streams identical to dense unbucketed prefill."""
+        cfg = tiny_dense(vocab_size=64)
+        iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+        params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                                 dtype=jnp.float32)
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(2, 64, n).astype(np.int32) for n in lengths]
+        ref = _dense_ref(cfg, iso, params, prompts, new=3)
+        got, _ = _paged_run(cfg, iso, params, prompts, new=3)
+        assert got == ref
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_walk_bucketed_paged_equals_dense():
+        pass

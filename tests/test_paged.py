@@ -126,6 +126,23 @@ def test_scheduler_priority_policy_orders_and_evicts():
     assert s.pick_victim([], protect=[]) is None
 
 
+def test_scheduler_grant_bucketing_rounds_padded():
+    """With buckets, every grant's forward-call length (``padded``) is the
+    smallest bucket >= n_tokens; without, padded == n_tokens."""
+    s = TokenBudgetScheduler("fcfs", prefill_token_budget=64,
+                             grant_buckets=(16, 32, 64))
+    for rid in (1, 2):
+        s.add(rid)
+    grants = s.grant_prefill([(1, 0, (8, 9)), (2, 0, (24,))])
+    by_rid = {g.rid: g for g in grants}
+    assert by_rid[1].n_tokens == 17 and by_rid[1].padded == 32
+    assert by_rid[2].n_tokens == 24 and by_rid[2].padded == 32
+    plain = TokenBudgetScheduler("fcfs", prefill_token_budget=64)
+    plain.add(1)
+    (g,) = plain.grant_prefill([(1, 0, (8, 9))])
+    assert g.padded == g.n_tokens == 17
+
+
 def test_scheduler_fcfs_fairness_across_steps():
     """Every waiting request is eventually granted (no starvation)."""
     s = TokenBudgetScheduler("fcfs", prefill_token_budget=8)
