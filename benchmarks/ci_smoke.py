@@ -58,6 +58,14 @@ def main(argv=None) -> None:
                 check=True, env=dict(os.environ))
             with open(path) as f:
                 ledger = json.load(f)
+    # speculative accept rate as a first-class field so the per-push artifact
+    # tracks it without parsing derived strings
+    accepted_per_call = 0.0
+    for row in rows:
+        if row["name"] == "engine/speculative":
+            for part in row["derived"].split(";"):
+                if part.startswith("accepted_per_call="):
+                    accepted_per_call = float(part.split("=", 1)[1])
     doc = {
         "schema": "bench-smoke-v1",
         "env": {"python": platform.python_version(),
@@ -65,6 +73,7 @@ def main(argv=None) -> None:
                 "jax": jax.__version__,
                 "backend": jax.default_backend()},
         "wall_s": round(time.perf_counter() - t0, 2),
+        "accepted_per_call": accepted_per_call,
         "engine": rows,
         "perf_ledger": ledger,
     }

@@ -43,21 +43,28 @@ def _run(cfg, iso, n_req=3, plen=96, new=8):
 
 
 def _run_paged(cfg, iso, params, *, lengths, new=8, budget=48, page_size=16,
-               max_len=0, shared_prefix=0, prefix_sharing=True):
+               max_len=0, shared_prefix=0, prefix_sharing=True, spec_k=0,
+               repetitive=False):
     max_len = max_len or (max(lengths) + new + 8)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
                     iso=iso,
                     serving=ServingConfig(page_size=page_size, max_batch=2,
                                           max_len=max_len,
                                           prefill_token_budget=budget,
-                                          prefix_sharing=prefix_sharing))
+                                          prefix_sharing=prefix_sharing,
+                                          spec_k=spec_k))
     eng = PagedEngine(config, params)
     rng = np.random.default_rng(0)
     system = rng.integers(2, cfg.vocab_size, shared_prefix).astype(np.int32) \
         if shared_prefix else None
     rids, peak_pages = [], 0
     for n in lengths:
-        prompt = rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+        if repetitive:
+            # looped base phrase: the bigram self-draft gets real acceptances
+            base = rng.integers(2, cfg.vocab_size, 6).astype(np.int32)
+            prompt = np.tile(base, -(-n // len(base)))[:n]
+        else:
+            prompt = rng.integers(2, cfg.vocab_size, n).astype(np.int32)
         if system is not None:
             prompt = np.concatenate([system, prompt[:max(n - len(system), 1)]])
         rids.append(eng.add_request(Request(
@@ -152,3 +159,23 @@ def run(emit):
          f"shared_tokens={m_on['prefix_shared_tokens']};"
          f"cow_copies={m_on['cow_copies']};tokens_equal=True")
     assert peak_on < peak_off, "sharing saved no pages on a shared workload"
+
+    # ---- speculative decoding: K-token verify through the paged kernel ----
+    # repetitive prompts so the bigram self-draft actually hits; the spec
+    # stream must be token-identical to the plain greedy stream
+    sp_lengths, sp_new = (48, 48), 24
+    outs_plain, wall_plain, _, _ = _run_paged(
+        cfg, iso2, params, lengths=sp_lengths, new=sp_new, repetitive=True)
+    outs_spec, wall_spec, eng_spec, _ = _run_paged(
+        cfg, iso2, params, lengths=sp_lengths, new=sp_new, repetitive=True,
+        spec_k=3)
+    assert outs_spec == outs_plain, "speculation changed generated tokens!"
+    m_sp = eng_spec.metrics
+    apc = eng_spec.accepted_per_call()
+    assert m_sp["spec_calls"] > 0 and apc > 1.0, \
+        f"no speculative speedup on repetitive prompts: {m_sp}"
+    emit("engine/speculative", wall_spec * 1e6,
+         f"spec_k=3;verify_calls={m_sp['spec_calls']};"
+         f"accepted_per_call={apc:.3f};"
+         f"decode_calls={m_sp['decode_calls']};"
+         f"decode_tokens={m_sp['decode_tokens']};tokens_equal=True")

@@ -197,6 +197,12 @@ class ServingConfig:
     grant_bucketing: bool = True
     grant_buckets: Tuple[int, ...] = ()   # empty -> power-of-two ladder
     min_grant_bucket: int = 16
+    # speculative decoding (paper §Discussion): greedy-only self-drafting.
+    # spec_k > 0 verifies a (spec_k+1)-token window [last, d1..d_k] per slot
+    # through the paged flash-decode kernel; accepted tokens commit, rejected
+    # window positions roll back by pos invalidation.  Attention-only stacks
+    # (a K-token step would advance recurrent SSM/xLSTM state K times).
+    spec_k: int = 0
 
 
 @dataclass(frozen=True)

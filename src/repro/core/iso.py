@@ -193,10 +193,10 @@ def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
 
 def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
                      sctx: StageCtx, ctx: AxisCtx, unroll: bool = False):
-    """One-token decode: sequential collectives (paper: overlap doesn't pay at
-    decode), cache read+update per layer.  caches: per-position pytrees stacked
-    over periods, each with optional k/v (+pos handled by caller), ssm/mlstm/slstm
-    states, cross_k/v."""
+    """Decode (x: (B,K,D), K=1 plain / K>1 speculative verify): sequential
+    collectives (paper: overlap doesn't pay at decode), cache read+update per
+    layer.  caches: per-position pytrees stacked over periods, each with
+    optional k/v (+pos handled by caller), ssm/mlstm/slstm states, cross_k/v."""
     from repro.core.overlap import psum_now
     n_pos = len(pattern)
 
@@ -254,23 +254,20 @@ _BATCHED_STATE_KEYS = ("ssm", "mlstm", "slstm")
 
 def _scatter_token_to_pages(new_cache, kv_new, lengths, block_tables,
                             decode_mask):
-    """Scatter one decode token's (k, v) straight into its block-table page.
-    Inactive slots (and rows with no capacity) route to the scratch page."""
-    k_new, v_new = kv_new                               # (B, 1, Hkv, hd)
+    """Scatter the decode window's (k, v) straight into block-table pages.
+
+    kv_new: (B, K, Hkv, hd) — K=1 plain decode, K>1 a speculative verify
+    window whose token qi lands at position ``lengths[b] + qi``.  Inactive
+    slots (and positions with no capacity) route to the scratch page."""
+    from repro.serving.kvcache import window_page_coords
+    k_new, v_new = kv_new                               # (B, K, Hkv, hd)
     kp = new_cache["k_pages"]                           # (N+1, ps, Hkv, hd)
-    B = k_new.shape[0]
-    ps_pg = kp.shape[1]
-    scratch = kp.shape[0] - 1
-    blk = jnp.clip(lengths // ps_pg, 0, block_tables.shape[1] - 1)
-    page = block_tables[jnp.arange(B), blk]
-    ok = page >= 0
-    if decode_mask is not None:
-        ok &= decode_mask
-    page = jnp.where(ok, page, scratch)
-    off = lengths % ps_pg
-    new_cache["k_pages"] = kp.at[page, off].set(k_new[:, 0].astype(kp.dtype))
+    page, off, _, _ = window_page_coords(
+        lengths, block_tables, k_new.shape[1], kp.shape[1],
+        scratch=kp.shape[0] - 1, decode_mask=decode_mask)
+    new_cache["k_pages"] = kp.at[page, off].set(k_new.astype(kp.dtype))
     new_cache["v_pages"] = new_cache["v_pages"].at[page, off].set(
-        v_new[:, 0].astype(kp.dtype))
+        v_new.astype(kp.dtype))
 
 
 def _slice_cache_half(cache, lo: int, hi: int):

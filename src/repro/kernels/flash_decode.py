@@ -1,17 +1,18 @@
 """Paged flash-decode kernel (Pallas/TPU): attention over block tables.
 
-Single-token decode against the paged KV pool (serving/kvcache.py) WITHOUT
-gathering pages into a dense cache first — the kernel walks each request's
-block table page by page, carrying the online-softmax state (max, denom,
-accumulator) in VMEM scratch, masked by the request's resident length.
+Decode against the paged KV pool (serving/kvcache.py) WITHOUT gathering pages
+into a dense cache first — the kernel walks each request's block table page by
+page, carrying the online-softmax state (max, denom, accumulator) in VMEM
+scratch, masked by the request's resident length.
 
 Layout (mirrors PagedKVCache, minus the period dim which the caller scans):
 
-    q            (B, Hq, hd)        one decode token per request
+    q            (B, Hq, hd)        one decode token per request, OR
+                 (B, K, Hq, hd)     a K-token speculative verify window
     k/v pages    (N, ps, Hkv, hd)   page pool, N includes the scratch page
     block_tables (B, MB) int32      page ids, -1 pad (sanitised to 0 here)
-    lengths      (B,)    int32      tokens resident; the decode token sits at
-                                    position lengths[b] (NOT in the pool yet)
+    lengths      (B,)    int32      tokens resident; window token qi sits at
+                                    position lengths[b] + qi (NOT in the pool)
 
 Grid is (batch, kv_head, page) with the page dimension iterated sequentially
 (minor-most), exactly like the k-block dimension of kernels/flash_prefill.py.
@@ -19,13 +20,19 @@ The block table and lengths ride in via ``PrefetchScalarGridSpec`` scalar
 prefetch, so the k/v BlockSpec index maps can resolve ``page -> pool slot``
 before the kernel body runs (the TPU DMA pattern for paged attention).  GQA is
 handled by blocking queries as (Hkv, group): every grid step attends one kv
-head's whole query group.
+head's whole query group.  The K>1 verify window rides in the SAME grid: query
+rows are laid out (Hkv, group*K) with row ``g*K + qi``, so the per-position
+sliding-window shift is an iota-mod inside the kernel body and the page walk
+is shared by all K positions.
 
 The kernel returns the *partial* softmax state ``(out, m, l)`` over the paged
-keys only; the caller folds the decode token's own (k, v) in with one more
-online-softmax step (see layers/attention.attn_decode_paged_partial).  That
-split keeps the pool read-only inside the kernel — the new token's KV is
-scattered to its page afterwards by the model driver.
+keys only; the caller folds the window's own (k, v) — lower-triangular among
+the K new tokens — in with one more softmax merge (see
+layers/attention.attn_decode_paged_partial).  That split keeps the pool
+read-only inside the kernel — the new tokens' KV is scattered to their pages
+afterwards by the model driver.  All paged keys sit at positions < length <=
+length + qi, so causality over the pool reduces to the validity mask; the
+per-query causal structure lives entirely in the intra-window merge.
 
 ``interpret=True`` (the default) runs the same kernel under the Pallas
 interpreter — the CPU-container fallback, mirroring flash_prefill.py.  On real
@@ -46,7 +53,8 @@ NEG_INF = -1e30
 
 def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
                    o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                   page_size: int, window: int, num_pages: int):
+                   page_size: int, window: int, num_pages: int,
+                   k_tokens: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -56,19 +64,23 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)                 # (group, hd)
+    q = q_ref[0, 0].astype(jnp.float32)                 # (group*K, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)
 
     hd = q.shape[-1]
-    s = jnp.dot(q, k.T) * (hd ** -0.5)                  # (group, ps)
+    s = jnp.dot(q, k.T) * (hd ** -0.5)                  # (group*K, ps)
 
     length = len_ref[b]                                 # tokens resident
     k_pos = j * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, 1)
-    mask = k_pos < length                               # causal: q sits at L
+    # validity doubles as causality: every paged key sits at a position
+    # < length <= length + qi for all K window queries
+    mask = k_pos < length
     if window:
-        mask &= k_pos > length - window
+        # per-query window shift: row r = g*K + qi queries position L + qi
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % k_tokens
+        mask &= k_pos > length + qi - window
     # explicit mask multiply (not just -inf fill): a fully-masked page keeps
     # m at NEG_INF and exp(0)=1 would otherwise leak weight per masked key
     s = jnp.where(mask, s, NEG_INF)
@@ -91,34 +103,43 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
 
 def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
                  window: int = 0, interpret: bool = True):
-    """Paged flash attention for one decode token per request.
+    """Paged flash attention for a decode/verify window per request.
 
-    q: (B, Hq, hd); k_pages/v_pages: (N, ps, Hkv, hd); block_tables: (B, MB)
-    int32 (-1 pad); lengths: (B,) int32 resident token counts.
+    q: (B, Hq, hd) single-token decode, or (B, K, Hq, hd) a K-token
+    speculative verify window (token qi at position ``lengths[b] + qi``);
+    k_pages/v_pages: (N, ps, Hkv, hd); block_tables: (B, MB) int32 (-1 pad);
+    lengths: (B,) int32 resident token counts.
 
     Returns ``(out, m, l)`` fp32 partial softmax state over the paged keys:
-    out (B, Hq, hd) = acc / l, m (B, Hq, 1) running max, l (B, Hq, 1) running
-    denominator.  Rows with ``lengths == 0`` come back as (0, NEG_INF, 0) —
-    the caller's merge with the current token then gives it weight 1.
+    out = acc / l, m the running max, l the running denominator — shaped
+    (B, Hq, hd)/(B, Hq, 1) for 3-D q and (B, K, Hq, hd)/(B, K, Hq, 1) for
+    4-D q.  Rows with ``lengths == 0`` come back as (0, NEG_INF, 0) — the
+    caller's merge with the window's own keys then gives them weight 1.
     """
-    B, Hq, hd = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]                                 # K = 1
+    B, K, Hq, hd = q.shape
     N, ps, Hkv, _ = k_pages.shape
     MB = block_tables.shape[1]
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
+    gk = group * K
 
     # pad table entries (-1) alias page 0; they are always masked because a
     # request's pages cover positions [0, lengths) contiguously
     bt = jnp.clip(block_tables, 0, N - 1).astype(jnp.int32)
-    qg = q.reshape(B, Hkv, group, hd)
+    # query-row layout r = g*K + qi (the kernel recovers qi as iota % K)
+    qg = q.reshape(B, K, Hkv, group, hd).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(B, Hkv, gk, hd)
 
     kernel = functools.partial(_decode_kernel, page_size=ps, window=window,
-                               num_pages=MB)
+                               num_pages=MB, k_tokens=K)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # block_tables, lengths
         grid=(B, Hkv, MB),
         in_specs=[
-            pl.BlockSpec((1, 1, group, hd),
+            pl.BlockSpec((1, 1, gk, hd),
                          lambda b, h, j, bt, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd),
                          lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
@@ -126,43 +147,33 @@ def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
                          lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, group, hd),
+            pl.BlockSpec((1, 1, gk, hd),
                          lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, group, 1),
+            pl.BlockSpec((1, 1, gk, 1),
                          lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, group, 1),
+            pl.BlockSpec((1, 1, gk, 1),
                          lambda b, h, j, bt, ln: (b, h, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((group, 1), jnp.float32),   # running max
-            pltpu.VMEM((group, 1), jnp.float32),   # running denom
-            pltpu.VMEM((group, hd), jnp.float32),  # running accumulator
+            pltpu.VMEM((gk, 1), jnp.float32),      # running max
+            pltpu.VMEM((gk, 1), jnp.float32),      # running denom
+            pltpu.VMEM((gk, hd), jnp.float32),     # running accumulator
         ],
     )
     out, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, Hkv, group, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, group, 1), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, gk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
         ],
         interpret=interpret,
     )(bt, lengths.astype(jnp.int32), qg, k_pages, v_pages)
-    return (out.reshape(B, Hq, hd), m.reshape(B, Hq, 1), l.reshape(B, Hq, 1))
 
+    def unrow(t, last):
+        t = t.reshape(B, Hkv, group, K, last).transpose(0, 3, 1, 2, 4)
+        t = t.reshape(B, K, Hq, last)
+        return t[:, 0] if squeeze else t
 
-def merge_partial_softmax(out_p, m_p, l_p, s_new, v_new):
-    """Fold extra key/value pairs into a flash partial-softmax state.
-
-    out_p (B,Hq,hd), m_p/l_p (B,Hq,1): kernel output.  s_new (B,Hq,K) raw
-    (scaled) scores of K extra keys; v_new (B,Hq,K,hd) their values.  Returns
-    the final normalised attention output (B, Hq, hd) in fp32.
-    """
-    m_tot = jnp.maximum(m_p, jnp.max(s_new, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_p - m_tot)                        # (B,Hq,1)
-    w_new = jnp.exp(s_new - m_tot)                      # (B,Hq,K)
-    l_tot = l_p * alpha + jnp.sum(w_new, axis=-1, keepdims=True)
-    acc = out_p * (l_p * alpha) + jnp.einsum(
-        "bhk,bhkd->bhd", w_new, v_new.astype(jnp.float32))
-    return acc / jnp.maximum(l_tot, 1e-30)
+    return unrow(out, hd), unrow(m, 1), unrow(l, 1)

@@ -57,6 +57,47 @@ def paged_decode_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return jnp.einsum("bhs,bshd->bhd", p, vr)
 
 
+def paged_verify_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                     window: int = 0):
+    """Oracle for the K-token verify mode of kernels/flash_decode.py: gather
+    pages dense, masked softmax, return the kernel's PARTIAL state over paged
+    keys only (the window's own keys are merged by the layer, not the kernel).
+
+    q: (B,K,Hq,hd) — window token qi queries position ``lengths[b] + qi``;
+    k_pages/v_pages: (N,ps,Hkv,hd); block_tables: (B,MB) int32 (-1 pad);
+    lengths: (B,) resident token counts.  Returns ``(out, m, l)`` fp32:
+    out (B,K,Hq,hd) = acc/l (zeros where a row attends nothing), m (B,K,Hq,1)
+    the masked row max (NEG_INF when empty), l the softmax denominator at m.
+    """
+    NEG_INF = -1e30
+    B, K, Hq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    group = Hq // Hkv
+    idx = jnp.clip(block_tables, 0, N - 1)
+    kd = k_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    vd = v_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    kr = jnp.repeat(kd, group, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(vd, group, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bkhd,bshd->bkhs", q.astype(jnp.float32),
+                   kr) * (hd ** -0.5)
+    k_pos = jnp.arange(MB * ps, dtype=jnp.int32)[None, None, :]
+    mask = k_pos < lengths[:, None, None]               # (B, 1, S)
+    if window:
+        q_abs = (lengths[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+                 )[:, :, None]                          # (B, K, 1)
+        mask = mask & (k_pos > q_abs - window)
+    else:
+        mask = jnp.broadcast_to(mask, (B, K, MB * ps))
+    mask = mask[:, :, None, :]                          # (B, K, 1, S)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkhs,bshd->bkhd", p, vr) / jnp.maximum(l, 1e-30)
+    return out, m, l
+
+
 def paged_prefill_ref(q, k_pages, v_pages, block_tables, prefix_lens,
                       q_starts, *, window: int = 0):
     """Oracle for kernels/flash_prefill_paged.py: gather the prefix dense,

@@ -46,7 +46,14 @@ def main(argv=None) -> int:
                     help="prepend a common system prompt of N tokens to every "
                          "request (exercises CoW prefix/page sharing)")
     ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: verify a (k+1)-token "
+                         "self-drafted window per decode step (greedy only; "
+                         "paged engine runs it through the flash-decode "
+                         "kernel, dense engine through the padded cache)")
     args = ap.parse_args(argv)
+    if args.spec_k and args.temperature > 0:
+        ap.error("--spec-k is greedy-only (needs --temperature 0)")
 
     cfg = reduce_cfg(get_model_config(args.arch), args.preset)
     if args.paged and cfg.family == "audio":
@@ -56,11 +63,13 @@ def main(argv=None) -> int:
     iso = ISOConfig(enabled=not args.iso_off, num_chunks=args.chunks,
                     min_chunk_tokens=16, chunk_align=16)
     max_len = args.shared_prefix + args.prompt_len + args.max_new + 8
+    max_len = max_len + (args.spec_k + 1 if args.spec_k else 0)
     serving = ServingConfig(page_size=args.page_size, max_batch=args.max_batch,
                             max_len=max_len,
                             prefill_token_budget=args.prefill_budget,
                             scheduler_policy=args.policy,
-                            prefix_sharing=not args.no_prefix_sharing)
+                            prefix_sharing=not args.no_prefix_sharing,
+                            spec_k=args.spec_k)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
                     serving=serving)
@@ -74,7 +83,7 @@ def main(argv=None) -> int:
         eng = PagedEngine(config, params, mesh=mesh)
     else:
         eng = Engine(config, params, mesh=None, max_batch=args.max_batch,
-                     max_len=max_len, bucket=32)
+                     max_len=max_len, bucket=32, spec_k=args.spec_k)
 
     rng = np.random.default_rng(0)
     system = rng.integers(2, cfg.vocab_size,
@@ -115,6 +124,16 @@ def main(argv=None) -> int:
         print(f"sharing: shared_tokens={m['prefix_shared_tokens']} "
               f"cow_copies={m['cow_copies']} "
               f"peak_pages={m['peak_used_pages']}")
+        if args.spec_k:
+            print(f"speculative: spec_k={args.spec_k} "
+                  f"verify_calls={m['spec_calls']} "
+                  f"accepted_per_call={eng.accepted_per_call():.2f} "
+                  f"decode_tokens={m['decode_tokens']}")
+    elif args.spec_k:
+        print(f"speculative: spec_k={args.spec_k} "
+              f"extra_accepted={m['spec_accepted']} "
+              f"decode_calls={m['decode_calls']} "
+              f"decode_tokens={m['decode_tokens']}")
     for rid in sorted(outs)[:3]:
         print(f"  rid {rid}: {outs[rid][:10]}{'...' if len(outs[rid]) > 10 else ''}")
     return 0

@@ -344,33 +344,36 @@ def attn_decode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
 def attn_decode_paged_partial(p: dict, x, cfg: ModelConfig, layout_group: int,
                               *, k_pages, v_pages, block_tables, lengths,
                               window: int = 0):
-    """One-token decode straight against the paged KV pool (no dense gather).
+    """Decode straight against the paged KV pool (no dense gather).
 
-    x: (B,1,D); k_pages/v_pages: (N, ps, Hkv_loc, hd) page pool (local shard);
-    block_tables: (B, MB) int32 (-1 pad); lengths: (B,) tokens resident.
+    x: (B,K,D) — K=1 plain decode, K>1 a speculative verify window whose
+    token qi sits at position ``lengths[b] + qi``; k_pages/v_pages:
+    (N, ps, Hkv_loc, hd) page pool (local shard); block_tables: (B, MB) int32
+    (-1 pad); lengths: (B,) tokens resident.
 
     The Pallas kernel (kernels/flash_decode.py) walks the block table with an
-    online softmax and returns the partial state over paged keys; the new
-    token's own (k, v) — not yet scattered to its page — is folded in with one
-    more online-softmax step.  Returns (partial_out, (k_new, v_new)); the page
-    scatter is the stack driver's job (core/iso.run_stack_decode).
+    online softmax and returns the partial state over paged keys (one per
+    window position); the window's own (k, v) — not yet scattered to pages —
+    are folded in with one dense lower-triangular partial-softmax merge
+    (``sdpa_partial`` over the K new tokens + ``merge_softmax_states``).
+    Returns (partial_out (B,K,D), (k_new, v_new)); the page scatter is the
+    stack driver's job (core/iso.run_stack_decode).
     """
-    from repro.kernels.flash_decode import flash_decode, merge_partial_softmax
-    B = x.shape[0]
-    assert x.shape[1] == 1, "paged decode is single-token (no speculative K)"
-    q_pos = lengths[:, None].astype(jnp.int32)
+    from repro.kernels.flash_decode import flash_decode
+    B, K = x.shape[0], x.shape[1]
+    # positions of the K new tokens (K=1 plain decode; K>1 speculative verify)
+    q_pos = (lengths[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+             ).astype(jnp.int32)
     q, k_new, v_new = project_qkv(p, x, cfg, q_pos)
-    q1 = q[:, 0].astype(jnp.float32)                     # (B, Hq_loc, hd)
-    hd = q1.shape[-1]
-    out_p, m_p, l_p = flash_decode(q1, k_pages, v_pages, block_tables,
-                                   lengths, window=window)
-    # current token: q head h reads kv head h // group (same folding as the
-    # kernel's BlockSpec index map)
-    k_self = jnp.repeat(k_new[:, 0], layout_group, axis=1).astype(jnp.float32)
-    v_self = jnp.repeat(v_new[:, 0], layout_group, axis=1).astype(jnp.float32)
-    s_self = jnp.sum(q1 * k_self, axis=-1, keepdims=True) * (hd ** -0.5)
-    out = merge_partial_softmax(out_p, m_p, l_p, s_self, v_self[:, :, None])
-    return o_proj_partial(p, out[:, None]), (k_new, v_new)
+    out_p, m_p, l_p = flash_decode(q, k_pages, v_pages, block_tables,
+                                   lengths, window=window)  # (B,K,Hq,·)
+    # intra-window: window token qi attends tokens 0..qi of the window
+    # (lower triangular) — their KV is not in the pool during this call
+    out_i, m_i, l_i = sdpa_partial(q, k_new, v_new, q_pos=q_pos, k_pos=q_pos,
+                                   causal=True, window=window,
+                                   group_eff=layout_group)
+    out = merge_softmax_states(out_p, m_p, l_p, out_i, m_i, l_i)
+    return o_proj_partial(p, out), (k_new, v_new)
 
 
 def attn_encode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,

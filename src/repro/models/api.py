@@ -45,6 +45,9 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig,
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
                 unroll: bool = False, block_tables=None, decode_mask=None,
                 overlap_batch: bool = False):
+    """tokens: (B,K) — K=1 plain decode, K>1 a speculative verify window
+    (dense caches AND the paged path via ``block_tables``; see
+    models/decoder.decode_step for the full contract)."""
     if cfg.family == "audio":
         assert block_tables is None, "paged decode does not support enc-dec"
         return whisper_lib.whisper_decode_step(params, cfg, ctx, tokens, caches,

@@ -223,16 +223,20 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
                 lengths, unroll: bool = False, block_tables=None,
                 decode_mask=None,
                 overlap_batch: bool = False) -> Tuple[jnp.ndarray, Any]:
-    """tokens: (B,1) int32; lengths: (B,) tokens already processed.
+    """tokens: (B,K) int32 — K=1 plain decode, K>1 a speculative verify
+    window whose token qi sits at position ``lengths[b] + qi``; lengths:
+    (B,) tokens already processed.
 
     Paged decode (flash-decode over the page pool): caches carry
     ``k_pages``/``v_pages`` per attention position and ``block_tables``
     (B, MB) maps positions to pages; ``decode_mask`` (B,) marks the slots
-    really decoding (others scatter to the scratch page).  ``overlap_batch``
-    switches to the batch-split ISO schedule (core/iso.py) so each half's TP
-    all-reduce hides behind the other half's compute.
+    really decoding (others scatter to the scratch page).  The K-token
+    window runs through the same kernel grid (see kernels/flash_decode.py)
+    and scatters all K positions' KV.  ``overlap_batch`` switches to the
+    batch-split ISO schedule (core/iso.py) so each half's TP all-reduce
+    hides behind the other half's compute.
 
-    Returns (logits_local (B,1,V_loc), updated caches).
+    Returns (logits_local (B,K,V_loc), updated caches).
     """
     K = tokens.shape[1]
     x = embed_tokens(params, tokens, cfg, ctx)

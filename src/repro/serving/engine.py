@@ -50,12 +50,17 @@ class Engine:
         self.last_tokens = np.zeros(max_batch, np.int64)
         self.pending: List[Request] = []
         self._finished: List[RequestState] = []
-        # speculative decoding (paper §Discussion): greedy-only self-drafting
-        self.spec_k = spec_k
+        # speculative decoding (paper §Discussion): greedy-only self-drafting.
+        # Attention-only stacks, like PagedEngine: the verify scrub rolls back
+        # rejected KV positions, but a K-token step would have advanced
+        # recurrent SSM/xLSTM state (and whisper's decode) K times with no way
+        # back — so those families silently fall back to plain decode
+        self.spec_k = spec_k if all(k in ("attn_mlp", "attn_moe")
+                                    for k in self.cfg.block_pattern) else 0
         self._drafts: List[Optional[Any]] = [None] * max_batch
         self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
                         "decode_tokens": 0, "completed": 0, "decode_calls": 0,
-                        "spec_accepted": 0}
+                        "spec_accepted": 0, "prefill_samples": 0}
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> int:
@@ -121,6 +126,7 @@ class Engine:
         # sample over the REAL vocab only (the table is padded for TP sharding)
         first = sample(logits[eff_plen - 1][:self.cfg.vocab_size], req.sampling,
                        step=0)
+        self.metrics["prefill_samples"] += 1
 
         st = RequestState(request=req, slot=slot, prompt_len=eff_plen)
         st.generated.append(first)
@@ -135,9 +141,20 @@ class Engine:
         if st.done:
             self.metrics["completed"] += 1
             self._finished.append(st)
-            self.slots[slot] = None
+            self._clear_slot(slot)
         else:
             self.slots[slot] = st
+
+    def _clear_slot(self, slot: int) -> None:
+        """Drop ALL per-slot state when a request leaves.  Leaving stale
+        ``lengths``/``last_tokens``/``_drafts`` behind is not cosmetic: the
+        speculative gate reads ``max(self.lengths)``, so one finished long
+        request would silently disable speculation for the rest of the
+        batch's lifetime."""
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        self.last_tokens[slot] = 0
+        self._drafts[slot] = None
 
     def _write_slot(self, new_caches, slot: int, real_len: int) -> None:
         """Scatter a batch-1 prefill cache into the engine's slot, scrubbing
@@ -201,13 +218,17 @@ class Engine:
             st.generated.append(tok)
             self.lengths[i] += 1
             self.last_tokens[i] = tok
+            if self._drafts[i] is not None:
+                # plain steps (speculative gate closed) must still feed the
+                # draft, or it re-engages with a stale anchor
+                self._drafts[i].observe([tok])
+            self.metrics["decode_tokens"] += 1
             events.append((st.request.rid, tok))
             st.finish_check()
             if st.done:
                 self.metrics["completed"] += 1
-                self.metrics["decode_tokens"] += len(st.generated)
                 self._finished.append(st)
-                self.slots[i] = None
+                self._clear_slot(i)
         return events
 
     # ------------------------------------------------------------------
@@ -249,6 +270,7 @@ class Engine:
             budget = st.request.sampling.max_new_tokens - len(st.generated)
             acc = accept_greedy(drafts[i], argmaxes)[:max(budget, 1)]
             self.metrics["spec_accepted"] += len(acc) - 1
+            self.metrics["decode_tokens"] += len(acc)
             for tok in acc:
                 st.generated.append(int(tok))
                 events.append((st.request.rid, int(tok)))
@@ -258,9 +280,12 @@ class Engine:
             st.finish_check()
             if st.done:
                 self.metrics["completed"] += 1
-                self.metrics["decode_tokens"] += len(st.generated)
                 self._finished.append(st)
-                self.slots[i] = None
+                self._clear_slot(i)
+                # self.lengths is replaced wholesale below — zero the slot in
+                # new_lens too, so the scrub invalidates the whole slot's pos
+                # and the speculative gate stops reading the stale length
+                new_lens[i] = 0
         # scrub cache slots of rejected draft tokens (pos >= confirmed length)
         nl = jnp.asarray(new_lens.astype(np.int32))
         fixed = []

@@ -303,6 +303,31 @@ def token_page_coords(positions, block_table, page_size: int, scratch: int):
     return page, positions % page_size
 
 
+def window_page_coords(lengths, block_tables, k_tokens: int, page_size: int,
+                       scratch: int, decode_mask=None):
+    """Map a K-token decode window's positions -> (page, off, ok, positions)
+    through per-request block tables (the batched sibling of
+    ``token_page_coords``; shared by core/iso's KV scatter and the paged
+    engine's pos-array update so their validity rules cannot drift).
+
+    lengths: (B,) int32; block_tables: (B, MB) int32 (-1 pad); window token
+    qi sits at position ``lengths[b] + qi``; ``decode_mask``: optional (B,)
+    bool of slots really decoding.  All returns are (B, K): ``ok`` marks
+    positions landing in a live page of an active slot — everything else has
+    ``page`` already routed to ``scratch`` (and must record pos -1).
+    """
+    positions = (lengths[:, None].astype(jnp.int32)
+                 + jnp.arange(k_tokens, dtype=jnp.int32)[None])
+    blk = positions // page_size
+    MB = block_tables.shape[1]
+    page = jnp.take_along_axis(block_tables, jnp.clip(blk, 0, MB - 1), axis=1)
+    ok = (page >= 0) & (blk < MB)
+    if decode_mask is not None:
+        ok &= decode_mask[:, None]
+    page = jnp.where(ok, page, scratch)
+    return page, positions % page_size, ok, positions
+
+
 def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
     """pages (Pd, N, ps, ...), block_tables (B, MB) -> dense (Pd, B, MB*ps, ...).
 

@@ -24,7 +24,12 @@ closures run inside ``shard_map`` over the TP "model" axis, and the batched
 decode uses the batch-split ISO schedule (core/iso.run_stack_decode_overlap)
 so each half's all-reduce hides behind the other half's compute.  Requests
 with a common prompt prefix share KV pages copy-on-write
-(``PageAllocator.adopt``/``cow`` + ``PrefixCache``) — see docs/serving.md.
+(``PageAllocator.adopt``/``cow`` + ``PrefixCache``).  With
+``ServingConfig.spec_k > 0`` the decode phase verifies a (spec_k+1)-token
+self-drafted window per slot through the same kernel — the paper's
+§Discussion decode-side regime where fatter steps amortise the memory-bound
+cache walk — committing only accepted tokens and rolling rejected positions
+back by ``pos`` invalidation.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -45,7 +50,8 @@ from repro.layers import embeddings as emb_lib
 from repro.models import api
 from repro.models.decoder import cache_specs, decoder_param_specs
 from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
-                                   PrefixCache, pages_for, token_page_coords)
+                                   PrefixCache, pages_for, token_page_coords,
+                                   window_page_coords)
 from repro.serving.requests import Request, RequestState
 from repro.serving.sampler import sample
 from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
@@ -114,20 +120,31 @@ class PagedEngine:
                                      for k in self.cfg.block_pattern):
             self.prefix_cache = PrefixCache(self.ps)
 
+        # speculative decoding: greedy-only self-drafting (serving/speculative
+        # .py); attention-only stacks — a K-token verify would advance
+        # recurrent SSM/xLSTM state for rejected tokens too
+        self.spec_k = 0
+        if sv.spec_k and all(k in ("attn_mlp", "attn_moe")
+                             for k in self.cfg.block_pattern):
+            self.spec_k = sv.spec_k
+        self._drafts: List[Optional[Any]] = [None] * sv.max_batch
+
         self.slots: List[Optional[RequestState]] = [None] * sv.max_batch
         self.lengths = np.zeros(sv.max_batch, np.int64)   # tokens resident
         self.last_tokens = np.zeros(sv.max_batch, np.int64)
         self._by_rid: Dict[int, RequestState] = {}        # waiting + running
         self._finished: List[RequestState] = []
         self._prefill_fns: Dict[Tuple, Any] = {}
-        self._decode_fn = None
+        self._decode_fns: Dict[int, Any] = {}             # verify width K -> fn
         self._copy_page_fn = None
         self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
                         "decode_tokens": 0, "completed": 0, "decode_calls": 0,
                         "prefill_calls": 0, "steps": 0, "preemptions": 0,
                         "ttft_sum": 0.0, "ttft_n": 0,
                         "prefix_shared_tokens": 0, "cow_copies": 0,
-                        "peak_used_pages": 0, "prefill_pad_tokens": 0}
+                        "peak_used_pages": 0, "prefill_pad_tokens": 0,
+                        "prefill_samples": 0, "spec_calls": 0,
+                        "spec_tokens": 0}
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -241,6 +258,8 @@ class PagedEngine:
         self._release_pages(victim)
         self.slots[st.slot] = None
         self.lengths[st.slot] = 0
+        self.last_tokens[st.slot] = 0
+        self._drafts[st.slot] = None
         st.slot = -1
         # recompute mode: everything generated so far becomes prompt; the
         # re-prefill's last-position logits yield the next token exactly where
@@ -370,6 +389,10 @@ class PagedEngine:
             page, off = token_page_coords(positions, bt_row[0], self.ps, scratch)
             # pad-tail tokens must not scatter KV into live pages
             page = jnp.where(jnp.arange(T) < n_real, page, scratch)
+            # anything routed to the scratch page must write pos -1, never a
+            # real position: pos[scratch] >= 0 would be a validity leak for
+            # any pos-driven gather (tests/test_paged_spec.py invariant)
+            positions = jnp.where(page != scratch, positions, -1)
             new_kv = dict(kv_arrays)
             ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
             new_states = []
@@ -405,18 +428,20 @@ class PagedEngine:
             return None
         return 2 * len(self._buckets)
 
-    def _get_decode(self):
-        if self._decode_fn is not None:
-            return self._decode_fn
+    def _get_decode(self, K: int = 1):
+        """Jitted decode closure for a K-token window (K=1 plain decode,
+        K=spec_k+1 speculative verify) — one compiled closure per K."""
+        if K in self._decode_fns:
+            return self._decode_fns[K]
         cfg, ctx = self.cfg, self._ctx
         scratch = self.kv.scratch_page
-        MB, ps = self.max_blocks, self.ps
+        ps = self.ps
         overlap = self._decode_overlap
 
         def fn(params, toks, bt, lengths, kv_arrays, states, active):
             # paged flash decode: the stack reads the page pools in place
             # through the block tables (kernels/flash_decode.py) and scatters
-            # each new token's KV to its page (core/iso.run_stack_decode)
+            # the window's KV to its pages (core/iso.run_stack_decode)
             caches, kv_i = [], 0
             for i, kind in enumerate(cfg.block_pattern):
                 c = dict(states[i])
@@ -429,10 +454,8 @@ class PagedEngine:
                 params, cfg, ctx, toks, tuple(caches), lengths,
                 block_tables=bt, decode_mask=active, overlap_batch=overlap)
             B = toks.shape[0]
-            blk = jnp.clip(lengths // ps, 0, MB - 1)
-            page = bt[jnp.arange(B), blk]
-            page = jnp.where(active & (page >= 0), page, scratch)
-            off = lengths % ps
+            page, off, ok, positions = window_page_coords(
+                lengths, bt, K, ps, scratch=scratch, decode_mask=active)
             ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
             new_states = []
             for i, kind in enumerate(cfg.block_pattern):
@@ -452,12 +475,14 @@ class PagedEngine:
                 new_states.append(sel)
             new_kv = dict(kv_arrays)
             new_kv["k"], new_kv["v"] = tuple(ks), tuple(vs)
+            # scratch-routed scatters (inactive slots, no capacity) must
+            # write pos -1, never a real position
             new_kv["pos"] = kv_arrays["pos"].at[page, off].set(
-                jnp.where(active, lengths.astype(jnp.int32), -1))
+                jnp.where(ok, positions, -1))
             return logits, new_kv, tuple(new_states)
 
-        self._decode_fn = self._wrap_decode(fn)
-        return self._decode_fn
+        self._decode_fns[K] = self._wrap_decode(fn)
+        return self._decode_fns[K]
 
     # ------------------------------------------------------------------
     # step phases
@@ -518,18 +543,28 @@ class PagedEngine:
         logits = np.asarray(jax.device_get(logits_last))[0]
         tok = sample(logits[:self.cfg.vocab_size], req.sampling,
                      step=len(st.generated))
+        self.metrics["prefill_samples"] += 1
         if st.t_first < 0:
             st.t_first = time.perf_counter()
             self.metrics["ttft_sum"] += st.t_first - st.t_submit
             self.metrics["ttft_n"] += 1
+        if self.spec_k:
+            # (re)build the self-draft over everything resident — after a
+            # recompute preemption that includes the already-generated tokens
+            from repro.serving.speculative import BigramDraft
+            d = BigramDraft()
+            d.observe([int(t) for t in toks_all] + [int(tok)])
+            self._drafts[slot] = d
         st.generated.append(tok)
         self.last_tokens[slot] = tok
         st.finish_check()
         return tok
 
     def _finish(self, st: RequestState) -> None:
+        # decode_tokens is tallied where tokens are produced (_decode_phase),
+        # NOT here: the prefill-sampled first token is a prefill_samples
+        # event, and in-flight requests must not vanish from the count
         self.metrics["completed"] += 1
-        self.metrics["decode_tokens"] += len(st.generated)
         self._release_pages(st.request.rid)
         if self.prefix_cache is not None:
             self.prefix_cache.forget(st.request.rid)
@@ -538,6 +573,8 @@ class PagedEngine:
         self._by_rid.pop(st.request.rid, None)
         self.slots[st.slot] = None
         self.lengths[st.slot] = 0
+        self.last_tokens[st.slot] = 0
+        self._drafts[st.slot] = None
         st.slot = -1
 
     def _prefill_phase(self, events: List[Tuple[int, int]]) -> None:
@@ -581,21 +618,49 @@ class PagedEngine:
                 if st.done:
                     self._finish(st)
 
+    def _spec_window(self, active) -> int:
+        """Verify-window width for this decode step: spec_k+1 when every
+        active request can speculate (greedy sampling, drafted, and room for
+        the whole window below max_len), else 1 (plain decode).  One batched
+        call either way — mixed eligibility falls back for the step."""
+        if not self.spec_k:
+            return 1
+        K = self.spec_k + 1
+        need = 0
+        for st in active:
+            L = int(self.lengths[st.slot])
+            if st.request.sampling.temperature > 0 or \
+                    self._drafts[st.slot] is None or L + K > self.max_len:
+                return 1
+            need += max(0, pages_for(L + K, self.ps)
+                        - len(self.alloc.tables.get(st.request.rid, ())))
+        # the window must fit WITHOUT eviction: admission only validated the
+        # plain-decode watermark, and evicting a request to speculate on
+        # another would trade real progress for drafted guesses
+        if need > self.alloc.free_pages:
+            return 1
+        return K
+
     def _decode_phase(self, events: List[Tuple[int, int]]) -> None:
         active = [s for s in self.slots
                   if s is not None and not s.done and s.generated
                   and s.prefilled >= sum(s.chunk_plan)]
-        # grow every decoder's capacity by one token (may evict; an evicted
-        # request drops out of `active`)
-        for st in list(active):
+        active = [s for s in active if s.slot >= 0]
+        if not active:
+            return
+        K = self._spec_window(active)
+        # grow every decoder's capacity by the window width (may evict; an
+        # evicted request drops out of `active` below — filtered by slot, not
+        # list.remove, whose __eq__ scan would compare prompt arrays)
+        for st in active:
             if st.slot < 0:
-                active.remove(st)
                 continue
             L = int(self.lengths[st.slot])
-            if not self._ensure_pages(st.request.rid, L + 1) or \
-                    not self._cow_range(st.request.rid, L, L + 1):
-                raise RuntimeError("page pool too small for a single decode "
-                                   "step; increase ServingConfig.num_pages")
+            if not self._ensure_pages(st.request.rid, L + K) or \
+                    not self._cow_range(st.request.rid, L, L + K):
+                raise RuntimeError(
+                    f"page pool too small for a {K}-token decode step; "
+                    f"increase ServingConfig.num_pages")
         active = [s for s in active if s.slot >= 0]
         if not active:
             return
@@ -607,31 +672,70 @@ class PagedEngine:
                        if s is not None and mask[i] else
                        np.full(self.max_blocks, -1, np.int32)
                        for i, s in enumerate(self.slots)])
-        toks = jnp.asarray(self.last_tokens[:, None].astype(np.int32))
+        toks = np.zeros((B, K), np.int32)
+        toks[:, 0] = self.last_tokens.astype(np.int32)
+        drafts: Dict[int, List[int]] = {}
+        if K > 1:
+            for st in active:
+                i = st.slot
+                drafts[i] = self._drafts[i].draft(self.spec_k)
+                toks[i, 1:] = drafts[i]
         lens = jnp.asarray(self.lengths.astype(np.int32))
         t0 = time.perf_counter()
         with self._mesh_ctx():
-            logits, new_kv, new_states = self._get_decode()(
-                self.params, toks, jnp.asarray(bt), lens, self.kv.arrays,
-                self.states, jnp.asarray(mask))
+            logits, new_kv, new_states = self._get_decode(K)(
+                self.params, jnp.asarray(toks), jnp.asarray(bt), lens,
+                self.kv.arrays, self.states, jnp.asarray(mask))
         logits = np.asarray(jax.device_get(logits))
         self.metrics["decode_s"] += time.perf_counter() - t0
         self.metrics["decode_calls"] += 1
+        if K > 1:
+            self.metrics["spec_calls"] += 1
         self.kv.arrays = new_kv
         self.states = new_states
 
+        rollback: List[Tuple[int, int]] = []      # (page, offset) to unmap
         for st in active:
             i = st.slot
-            self.alloc.commit(st.request.rid, 1)
-            tok = sample(logits[i, 0][:self.cfg.vocab_size],
-                         st.request.sampling, len(st.generated))
-            st.generated.append(tok)
-            self.lengths[i] += 1
-            self.last_tokens[i] = tok
-            events.append((st.request.rid, tok))
+            if K == 1:
+                acc = [sample(logits[i, 0][:self.cfg.vocab_size],
+                              st.request.sampling, len(st.generated))]
+                if self._drafts[i] is not None:
+                    # keep the draft's anchor/table fresh across speculation
+                    # fallbacks, or re-engaging verifies a stale successor
+                    self._drafts[i].observe([int(acc[0])])
+            else:
+                # greedy accept: longest matching prefix of the drafted
+                # window, plus the model's bonus token when all drafts hit
+                from repro.serving.speculative import accept_greedy
+                argmaxes = logits[i, :, :self.cfg.vocab_size].argmax(axis=-1)
+                budget = st.request.sampling.max_new_tokens - len(st.generated)
+                acc = accept_greedy(drafts[i], argmaxes)[:max(budget, 1)]
+                self.metrics["spec_tokens"] += len(acc)
+                self._drafts[i].observe([int(t) for t in acc])
+                # rejected window positions: their KV was scattered but they
+                # are NOT committed — invalidate their pos entries so no
+                # pos-driven consumer can ever see them as live
+                L = int(self.lengths[i])
+                table = self.alloc.tables[st.request.rid]
+                for pos in range(L + len(acc), L + K):
+                    rollback.append((table[pos // self.ps], pos % self.ps))
+            self.alloc.commit(st.request.rid, len(acc))
+            self.metrics["decode_tokens"] += len(acc)
+            for tok in acc:
+                st.generated.append(int(tok))
+                events.append((st.request.rid, int(tok)))
+            self.lengths[i] += len(acc)
+            self.last_tokens[i] = int(acc[-1])
             st.finish_check()
             if st.done:
                 self._finish(st)
+        if rollback:
+            pg = jnp.asarray([p for p, _ in rollback], jnp.int32)
+            off = jnp.asarray([o for _, o in rollback], jnp.int32)
+            new_kv = dict(self.kv.arrays)
+            new_kv["pos"] = new_kv["pos"].at[pg, off].set(-1)
+            self.kv.arrays = new_kv
 
     # ------------------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
@@ -656,6 +760,14 @@ class PagedEngine:
         for st in self._finished:
             out[st.request.rid] = st.generated
         return out
+
+    def accepted_per_call(self) -> float:
+        """Mean tokens emitted per speculative verify call (>= 1 once any
+        verify ran; 0.0 when speculation never triggered).  The accept-rate
+        metric tracked per push by benchmarks/ci_smoke.py."""
+        if not self.metrics["spec_calls"]:
+            return 0.0
+        return self.metrics["spec_tokens"] / self.metrics["spec_calls"]
 
     # ------------------------------------------------------------------
     def page_stats(self) -> Dict[str, Any]:

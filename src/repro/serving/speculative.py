@@ -4,9 +4,12 @@ volume" — i.e. it moves decode toward the regime where ISO-style overlap pays)
 
 Draft model: a per-request bigram ("last token -> most recent successor") table
 built online from the prompt + generated stream — zero extra model weights, the
-cheapest honest draft.  Verify: one K-token decode step (the generalized
-``attn_decode_partial``); greedy acceptance of the longest matching prefix
-yields 1..K tokens per model call.
+cheapest honest draft.  Verify: one K-token decode step — the generalized
+``attn_decode_partial`` on the dense Engine, the K-token flash-decode kernel
+(``attn_decode_paged_partial``) on the PagedEngine; greedy acceptance of the
+longest matching prefix yields 1..K tokens per model call.  The paged engine
+commits only accepted tokens to the allocator and rolls rejected window
+positions back by invalidating their ``pos`` entries (serving/paged_engine.py).
 """
 from __future__ import annotations
 

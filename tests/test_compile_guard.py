@@ -69,7 +69,11 @@ def test_prefill_compiles_bounded_by_buckets():
     for key, fn in eng._prefill_fns.items():
         assert compat.jit_cache_size(fn) == 1, \
             f"prefill closure {key} recompiled"
-    assert compat.jit_cache_size(eng._decode_fn) == 1, "decode recompiled"
+    # K=1 decode stays ONE closure compiled once — speculative support must
+    # not widen the plain path's compile footprint
+    assert set(eng._decode_fns) == {1}, \
+        f"unexpected decode closures: {sorted(eng._decode_fns)}"
+    assert compat.jit_cache_size(eng._decode_fns[1]) == 1, "decode recompiled"
 
 
 def test_unbucketed_engine_reports_no_bound():

@@ -9,8 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_decode import flash_decode, merge_partial_softmax
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ref import paged_decode_ref
+from repro.layers.attention import merge_softmax_states
 
 
 def _make_paged(rng, lengths, page_size, hkv, hd, num_pages, dtype):
@@ -78,11 +79,14 @@ def test_flash_decode_zero_length_rows_are_benign():
     assert float(jnp.max(jnp.abs(out[1]))) == 0.0          # empty row -> 0
     assert float(l[1].max()) == 0.0
 
-    # merging the current token gives the empty row weight 1 on itself
-    v_new = jnp.asarray(rng.standard_normal((2, hq, 1, hd)), jnp.float32)
+    # merging the current token (a one-key partial state: out=v, m=score,
+    # l=1 — exactly what the layer's intra-window sdpa_partial produces)
+    # gives the empty row weight 1 on itself
+    v_new = jnp.asarray(rng.standard_normal((2, hq, hd)), jnp.float32)
     s_new = jnp.zeros((2, hq, 1), jnp.float32)
-    merged = merge_partial_softmax(out, m, l, s_new, v_new)
-    assert float(jnp.max(jnp.abs(merged[1] - v_new[1, :, 0]))) < 1e-6
+    merged = merge_softmax_states(out, m, l, v_new, s_new,
+                                  jnp.ones_like(s_new))
+    assert float(jnp.max(jnp.abs(merged[1] - v_new[1]))) < 1e-6
 
 
 def test_flash_decode_merge_matches_full_softmax():
@@ -99,7 +103,9 @@ def test_flash_decode_merge_matches_full_softmax():
 
     out, m, l = flash_decode(q, k_pages, v_pages, bt, lens)
     s_new = jnp.sum(q * k_new, -1, keepdims=True) * (hd ** -0.5)
-    got = merge_partial_softmax(out, m, l, s_new, v_new[:, :, None])
+    # the self token as a one-key partial state (out=v, m=score, l=1)
+    got = merge_softmax_states(out, m, l, v_new, s_new,
+                               jnp.ones_like(s_new))
 
     # oracle: dense gather with the self key appended at position L
     group = hq // hkv
@@ -115,3 +121,91 @@ def test_flash_decode_merge_matches_full_softmax():
     s = jnp.where(mask[:, None], s, -jnp.inf)
     ref = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(s, -1), vv)
     assert float(jnp.max(jnp.abs(got - ref))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# K-token speculative verify mode (q (B, K, Hq, hd))
+# ---------------------------------------------------------------------------
+
+from conftest import tiny_dense                              # noqa: E402
+from repro.kernels.ref import paged_verify_ref               # noqa: E402
+from repro.layers import attention as attn_lib               # noqa: E402
+from repro.layers.heads import head_layout                   # noqa: E402
+from repro.serving.kvcache import gather_pages               # noqa: E402
+
+
+@pytest.mark.parametrize("K", [1, 2, 4])
+@pytest.mark.parametrize("page_size", [8, 16])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_verify_window_grid(K, page_size, dtype, tol):
+    """K-token verify parity vs the oracle on page-boundary lengths."""
+    rng = np.random.default_rng(7)
+    ps = page_size
+    lengths = [1, ps - 1, ps, ps + 1, 3 * ps - 2, 2 * ps]
+    hq, hkv, hd = 4, 2, 16
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=32, dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((len(lengths), K, hq, hd)), dtype)
+    out, m, l = flash_decode(q, k_pages, v_pages, bt, lens)
+    ro, rm, rl = paged_verify_ref(q, k_pages, v_pages, bt, lens)
+    assert out.shape == (len(lengths), K, hq, hd)
+    assert float(jnp.max(jnp.abs(out - ro))) < tol
+    assert float(jnp.max(jnp.abs(l - rl))) < tol
+    # position 0 of the window IS plain single-token decode
+    o1, m1, l1 = flash_decode(q[:, 0], k_pages, v_pages, bt, lens)
+    assert float(jnp.max(jnp.abs(out[:, 0] - o1))) < 1e-6
+    assert float(jnp.max(jnp.abs(l[:, 0] - l1))) < 1e-6
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_flash_verify_sliding_window_shifts_per_position(window):
+    """The sliding-window lower bound must advance with the window position:
+    token qi at absolute position L + qi sees keys > L + qi - window."""
+    rng = np.random.default_rng(8)
+    ps, K, hq, hkv, hd = 8, 3, 4, 4, 16
+    lengths = [3, 11, 24, 17]
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=24, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((len(lengths), K, hq, hd)), jnp.float32)
+    out, _, l = flash_decode(q, k_pages, v_pages, bt, lens, window=window)
+    ro, _, rl = paged_verify_ref(q, k_pages, v_pages, bt, lens, window=window)
+    assert float(jnp.max(jnp.abs(out - ro))) < 1e-5
+    assert float(jnp.max(jnp.abs(l - rl))) < 1e-5
+    # the shift is real: for a short window the denominators differ across qi
+    if window < min(lengths) + K:
+        assert not bool(jnp.all(jnp.abs(l[:, 0] - l[:, -1]) < 1e-12))
+
+
+@pytest.mark.parametrize("K,window", [(2, 0), (4, 0), (3, 12)])
+def test_verify_layer_matches_dense_cache(K, window):
+    """attn_decode_paged_partial with a K-token window == the dense K-token
+    decode (attn_decode_partial) over the gathered cache."""
+    rng = np.random.default_rng(9)
+    cfg = tiny_dense(vocab_size=32, sliding_window=window)
+    group = cfg.num_heads // cfg.num_kv_heads
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = 8
+    lengths = [13, 9, 16]
+    B = len(lengths)
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=16, dtype=jnp.float32)
+    p = attn_lib.init_attention(
+        jax.random.PRNGKey(0), cfg,
+        head_layout(cfg.num_heads, cfg.num_kv_heads, 1), dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, K, cfg.d_model)) * 0.2,
+                    jnp.float32)
+
+    paged, kv_paged = attn_lib.attn_decode_paged_partial(
+        p, x, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, lengths=lens, window=window)
+
+    # oracle: gather pages dense, slot == position, validity from lengths
+    kd = gather_pages(k_pages[None], bt)[0]
+    vd = gather_pages(v_pages[None], bt)[0]
+    dense, kv_dense = attn_lib.attn_decode_partial(
+        p, x, cfg, group, cache_k=kd, cache_v=vd, lengths=lens,
+        window=window)
+    assert float(jnp.max(jnp.abs(paged - dense))) < 1e-4
+    assert float(jnp.max(jnp.abs(kv_paged[0] - kv_dense[0]))) < 1e-5
+    assert float(jnp.max(jnp.abs(kv_paged[1] - kv_dense[1]))) < 1e-5
