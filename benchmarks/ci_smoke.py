@@ -4,8 +4,10 @@ Runs on every push (ci.yml ``bench-smoke`` job) so the perf trajectory is
 recorded per commit instead of staying empty:
 
   * ``benchmarks/engine_bench.py`` end-to-end on CPU — ISO vs baseline,
-    paged vs dense (KV bytes, TTFT), CoW prefix sharing, and now the
-    bucketed-prefill counters (pad tokens, compiled-closure count);
+    paged vs dense (KV bytes, TTFT), CoW prefix sharing, the
+    bucketed-prefill counters (pad tokens, compiled-closure count), and the
+    batched-prefill section (packed vs batch-1 grants at 1/2/4 requests;
+    the 4-wide call reduction is lifted into ``prefill_call_reduction``);
   * ``benchmarks/perf_ledger.py --smoke`` in a subprocess (it forces 512
     placeholder XLA devices at import, which must not leak into the
     engine-bench process whose jit runs on the single real CPU device).
@@ -58,14 +60,20 @@ def main(argv=None) -> None:
                 check=True, env=dict(os.environ))
             with open(path) as f:
                 ledger = json.load(f)
-    # speculative accept rate as a first-class field so the per-push artifact
-    # tracks it without parsing derived strings
+    # headline metrics as first-class fields so the per-push artifact tracks
+    # them without parsing derived strings: speculative accept rate and the
+    # batched-prefill call reduction at 4 packed grants
     accepted_per_call = 0.0
+    prefill_call_reduction = 0.0
     for row in rows:
         if row["name"] == "engine/speculative":
             for part in row["derived"].split(";"):
                 if part.startswith("accepted_per_call="):
                     accepted_per_call = float(part.split("=", 1)[1])
+        if row["name"] == "engine/batched_prefill_4":
+            for part in row["derived"].split(";"):
+                if part.startswith("call_reduction="):
+                    prefill_call_reduction = float(part.split("=", 1)[1])
     doc = {
         "schema": "bench-smoke-v1",
         "env": {"python": platform.python_version(),
@@ -74,6 +82,7 @@ def main(argv=None) -> None:
                 "backend": jax.default_backend()},
         "wall_s": round(time.perf_counter() - t0, 2),
         "accepted_per_call": accepted_per_call,
+        "prefill_call_reduction": prefill_call_reduction,
         "engine": rows,
         "perf_ledger": ledger,
     }

@@ -44,14 +44,16 @@ def _run(cfg, iso, n_req=3, plen=96, new=8):
 
 def _run_paged(cfg, iso, params, *, lengths, new=8, budget=48, page_size=16,
                max_len=0, shared_prefix=0, prefix_sharing=True, spec_k=0,
-               repetitive=False):
+               repetitive=False, max_batch=2, prefill_batching=True):
     max_len = max_len or (max(lengths) + new + 8)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
                     iso=iso,
-                    serving=ServingConfig(page_size=page_size, max_batch=2,
+                    serving=ServingConfig(page_size=page_size,
+                                          max_batch=max_batch,
                                           max_len=max_len,
                                           prefill_token_budget=budget,
                                           prefix_sharing=prefix_sharing,
+                                          prefill_batching=prefill_batching,
                                           spec_k=spec_k))
     eng = PagedEngine(config, params)
     rng = np.random.default_rng(0)
@@ -142,6 +144,40 @@ def run(emit):
          f"prefill_compiles={compiles};compile_bound={bound};"
          f"pad_tokens={m['prefill_pad_tokens']};"
          f"buckets={len(peng._buckets or ())}")
+
+    # ---- batched multi-request prefill grants -----------------------------
+    # same-length bursts pack into one forward call per tick; the packed
+    # stream must stay byte-identical to batch-1 while the prefill
+    # forward-call count (and with it TTFT) drops.  The 4-wide ratio is the
+    # headline lifted into BENCH_pr.json by benchmarks/ci_smoke.py.
+    for n_pack in (1, 2, 4):
+        bp_lengths = (64,) * n_pack
+        outs_b1, wall_b1, eng_b1, _ = _run_paged(
+            cfg, iso2, params, lengths=bp_lengths, new=new, budget=256,
+            max_batch=4, prefix_sharing=False, prefill_batching=False)
+        outs_bp, wall_bp, eng_bp, _ = _run_paged(
+            cfg, iso2, params, lengths=bp_lengths, new=new, budget=256,
+            max_batch=4, prefix_sharing=False, prefill_batching=True)
+        assert outs_bp == outs_b1, \
+            f"batched prefill changed generated tokens at {n_pack} grants!"
+        m1, mp = eng_b1.metrics, eng_bp.metrics
+        assert mp["prefill_grants"] == m1["prefill_grants"]
+        ratio = m1["prefill_calls"] / max(mp["prefill_calls"], 1)
+        ttft_b1 = 1e3 * m1["ttft_sum"] / max(m1["ttft_n"], 1)
+        ttft_bp = 1e3 * mp["ttft_sum"] / max(mp["ttft_n"], 1)
+        tps_b1 = m1["prefill_tokens"] / max(m1["prefill_s"], 1e-9)
+        tps_bp = mp["prefill_tokens"] / max(mp["prefill_s"], 1e-9)
+        emit(f"engine/batched_prefill_{n_pack}", wall_bp * 1e6,
+             f"calls={mp['prefill_calls']};calls_batch1={m1['prefill_calls']};"
+             f"call_reduction={ratio:.2f};ttft_ms={ttft_bp:.1f};"
+             f"ttft_ms_batch1={ttft_b1:.1f};prefill_tok_s={tps_bp:.0f};"
+             f"prefill_tok_s_batch1={tps_b1:.0f};tokens_equal=True")
+        if n_pack == 4:
+            assert ratio >= 2.0, \
+                f"4 packed grants reduced prefill calls only {ratio:.2f}x"
+            bound = eng_bp.max_prefill_compiles()
+            assert eng_bp.prefill_compile_count() <= bound, \
+                (eng_bp.prefill_compile_count(), bound)
 
     # ---- CoW prefix sharing: shared-system-prompt workload ----------------
     sh_lengths = (96, 96, 96)

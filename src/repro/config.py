@@ -197,6 +197,19 @@ class ServingConfig:
     grant_bucketing: bool = True
     grant_buckets: Tuple[int, ...] = ()   # empty -> power-of-two ladder
     min_grant_bucket: int = 16
+    # batched multi-request prefill grants: grants sharing a (bucket-padded)
+    # length are packed into ONE forward call per scheduler tick instead of
+    # N batch-1 calls — the prefill-phase analogue of batched decode
+    # (TokenWeave: batch tokens across requests before overlapping
+    # communication).  Per-row pos_offset/prefix_len/valid_len ride through
+    # StageCtx into the paged flash-prefill kernel; compiled closures are
+    # keyed on (bucket, row-bucket).  Attention-only stacks without patch
+    # embeddings (recurrent families stay batch-1: their per-slot state
+    # cannot be stacked under heterogeneous grant lengths).  NOTE: for MoE
+    # stacks, router capacity is computed over the PACKED token set, so
+    # under tight capacity_factor drops may differ from batch-1 (the
+    # standard batched-MoE serving semantics).
+    prefill_batching: bool = True
     # speculative decoding (paper §Discussion): greedy-only self-drafting.
     # spec_k > 0 verifies a (spec_k+1)-token window [last, d1..d_k] per slot
     # through the paged flash-decode kernel; accepted tokens commit, rejected

@@ -94,9 +94,11 @@ def grant_buckets(max_tokens: int, min_bucket: int = 16,
     """Grant-size buckets for compile-stable chunked prefill.
 
     The paged engine pads every prefill grant up to the next bucket length so
-    ``PagedEngine._prefill_fns`` compiles one closure per bucket instead of
-    one per distinct grant length (the compile count is bounded by
-    O(#buckets) regardless of traffic).  Default: powers of two from
+    ``PagedEngine._prefill_fns`` compiles one closure per bucket (times the
+    row bucket under batched multi-request grants, where the same ladder with
+    ``min_bucket=1`` also pads the PACK's row count) instead of one per
+    distinct grant length/shape — the compile count is bounded by
+    O(#buckets x #row_buckets) regardless of traffic.  Default: powers of two from
     ``min_bucket``, with the top bucket capped at ``max_tokens`` (any grant
     is at most the request's whole prompt, itself <= max_len).  ``explicit``
     overrides the ladder; it must still cover ``max_tokens``.

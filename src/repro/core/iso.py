@@ -165,6 +165,15 @@ def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
     layer_statics: optional per-position scanned inputs (e.g. whisper cross-KV,
       stacked (P, ...)).
     Returns (x_chunks_final, per_layer_extras list-of-dicts (stacked over P)).
+
+    ``starts`` are CALL-RELATIVE chunk offsets (static ints — the ISO chunk
+    split of the call length); each row's absolute position is
+    ``sctx.pos_offset + starts[c] + t``.  With batched multi-request grants
+    ``sctx.pos_offset`` / ``sctx.lengths`` (paged prefix lens) /
+    ``sctx.valid_len`` are per-row (B,) vectors — the SAME (stage x chunk)
+    interleave then overlaps the whole packed batch's collectives at once,
+    which is exactly why packing pays: one ISO schedule amortised over N
+    requests' chunks instead of N serialized batch-1 schedules.
     """
     n_pos = len(pattern)
 

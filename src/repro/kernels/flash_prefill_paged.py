@@ -16,6 +16,17 @@ Layout (mirrors PagedKVCache, minus the period dim which the caller scans):
                                     ``j*ps + o`` is attended iff < prefix_len
     q_starts     (B,)    int32      absolute position of q[:, :, 0]
 
+All three scalar-prefetched inputs are fully HETEROGENEOUS per row — each
+batch row walks its own block table with its own prefix length and its own
+query start.  That is the batched multi-request grant layout
+(serving/paged_engine.py packs several requests' prefill grants into one
+call): a fresh request rides as a row with ``prefix_len == 0`` (every page
+masked, the output is the neutral partial state ``(0, NEG_INF, 0)``) next to
+resumed rows at arbitrary depths, and the sliding-window mask anchors at each
+row's own ``q_start``.  Nothing couples rows: the grid's batch dimension
+indexes all per-row state, so a packed call is bit-identical per row to B
+single-row calls (asserted in tests/test_flash_prefill_paged.py).
+
 Grid is (batch, kv_head, q_block, page) with the page dimension iterated
 sequentially (minor-most), exactly like the k-block dimension of
 kernels/flash_prefill.py.  Block tables / prefix lengths / query starts ride

@@ -105,7 +105,11 @@ def paged_prefill_ref(q, k_pages, v_pages, block_tables, prefix_lens,
 
     q: (B,Hq,Sq,hd); k_pages/v_pages: (N,ps,Hkv,hd); block_tables: (B,MB)
     int32 (-1 pad); prefix_lens: (B,) valid prefix tokens; q_starts: (B,)
-    absolute position of each row's first query.  Returns ``(out, m, l)``
+    absolute position of each row's first query.  Like the kernel, every
+    per-row input is heterogeneous: rows model independently-resumed packed
+    grants (batched multi-request prefill), including fresh rows with
+    ``prefix_len == 0`` whose state comes back neutral ``(0, NEG_INF, 0)``.
+    Scalars broadcast to (B,) for convenience.  Returns ``(out, m, l)``
     fp32: out = acc/l (zeros where the row attends nothing), m the masked
     row max (NEG_INF when empty), l the softmax denominator at m.
     """
@@ -114,6 +118,8 @@ def paged_prefill_ref(q, k_pages, v_pages, block_tables, prefix_lens,
     N, ps, Hkv, _ = k_pages.shape
     MB = block_tables.shape[1]
     group = Hq // Hkv
+    prefix_lens = jnp.broadcast_to(jnp.asarray(prefix_lens, jnp.int32), (B,))
+    q_starts = jnp.broadcast_to(jnp.asarray(q_starts, jnp.int32), (B,))
     idx = jnp.clip(block_tables, 0, N - 1)
     kd = k_pages[idx].reshape(B, MB * ps, Hkv, hd)
     vd = v_pages[idx].reshape(B, MB * ps, Hkv, hd)

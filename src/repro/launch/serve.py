@@ -46,6 +46,10 @@ def main(argv=None) -> int:
                     help="prepend a common system prompt of N tokens to every "
                          "request (exercises CoW prefix/page sharing)")
     ap.add_argument("--no-prefix-sharing", action="store_true")
+    ap.add_argument("--no-batched-prefill", action="store_true",
+                    help="run prefill grants batch-1 (one forward call per "
+                         "grant) instead of packing same-bucket grants into "
+                         "one batched call per scheduler tick")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: verify a (k+1)-token "
                          "self-drafted window per decode step (greedy only; "
@@ -69,6 +73,7 @@ def main(argv=None) -> int:
                             prefill_token_budget=args.prefill_budget,
                             scheduler_policy=args.policy,
                             prefix_sharing=not args.no_prefix_sharing,
+                            prefill_batching=not args.no_batched_prefill,
                             spec_k=args.spec_k)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
@@ -118,6 +123,7 @@ def main(argv=None) -> int:
         s = eng.page_stats()
         ttft = m["ttft_sum"] / max(m["ttft_n"], 1)
         print(f"paged: steps={m['steps']} prefill_calls={m['prefill_calls']} "
+              f"prefill_grants={m['prefill_grants']} "
               f"preemptions={m['preemptions']} ttft={ttft * 1e3:.1f}ms | "
               f"pages={s['num_pages']}x{s['page_size']} "
               f"kv_reserved={s['kv_bytes_reserved']}B tp={args.tp}")

@@ -74,6 +74,30 @@ def project_qkv(p: dict, x, cfg: ModelConfig, positions,
     return q, k, v
 
 
+def row_starts(start_pos, B):
+    """Normalise a chunk-start to a (B,) int32 vector.
+
+    ``start_pos`` may be a static int, a traced scalar (resumed chunked
+    prefill), or a (B,) vector (batched multi-request prefill grants, where
+    each packed row resumes at its own absolute position)."""
+    s = jnp.asarray(start_pos, jnp.int32)
+    return jnp.broadcast_to(s, (B,)) if s.ndim == 0 else s
+
+
+def row_positions(start_pos, B, S):
+    """(B, S) absolute positions of S consecutive tokens starting at
+    ``start_pos`` (scalar or per-row (B,); see ``row_starts``)."""
+    return (row_starts(start_pos, B)[:, None]
+            + jnp.arange(S, dtype=jnp.int32)[None, :])
+
+
+def _k_limit_col(k_limit):
+    """Broadcast a key-position bound (scalar or per-row (B,)) against
+    (B, Sk) key positions."""
+    kl = jnp.asarray(k_limit, jnp.int32)
+    return kl[:, None] if kl.ndim == 1 else kl
+
+
 def sdpa_blockwise(q, k, v, *, q_pos, k_pos, causal: bool = True,
                    window: int = 0, k_valid=None, group_eff: int = 1,
                    block_k: int = 1024):
@@ -217,19 +241,20 @@ def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
                          start_pos, prefix_kv: Optional[Tuple] = None,
                          prefix_pos=None, window: int = 0, causal: bool = True,
                          k_limit=None):
-    """Chunked-prefill attention.  ``start_pos``: scalar absolute position of the
-    chunk's first token (static or traced).  ``prefix_kv``: (k,v) of all previous
+    """Chunked-prefill attention.  ``start_pos``: absolute position of the
+    chunk's first token — static int, traced scalar, or per-row (B,) vector
+    (batched multi-request grants).  ``prefix_kv``: (k,v) of all previous
     chunks (local shard).  ``prefix_pos``: optional (B, S_prefix) absolute position
     of each prefix slot, -1 = empty — required when the prefix comes from a paged
     cache (resumed chunked prefill), where slots are padded and slot != position.
     Without it the prefix is assumed dense and contiguous from position 0.
-    ``k_limit``: optional scalar (traced) absolute position bound — keys at
-    positions >= k_limit are masked (bucket-padded tail tokens must not be
-    attended; see grant-size bucketing in serving/paged_engine.py).
+    ``k_limit``: optional absolute position bound, scalar or per-row (B,) —
+    keys at positions >= k_limit are masked (bucket-padded tail tokens must
+    not be attended; see grant-size bucketing in serving/paged_engine.py).
     Returns (partial_out, (k,v) of THIS chunk for the growing prefix).
     """
     B, S, _ = x.shape
-    q_pos = (start_pos + jnp.arange(S, dtype=jnp.int32))[None, :].repeat(B, 0)
+    q_pos = row_positions(start_pos, B, S)
     q, k, v = project_qkv(p, x, cfg, q_pos)
     k_valid = None
     if prefix_kv is not None:
@@ -248,7 +273,7 @@ def attn_prefill_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
         k_all, v_all = k, v
         k_pos = q_pos
     if k_limit is not None:
-        lim = k_pos < k_limit
+        lim = k_pos < _k_limit_col(k_limit)
         k_valid = lim if k_valid is None else (k_valid & lim)
     if cfg.attn_impl == "blockwise":
         out = sdpa_blockwise(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
@@ -271,10 +296,14 @@ def attn_prefill_paged_partial(p: dict, x, cfg: ModelConfig,
     (local shard); block_tables: (B, MB) int32 (-1 pad); prefix_lens: (B,)
     int32 resident prefix tokens (key position j*ps+o attended iff
     < prefix_len — also the prefix-sharing rule: donor KV beyond the shared
-    prefix sits at positions >= prefix_len).  ``start_pos``: scalar absolute
-    position of the chunk's first token (traced).  ``intra_kv``/``intra_pos``:
-    (k, v) and positions of earlier ISO chunks WITHIN this call (not yet in
-    pages).  ``k_limit``: as in ``attn_prefill_partial`` (bucket pad mask).
+    prefix sits at positions >= prefix_len).  ``start_pos``: absolute
+    position of the chunk's first token — traced scalar, or a (B,) vector
+    when the rows are packed multi-request grants each resuming at its own
+    offset (a fresh row rides with prefix_len 0: the kernel returns the
+    neutral partial state and the merge reduces to plain causal
+    self-attention).  ``intra_kv``/``intra_pos``: (k, v) and positions of
+    earlier ISO chunks WITHIN this call (not yet in pages).  ``k_limit``: as
+    in ``attn_prefill_partial`` (bucket pad mask, scalar or per-row (B,)).
 
     The Pallas kernel (kernels/flash_prefill_paged.py) walks the block table
     with an online softmax and returns the partial state over the paged
@@ -284,9 +313,9 @@ def attn_prefill_paged_partial(p: dict, x, cfg: ModelConfig,
     """
     from repro.kernels.flash_prefill_paged import flash_prefill_paged
     B, S, _ = x.shape
-    q_pos = (start_pos + jnp.arange(S, dtype=jnp.int32))[None, :].repeat(B, 0)
+    q_pos = row_positions(start_pos, B, S)
     q, k, v = project_qkv(p, x, cfg, q_pos)
-    q_starts = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
+    q_starts = row_starts(start_pos, B)
     out_p, m_p, l_p = flash_prefill_paged(
         q.transpose(0, 2, 1, 3), k_pages, v_pages, block_tables,
         prefix_lens, q_starts, window=window)
@@ -300,7 +329,7 @@ def attn_prefill_paged_partial(p: dict, x, cfg: ModelConfig,
         k_pos = jnp.concatenate([intra_pos.astype(jnp.int32), q_pos], axis=1)
     else:
         k_all, v_all, k_pos = k, v, q_pos
-    k_valid = (k_pos < k_limit) if k_limit is not None else None
+    k_valid = (k_pos < _k_limit_col(k_limit)) if k_limit is not None else None
     out_i, m_i, l_i = sdpa_partial(q, k_all, v_all, q_pos=q_pos, k_pos=k_pos,
                                    causal=True, window=window,
                                    k_valid=k_valid, group_eff=layout_group)

@@ -40,15 +40,18 @@ class StageCtx:
     window: int = 0
     lengths: Optional[jnp.ndarray] = None   # decode: (B,) cached token counts
     # resumed chunked prefill (paged engine): absolute position of this call's
-    # first token — static int or traced scalar; chunk starts stay call-relative
+    # first token — static int, traced scalar, or per-row (B,) vector (batched
+    # multi-request grants); chunk starts stay call-relative
     pos_offset: Any = 0
     # paged decode (flash-decode over block tables): (B, MB) int32 page ids per
     # request, and the (B,) bool mask of slots really decoding this step
     block_tables: Optional[jnp.ndarray] = None
     decode_mask: Optional[jnp.ndarray] = None
     # grant-size bucketing (paged prefill): number of REAL tokens in this call
-    # (traced scalar) — call-relative positions >= valid_len are pad and must
-    # neither be attended as keys nor scatter KV.  None = no padding.
+    # — traced scalar, or per-row (B,) vector for batched grants whose rows
+    # carry different real lengths.  Call-relative positions >= valid_len are
+    # pad and must neither be attended as keys nor scatter KV.  None = no
+    # padding.
     valid_len: Any = None
 
 
@@ -75,15 +78,14 @@ def _resume_prefix(seq_state, cache, sctx: StageCtx, start_pos, B):
     """
     if cache is None or "k" not in cache:
         if seq_state is not None and not _static_zero(sctx.pos_offset):
-            intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
-            return seq_state, jnp.broadcast_to(intra[None], (B, start_pos))
+            return seq_state, attn_lib.row_positions(sctx.pos_offset, B,
+                                                     start_pos)
         return seq_state, None
     ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
     if seq_state is None:
         return (ck, cv), cpos
     sk, sv = seq_state
-    intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
-    intra = jnp.broadcast_to(intra[None], (B, start_pos))
+    intra = attn_lib.row_positions(sctx.pos_offset, B, start_pos)
     return ((jnp.concatenate([ck, sk], axis=1),
              jnp.concatenate([cv, sv], axis=1)),
             jnp.concatenate([cpos.astype(jnp.int32), intra], axis=1))
@@ -110,8 +112,7 @@ def _prefill_attn(p_attn, xn, kv_state, cache, sctx: StageCtx, start_pos, B):
     if cache is not None and "k_pages" in cache:
         intra_pos = None
         if kv_state is not None:
-            intra = sctx.pos_offset + jnp.arange(start_pos, dtype=jnp.int32)
-            intra_pos = jnp.broadcast_to(intra[None], (B, start_pos))
+            intra_pos = attn_lib.row_positions(sctx.pos_offset, B, start_pos)
         return attn_lib.attn_prefill_paged_partial(
             p_attn, xn, cfg, sctx.group_eff,
             k_pages=cache["k_pages"], v_pages=cache["v_pages"],

@@ -127,6 +127,13 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     (traced scalar) marks how many of this call's tokens are real — the
     bucket-padded tail beyond it is masked out of attention (grant-size
     bucketing; see serving/paged_engine.py).
+
+    Batched multi-request grants: ``pos_offset``, ``prefix_lens`` and
+    ``valid_len`` may all be per-row (B,) vectors — each row is one packed
+    prefill grant resuming at its own absolute position with its own paged
+    prefix (0 for a fresh request) and its own real-token count.  The ISO
+    chunk split is over the shared (bucket-padded) call length, so the
+    overlap schedule applies to the whole packed batch at once.
     """
     if embeds is None:
         embeds = embed_tokens(params, tokens, cfg, ctx)

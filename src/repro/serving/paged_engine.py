@@ -10,7 +10,13 @@ replaces both halves:
     (the ISO chunk boundaries from ``core/chunking.split_chunks`` are the
     scheduling quanta) and then ONE batched decode step for every request
     whose prompt is fully resident — Sarathi-style chunk/decode mixing across
-    requests, ISO overlap order inside each prefill call.
+    requests, ISO overlap order inside each prefill call.  Grants sharing a
+    bucket-padded length are PACKED into one multi-row forward call per tick
+    (``ServingConfig.prefill_batching``, attention-only stacks): per-row
+    ``pos_offset``/``prefix_len``/``valid_len`` ride through ``StageCtx``
+    into the paged flash-prefill kernel, so a fresh request (prefix 0) and
+    resumed requests at arbitrary depths share one call and one ISO overlap
+    schedule instead of N serialized batch-1 calls.
 
 A request whose prompt is partially prefilled keeps its KV prefix in pages and
 its recurrent (SSM/xLSTM) states in per-slot arrays across engine steps; the
@@ -113,6 +119,19 @@ class PagedEngine:
             policy=sv.scheduler_policy,
             prefill_token_budget=sv.prefill_token_budget,
             grant_buckets=self._buckets)
+        # batched multi-request prefill grants: pack same-padded-length grants
+        # into ONE forward call per tick (per-row pos_offset/prefix_len/
+        # valid_len threaded through StageCtx into the paged prefill kernel).
+        # Attention-only stacks without patch embeddings — recurrent families
+        # carry per-slot state the packed rows cannot share, and patch grants
+        # have a row-heterogeneous embed layout.  The row count is padded to
+        # a power-of-two ladder so closures stay keyed on
+        # (length bucket, row bucket) — O(#buckets x #row_buckets) compiles.
+        self._batch_prefill = (sv.prefill_batching and self.cfg.num_patches == 0
+                               and all(k in ("attn_mlp", "attn_moe")
+                                       for k in self.cfg.block_pattern))
+        self._row_buckets = grant_buckets(sv.max_batch, min_bucket=1) \
+            if self._batch_prefill else (1,)
         # copy-on-write prefix sharing: attention-only stacks (recurrent
         # families carry per-slot SSM/xLSTM state that pages cannot share)
         self.prefix_cache: Optional[PrefixCache] = None
@@ -144,7 +163,8 @@ class PagedEngine:
                         "prefix_shared_tokens": 0, "cow_copies": 0,
                         "peak_used_pages": 0, "prefill_pad_tokens": 0,
                         "prefill_samples": 0, "spec_calls": 0,
-                        "spec_tokens": 0}
+                        "spec_tokens": 0, "prefill_grants": 0,
+                        "resumed_grants": 0, "prefill_pad_rows": 0}
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -413,6 +433,83 @@ class PagedEngine:
         self._prefill_fns[key] = self._wrap_prefill(fn, n_patches > 0)
         return self._prefill_fns[key]
 
+    def _wrap_prefill_batched(self, fn):
+        if self.mesh is None:
+            return jax.jit(fn)
+        p_specs = decoder_param_specs(jax.eval_shape(lambda: self.params))
+        in_specs = (p_specs, P(None, None), self._kv_specs(),
+                    P(None, None), P(None), P(None))
+        out_specs = (P(None, "model"), self._kv_specs())
+        sm = compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+        return jax.jit(sm)
+
+    def _get_prefill_batched(self, n_text: int, rows: int, all_fresh: bool):
+        """Jitted prefill closure for a PACK of grants: ``rows`` requests'
+        grants (row-bucket-padded) run as one ``(rows, n_text)`` forward call.
+
+        Every row resumes at its own absolute position: per-row
+        ``starts`` doubles as the paged ``prefix_lens`` (a fresh request is
+        simply a row with prefix 0 — the kernel returns the neutral partial
+        state for it) and per-row ``n_reals`` masks each row's bucket-pad
+        tail.  Pad ROWS (beyond the real pack size) carry all-(-1) block
+        tables, start 0 and n_real 0: fully masked out of attention, KV
+        routed to the scratch page with pos -1.  ``all_fresh`` packs (every
+        row at start 0 — the common cold-prefill case) skip the paged
+        kernel entirely: with no resident prefix the whole block-table walk
+        would be masked, so they take the dense intra-call path like the
+        batch-1 fresh closure did.  The key space is
+        (length bucket, row bucket, all-fresh) — O(#buckets x #row_buckets)
+        closures.  Attention-only stacks: no recurrent state crosses this
+        call."""
+        key = (n_text, rows, all_fresh)
+        if key in self._prefill_fns:
+            return self._prefill_fns[key]
+        cfg, iso, ctx = self.cfg, self.config.iso, self._ctx
+        T = n_text
+        ps = self.ps
+        scratch = self.kv.scratch_page
+        empty_states = tuple({} for _ in cfg.block_pattern)
+
+        def fn(params, tokens, kv_arrays, bt, starts, n_reals):
+            prefix = None if all_fresh else \
+                self._paged_prefix(kv_arrays, empty_states)
+            out = api.prefill(
+                params, cfg, ctx, iso, {"tokens": tokens}, logits_mode="none",
+                prefix_caches=prefix, pos_offset=starts,
+                block_tables=None if all_fresh else bt,
+                prefix_lens=None if all_fresh else starts,
+                valid_len=n_reals, return_extras=True)
+            # logits of each row's last REAL token (pad tails carry garbage)
+            h_last = out["hidden"][jnp.arange(rows),
+                                   jnp.clip(n_reals - 1, 0, T - 1)]
+            logits_last = emb_lib.lm_head_local(params["embed"],
+                                                h_last[:, None])[:, 0]
+            positions = (starts[:, None]
+                         + jnp.arange(T, dtype=jnp.int32)[None])   # (rows, T)
+            page, off = jax.vmap(
+                lambda p_, b_: token_page_coords(p_, b_, ps, scratch))(
+                    positions, bt)
+            # pad-tail tokens (and whole pad rows) must not scatter KV into
+            # live pages; anything routed to scratch writes pos -1
+            page = jnp.where(jnp.arange(T)[None] < n_reals[:, None],
+                             page, scratch)
+            positions = jnp.where(page != scratch, positions, -1)
+            new_kv = dict(kv_arrays)
+            ks, vs = list(kv_arrays["k"]), list(kv_arrays["v"])
+            for kv_i, i in enumerate(self.kv.kv_positions):
+                ex = out["extras"][i]
+                ks[kv_i] = ks[kv_i].at[:, page, off].set(
+                    ex["kv_k"].astype(ks[kv_i].dtype))
+                vs[kv_i] = vs[kv_i].at[:, page, off].set(
+                    ex["kv_v"].astype(vs[kv_i].dtype))
+            new_kv["k"], new_kv["v"] = tuple(ks), tuple(vs)
+            new_kv["pos"] = kv_arrays["pos"].at[page, off].set(positions)
+            return logits_last, new_kv
+
+        self._prefill_fns[key] = self._wrap_prefill_batched(fn)
+        return self._prefill_fns[key]
+
     # ---- compile accounting (CI compile-guard lane) -------------------
     def prefill_compile_count(self) -> int:
         """Total prefill-closure compilations so far (one jit cache entry per
@@ -421,11 +518,17 @@ class PagedEngine:
                    for fn in self._prefill_fns.values())
 
     def max_prefill_compiles(self) -> Optional[int]:
-        """Upper bound on prefill compilations under bucketing: one closure
-        per (bucket, fresh|resumed) pair.  None when bucketing is off (one
+        """Upper bound on prefill compilations under bucketing.  With batched
+        grants: one closure per (length bucket, row bucket) pair — every
+        grant, fresh or resumed, single or packed, runs through the batched
+        closure.  Batch-1 mode keeps the old bound of one closure per
+        (bucket, fresh|resumed) pair.  None when bucketing is off (one
         closure per distinct grant length — unbounded under mixed traffic)."""
         if self._buckets is None:
             return None
+        if self._batch_prefill:
+            # (length bucket, row bucket, all-fresh|has-resumed)
+            return 2 * len(self._buckets) * len(self._row_buckets)
         return 2 * len(self._buckets)
 
     def _get_decode(self, K: int = 1):
@@ -535,13 +638,28 @@ class PagedEngine:
         self.states = jax.tree_util.tree_map(
             lambda big, new: big.at[:, slot:slot + 1].set(new.astype(big.dtype)),
             self.states, new_states)
+        return self._commit_grant_row(
+            st, start, n_tokens,
+            np.asarray(jax.device_get(logits_last))[0] if last else None, last)
+
+    def _commit_grant_row(self, st: RequestState, start: int, n_tokens: int,
+                          logits_row, last: bool) -> Optional[int]:
+        """Post-forward bookkeeping for one grant (single or packed row):
+        commit tokens to the allocator, advance prefill progress, and — for a
+        prompt-finishing grant — sample the first token from ``logits_row``
+        ((V,) fp32 of the last real position), stamp TTFT and (re)build the
+        speculative self-draft."""
+        req = st.request
+        slot = st.slot
         self.alloc.commit(req.rid, n_tokens)
         st.prefilled = start + n_tokens
         self.lengths[slot] = st.prefilled
+        self.metrics["prefill_grants"] += 1
+        if start > 0:
+            self.metrics["resumed_grants"] += 1
         if not last:
             return None
-        logits = np.asarray(jax.device_get(logits_last))[0]
-        tok = sample(logits[:self.cfg.vocab_size], req.sampling,
+        tok = sample(logits_row[:self.cfg.vocab_size], req.sampling,
                      step=len(st.generated))
         self.metrics["prefill_samples"] += 1
         if st.t_first < 0:
@@ -553,12 +671,60 @@ class PagedEngine:
             # recompute preemption that includes the already-generated tokens
             from repro.serving.speculative import BigramDraft
             d = BigramDraft()
-            d.observe([int(t) for t in toks_all] + [int(tok)])
+            d.observe([int(t) for t in self._resident_tokens(st)] + [int(tok)])
             self._drafts[slot] = d
         st.generated.append(tok)
         self.last_tokens[slot] = tok
         st.finish_check()
         return tok
+
+    def _run_pack(self, group: List[Tuple], padded: int,
+                  events: List[Tuple[int, int]]) -> None:
+        """Execute a pack of prepped grants as ONE batched forward call.
+
+        ``group``: [(st, start, n_tokens, padded, last), ...] sharing the
+        same padded length.  The row count is padded up to a row bucket so
+        the jitted closure is keyed on (length bucket, row bucket); pad rows
+        carry empty block tables and n_real 0 (fully masked, scratch-routed).
+        """
+        R = len(group)
+        rows = round_to_bucket(R, self._row_buckets)
+        T = padded
+        toks = np.zeros((rows, T), np.int32)
+        starts = np.zeros(rows, np.int32)
+        n_reals = np.zeros(rows, np.int32)
+        bts = np.full((rows, self.max_blocks), -1, np.int32)
+        for r, (st, start, n, _, _last) in enumerate(group):
+            toks_all = self._resident_tokens(st)
+            toks[r, :n] = toks_all[start:start + n]
+            starts[r] = start
+            n_reals[r] = n
+            bts[r] = self.alloc.block_table(st.request.rid, self.max_blocks)
+        fn = self._get_prefill_batched(T, rows,
+                                       all_fresh=bool(np.all(starts == 0)))
+        t0_wall = time.perf_counter()
+        with self._mesh_ctx():
+            logits_last, new_kv = fn(self.params, jnp.asarray(toks),
+                                     self.kv.arrays, jnp.asarray(bts),
+                                     jnp.asarray(starts), jnp.asarray(n_reals))
+        jax.block_until_ready(logits_last)
+        n_total = int(n_reals.sum())
+        self.metrics["prefill_s"] += time.perf_counter() - t0_wall
+        self.metrics["prefill_tokens"] += n_total
+        self.metrics["prefill_pad_tokens"] += rows * T - n_total
+        self.metrics["prefill_pad_rows"] += rows - R
+        self.metrics["prefill_calls"] += 1
+        self.kv.arrays = new_kv
+        logits_np = None
+        if any(p[4] for p in group):
+            logits_np = np.asarray(jax.device_get(logits_last))
+        for r, (st, start, n, _, last) in enumerate(group):
+            tok = self._commit_grant_row(
+                st, start, n, logits_np[r] if last else None, last)
+            if tok is not None:
+                events.append((st.request.rid, tok))
+                if st.done:
+                    self._finish(st)
 
     def _finish(self, st: RequestState) -> None:
         # decode_tokens is tallied where tokens are produced (_decode_phase),
@@ -577,46 +743,121 @@ class PagedEngine:
         self._drafts[st.slot] = None
         st.slot = -1
 
+    def _prep_grant(self, g) -> Optional[Tuple]:
+        """Per-grant pre-work shared by the batch-1 and packed paths: prefix-
+        sharing retry, page allocation growth and copy-on-write (both may
+        evict).  Returns (st, start, n_tokens, padded, last) ready to run, or
+        None when the grant dissolved (its request was preempted by an
+        earlier grant's eviction, or same-step sharing covered it fully)."""
+        st = self._by_rid.get(g.rid)
+        if st is None or st.slot < 0:
+            return None                       # preempted by an earlier grant
+        start, end = g.start, g.start + g.n_tokens
+        if start == 0 and st.prefilled == 0:
+            # retry prefix sharing: a donor granted EARLIER this step (batch-1
+            # mode: already ran; packed mode: earlier pack) has committed its
+            # first chunks by now
+            self._try_share_prefix(st)
+            start = st.prefilled
+            if end <= start:                  # grant fully covered by sharing
+                return None
+        if not self._ensure_pages(g.rid, end) or \
+                not self._cow_range(g.rid, start, end):
+            # unreachable once add_request validated pool capacity; a
+            # silent skip here would spin run_until_complete forever
+            raise RuntimeError(
+                f"page pool too small for request {g.rid}'s prefill chunk "
+                f"even after evicting; increase ServingConfig.num_pages")
+        # the scheduler owns grant rounding (g.padded); re-round only
+        # when same-step prefix sharing shrank the grant, and never pad
+        # patch-carrying grants (the scheduler is model-agnostic)
+        n = end - start
+        if st.request.patches is not None:
+            padded = n
+        elif start == g.start and n == g.n_tokens:
+            padded = g.padded or n
+        else:
+            padded = self._pad_len(st, n)
+        return st, start, n, padded, g.last
+
     def _prefill_phase(self, events: List[Tuple[int, int]]) -> None:
         # prefill target = sum(chunk_plan): the prompt at admission, or
         # prompt+generated after a recompute preemption
         pending = [(s.request.rid, s.prefilled, s.chunk_plan)
                    for s in self.slots
                    if s is not None and s.prefilled < sum(s.chunk_plan)]
-        for g in self.scheduler.grant_prefill(pending):
-            st = self._by_rid.get(g.rid)
-            if st is None or st.slot < 0:
-                continue                      # preempted by an earlier grant
-            start, end = g.start, g.start + g.n_tokens
-            if start == 0 and st.prefilled == 0:
-                # retry prefix sharing: a donor admitted in the SAME step has
-                # committed its first chunks by now (grants run sequentially)
-                self._try_share_prefix(st)
-                start = st.prefilled
-                if end <= start:              # grant fully covered by sharing
+        grants = self.scheduler.grant_prefill(pending)
+        if not self._batch_prefill:
+            for g in grants:
+                prep = self._prep_grant(g)
+                if prep is None:
                     continue
-            if not self._ensure_pages(g.rid, end) or \
-                    not self._cow_range(g.rid, start, end):
-                # unreachable once add_request validated pool capacity; a
-                # silent skip here would spin run_until_complete forever
-                raise RuntimeError(
-                    f"page pool too small for request {g.rid}'s prefill chunk "
-                    f"even after evicting; increase ServingConfig.num_pages")
-            # the scheduler owns grant rounding (g.padded); re-round only
-            # when same-step prefix sharing shrank the grant, and never pad
-            # patch-carrying grants (the scheduler is model-agnostic)
-            n = end - start
-            if st.request.patches is not None:
-                padded = n
-            elif start == g.start and n == g.n_tokens:
-                padded = g.padded or n
-            else:
-                padded = self._pad_len(st, n)
-            tok = self._run_grant(st, start, n, padded, g.last)
-            if tok is not None:
-                events.append((g.rid, tok))
-                if st.done:
-                    self._finish(st)
+                st, start, n, padded, last = prep
+                tok = self._run_grant(st, start, n, padded, last)
+                if tok is not None:
+                    events.append((st.request.rid, tok))
+                    if st.done:
+                        self._finish(st)
+            return
+        # packed path: the scheduler groups compatible grants (same padded
+        # length, policy order — scheduler.pack_grants); each pack runs as
+        # ONE forward call.  Prep runs pack-by-pack in policy order, so
+        # eviction/CoW semantics match the sequential path; a prep that
+        # evicts a packmate drops it from the pack (slot check below), and
+        # same-step sharing that SHRANK a grant re-buckets it into a
+        # sub-group of its own padded length.  A fresh grant that could
+        # prefix-share with a PACKMATE is deferred to a follow-up sub-pack:
+        # sharing adopts only COMMITTED tokens, and packmates commit together
+        # after the call — running donor and sharee in one call would
+        # silently lose the share that the sequential path gets.
+        for pack in self.scheduler.pack_grants(grants,
+                                               max_rows=self.max_batch):
+            ready, deferred = [], []
+            for g in pack:
+                if self._defer_for_packmate_sharing(g, ready):
+                    deferred.append(g)
+                    continue
+                prep = self._prep_grant(g)
+                if prep is not None:
+                    ready.append(prep)
+            self._run_groups(ready, events)
+            if deferred:
+                # donors committed above; the normal grant-time sharing
+                # retry inside _prep_grant now engages for the sharees
+                self._run_groups(
+                    [p for g in deferred
+                     if (p := self._prep_grant(g)) is not None], events)
+
+    def _defer_for_packmate_sharing(self, g, prepped: List[Tuple]) -> bool:
+        """True if fresh grant ``g`` shares its first KV page's worth of
+        prompt with an earlier member of the SAME pack — the only case where
+        packing would lose a prefix share the batch-1 path gets (cross-pack
+        donors have committed by the sharee's prep; packmates have not)."""
+        if self.prefix_cache is None or not prepped:
+            return False
+        st = self._by_rid.get(g.rid)
+        if st is None or st.slot < 0 or st.prefilled > 0 or g.start != 0:
+            return False
+        prompt = np.asarray(st.request.prompt, np.int32)
+        if len(prompt) < self.ps:
+            return False                  # sharing needs a full page match
+        head = prompt[:self.ps]
+        for p_st, _, _, _, _ in prepped:
+            donor = np.asarray(p_st.request.prompt, np.int32)
+            if len(donor) >= self.ps and np.array_equal(donor[:self.ps], head):
+                return True
+        return False
+
+    def _run_groups(self, ready: List[Tuple],
+                    events: List[Tuple[int, int]]) -> None:
+        """Run prepped grants as packed calls, sub-grouped by their FINAL
+        padded length (same-step sharing may have re-bucketed some)."""
+        ready = [p for p in ready if p[0].slot >= 0]
+        by_len: Dict[int, List[Tuple]] = {}
+        for p in ready:
+            by_len.setdefault(p[3], []).append(p)
+        for padded, group in by_len.items():
+            self._run_pack(group, padded, events)
 
     def _spec_window(self, active) -> int:
         """Verify-window width for this decode step: spec_k+1 when every

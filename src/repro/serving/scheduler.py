@@ -106,6 +106,11 @@ class TokenBudgetScheduler:
         in policy order; the head-of-line request always gets at least its next
         chunk even if the chunk alone exceeds the budget (guarantees progress —
         a prompt whose chunk is bigger than the budget would otherwise starve).
+
+        The returned list is in policy order — (arrival,) for fcfs,
+        (-priority, arrival) for priority — independent of the iteration
+        order of ``prefill_states`` (``pack_grants`` re-sorts by the same
+        key, so grant PACKING is deterministic too).
         """
         by_rid = {rid: (done, plan) for rid, done, plan in prefill_states}
         grants: List[PrefillGrant] = []
@@ -138,6 +143,37 @@ class TokenBudgetScheduler:
             if remaining == 0:
                 break
         return grants
+
+    def pack_grants(self, grants: Sequence[PrefillGrant], max_rows: int = 0
+                    ) -> List[List[PrefillGrant]]:
+        """Group compatible grants into batched packs (one forward call each).
+
+        Packing is DETERMINISTIC under both policies, by construction:
+        grants are first sorted by the scheduler key — (arrival,) for fcfs,
+        (-priority, arrival) for priority; the same total order
+        ``grant_prefill`` emits in, re-applied here so callers cannot
+        perturb packing by reordering the grant list — then greedily grouped
+        by identical ``padded`` length (rows of one forward call must share
+        the call shape).  A pack closes when it reaches ``max_rows``; packs
+        are emitted in the policy order of their first member.  Grants whose
+        bucket never repeats become singleton packs.
+
+        ``max_rows <= 1`` disables packing (every grant is its own pack) —
+        the batch-1 reference the differential tests compare against.
+        """
+        if max_rows <= 1:
+            return [[g] for g in grants]
+        ordered = sorted(grants, key=lambda g: self._key(g.rid))
+        packs: List[List[PrefillGrant]] = []
+        open_by_len: Dict[int, int] = {}      # padded length -> pack index
+        for g in ordered:
+            idx = open_by_len.get(g.padded)
+            if idx is None or len(packs[idx]) >= max_rows:
+                open_by_len[g.padded] = len(packs)
+                packs.append([g])
+            else:
+                packs[idx].append(g)
+        return packs
 
     def pick_victim(self, running: Sequence[int], protect: Sequence[int] = ()
                     ) -> Optional[int]:

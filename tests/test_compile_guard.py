@@ -5,7 +5,9 @@ Runs the paged engine over a mixed-length trace with many distinct prompt
 counter (compat.jit_cache_size), that
 
   * total prefill compilations <= the engine's published bound
-    (2 * #buckets: one closure per (bucket, fresh|resumed) pair);
+    (2 * #buckets x #row_buckets under batched grants — one closure per
+    (length bucket, row bucket, all-fresh|has-resumed) triple; 2 * #buckets
+    in batch-1 mode — one per (bucket, fresh|resumed) pair);
   * bucketing actually collapsed shapes (compilations < distinct prompt
     lengths in the trace);
   * each compiled closure was compiled exactly ONCE (a traced-vs-static
@@ -28,7 +30,8 @@ from repro.serving import PagedEngine, Request
 from repro.serving.requests import SamplingParams
 
 
-def _run_trace(lengths, *, grant_bucketing=True, new=3):
+def _run_trace(lengths, *, grant_bucketing=True, new=3, budget=24,
+               prefill_batching=True):
     cfg = tiny_dense(vocab_size=64)
     iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
     params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
@@ -37,8 +40,9 @@ def _run_trace(lengths, *, grant_bucketing=True, new=3):
                     iso=iso,
                     serving=ServingConfig(page_size=8, max_batch=4,
                                           max_len=160,
-                                          prefill_token_budget=24,
-                                          grant_bucketing=grant_bucketing))
+                                          prefill_token_budget=budget,
+                                          grant_bucketing=grant_bucketing,
+                                          prefill_batching=prefill_batching))
     eng = PagedEngine(config, params)
     rng = np.random.default_rng(0)
     for n in lengths:
@@ -77,6 +81,54 @@ def test_prefill_compiles_bounded_by_buckets():
 
 
 def test_unbucketed_engine_reports_no_bound():
-    eng = _run_trace((9, 17, 33), grant_bucketing=False)
+    eng = _run_trace((9, 17, 33), grant_bucketing=False,
+                     prefill_batching=False)
     assert eng.max_prefill_compiles() is None
     assert eng.metrics["prefill_pad_tokens"] == 0
+
+
+def test_batched_grants_compile_bound():
+    """Batched multi-request grants: a trace whose steps mix 1-4 simultaneous
+    grants (a big budget lets every resident request prefill each tick) must
+    compile at most O(#buckets x #row_buckets) prefill closures (the
+    published bound: 2x for the all-fresh|has-resumed key bit), exercise
+    more than one ROW bucket, and leave the decode closure set untouched at
+    {1}."""
+    # 4-at-a-time same-bucket bursts + stragglers of other buckets: packs of
+    # width 4, 2 and 1 across buckets 16/32/64
+    lengths = (16, 15, 14, 13, 32, 31, 30, 29, 64, 63, 33, 7, 70, 90)
+    eng = _run_trace(lengths, budget=256)
+    assert eng._batch_prefill, "batched prefill unexpectedly disabled"
+    bound = eng.max_prefill_compiles()
+    # one closure per (length bucket, row bucket, all-fresh|has-resumed)
+    assert bound == 2 * len(eng._buckets) * len(eng._row_buckets)
+    compiles = eng.prefill_compile_count()
+    assert compiles <= bound, \
+        f"{compiles} prefill compilations exceed {bound} " \
+        f"(= 2 x {len(eng._buckets)} buckets x {len(eng._row_buckets)} " \
+        f"row buckets)"
+    # packing really happened: strictly fewer calls than grants, and at
+    # least two distinct row buckets were exercised
+    assert eng.metrics["prefill_calls"] < eng.metrics["prefill_grants"]
+    row_buckets_used = {k[1] for k in eng._prefill_fns}
+    assert len(row_buckets_used) >= 2, row_buckets_used
+    # every closure compiled exactly once (no traced-vs-static key leak)
+    for key, fn in eng._prefill_fns.items():
+        assert compat.jit_cache_size(fn) == 1, \
+            f"batched prefill closure {key} recompiled"
+    # decode stays ONE closure compiled once — packing must not widen it
+    assert set(eng._decode_fns) == {1}, \
+        f"unexpected decode closures: {sorted(eng._decode_fns)}"
+    assert compat.jit_cache_size(eng._decode_fns[1]) == 1, "decode recompiled"
+
+
+def test_batch1_engine_keeps_fresh_resumed_bound():
+    """prefill_batching=False keeps the PR-3 key space: one closure per
+    (bucket, fresh|resumed) pair, bound 2 x #buckets."""
+    lengths = (7, 9, 17, 33, 70, 90)
+    eng = _run_trace(lengths, prefill_batching=False)
+    bound = eng.max_prefill_compiles()
+    assert bound == 2 * len(eng._buckets)
+    assert eng.prefill_compile_count() <= bound
+    assert all(len(k) == 3 for k in eng._prefill_fns), \
+        list(eng._prefill_fns)

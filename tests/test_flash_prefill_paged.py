@@ -110,6 +110,97 @@ def test_kernel_pos_offset_within_grant():
     assert float(jnp.max(jnp.abs(out - ro))) < 1e-5
 
 
+@pytest.mark.parametrize("page_size", [8, 16])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_kernel_heterogeneous_rows(page_size, dtype, tol):
+    """The batched-grant layout: every row has its OWN prefix length, query
+    start and block table — a fresh request (prefix 0) packed next to resumed
+    ones at different depths, each row's queries starting right after its own
+    prefix.  The per-row scalar prefetch must keep the rows independent."""
+    rng = np.random.default_rng(20)
+    ps = page_size
+    prefix_lens = [0, ps + 3, 3 * ps, 2 * ps - 1]
+    hq, hkv, hd = 4, 2, 16
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=32, dtype=dtype)
+    Sq = ps + 2
+    q = jnp.asarray(rng.standard_normal((len(prefix_lens), hq, Sq, hd)), dtype)
+    # q_starts == prefix_lens: the packed-grant resume layout (fresh row: 0)
+    out, m, l = flash_prefill_paged(q, k_pages, v_pages, bt, lens, lens,
+                                    block_q=8)
+    ro, rm, rl = paged_prefill_ref(q, k_pages, v_pages, bt, lens, lens)
+    assert float(jnp.max(jnp.abs(out - ro))) < tol
+    assert float(jnp.max(jnp.abs(l - rl))) < tol * 10
+    # the fresh row is exactly the neutral partial state
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+    assert float(l[0].max()) == 0.0 and float(m[0].max()) < -1e29
+    # row independence: each row equals its own single-row call bit-for-bit
+    for b in range(len(prefix_lens)):
+        ob, _, lb = flash_prefill_paged(q[b:b + 1], k_pages, v_pages,
+                                        bt[b:b + 1], lens[b:b + 1],
+                                        lens[b:b + 1], block_q=8)
+        assert jnp.array_equal(ob[0], out[b]) and jnp.array_equal(lb[0], l[b])
+
+
+@pytest.mark.parametrize("window", [5, 16])
+def test_kernel_heterogeneous_rows_window(window):
+    """Sliding window over heterogeneous rows: each row's window anchors at
+    its OWN per-row q_start (mid-grant pos_offset included), so a shared
+    window width must mask different key ranges per row."""
+    rng = np.random.default_rng(21)
+    ps, hq, hkv, hd = 8, 4, 4, 16
+    prefix_lens = [0, 7, 19, 26]
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=24, dtype=jnp.float32)
+    Sq = 6
+    q = jnp.asarray(rng.standard_normal((len(prefix_lens), hq, Sq, hd)),
+                    jnp.float32)
+    # per-row mid-call chunk offsets on top of the per-row resume position
+    q_starts = lens + jnp.asarray([0, 3, 0, 5], jnp.int32)
+    out, _, _ = flash_prefill_paged(q, k_pages, v_pages, bt, lens, q_starts,
+                                    window=window, block_q=8)
+    ro, _, _ = paged_prefill_ref(q, k_pages, v_pages, bt, lens, q_starts,
+                                 window=window)
+    assert float(jnp.max(jnp.abs(out - ro))) < 1e-5
+
+
+def test_layer_batched_rows_equal_single_rows():
+    """attn_prefill_paged_partial with per-row start_pos/prefix_lens/k_limit
+    (the packed-grant call) must reproduce each row's single-request result —
+    including a fresh row (prefix 0) and per-row bucket-pad tails."""
+    rng = np.random.default_rng(22)
+    cfg = tiny_dense(vocab_size=32)
+    group = cfg.num_heads // cfg.num_kv_heads
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = 8
+    prefix_lens = [0, 13, 24]
+    n_reals = [9, 16, 11]                     # row 0 and 2 carry pad tails
+    S = 16
+    k_pages, v_pages, bt, lens = _make_paged(rng, prefix_lens, ps, hkv, hd,
+                                             num_pages=16, dtype=jnp.float32)
+    p = attn_lib.init_attention(
+        jax.random.PRNGKey(0), cfg,
+        head_layout(cfg.num_heads, cfg.num_kv_heads, 1), dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((3, S, cfg.d_model)) * 0.2,
+                    jnp.float32)
+    starts = lens
+    k_limit = starts + jnp.asarray(n_reals, jnp.int32)
+    batched, kv_b = attn_lib.attn_prefill_paged_partial(
+        p, x, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, prefix_lens=lens, start_pos=starts, k_limit=k_limit)
+    for b in range(3):
+        single, kv_s = attn_lib.attn_prefill_paged_partial(
+            p, x[b:b + 1], cfg, group, k_pages=k_pages, v_pages=v_pages,
+            block_tables=bt[b:b + 1], prefix_lens=lens[b:b + 1],
+            start_pos=jnp.int32(prefix_lens[b]),
+            k_limit=jnp.int32(prefix_lens[b] + n_reals[b]))
+        real = np.s_[:n_reals[b]]
+        assert float(jnp.max(jnp.abs(batched[b][real] - single[0][real]))) \
+            < 1e-5
+        assert float(jnp.max(jnp.abs(kv_b[0][b] - kv_s[0][0]))) < 1e-6
+
+
 def test_merge_softmax_states_matches_full_softmax():
     """Splitting the key set and merging partial states == one softmax."""
     rng = np.random.default_rng(3)
@@ -289,9 +380,11 @@ def test_engine_bucketing_off_still_matches():
     assert eng.metrics["prefill_pad_tokens"] == 0
 
 
-def test_resumed_grants_never_dense_gather(monkeypatch):
+@pytest.mark.parametrize("batched", [True, False])
+def test_resumed_grants_never_dense_gather(monkeypatch, batched):
     """The paged prefill kernel replaced the per-grant dense prefix gather;
-    a resumed grant calling gather_pages again would be a regression."""
+    a resumed grant calling gather_pages again would be a regression — in
+    both the packed and the batch-1 prefill paths."""
     import repro.serving.kvcache as kvcache_mod
 
     def _boom(*a, **k):
@@ -305,10 +398,14 @@ def test_resumed_grants_never_dense_gather(monkeypatch):
                              dtype=jnp.float32)
     rng = np.random.default_rng(8)
     prompts = [rng.integers(2, 64, 70).astype(np.int32)]   # forces resume
-    got, eng = _paged_run(cfg, iso, params, prompts, new=3)
+    got, eng = _paged_run(cfg, iso, params, prompts, new=3,
+                          prefill_batching=batched)
     assert len(got[0]) == 3
-    resumed_keys = [k for k in eng._prefill_fns if k[2]]
-    assert resumed_keys, "workload never exercised a resumed grant"
+    assert eng.metrics["resumed_grants"] > 0, \
+        "workload never exercised a resumed grant"
+    if not batched:
+        resumed_keys = [k for k in eng._prefill_fns if k[2]]
+        assert resumed_keys, "batch-1 path never compiled a resumed closure"
 
 
 # ---------------------------------------------------------------------------
