@@ -61,10 +61,13 @@ def main(argv=None) -> None:
             with open(path) as f:
                 ledger = json.load(f)
     # headline metrics as first-class fields so the per-push artifact tracks
-    # them without parsing derived strings: speculative accept rate and the
-    # batched-prefill call reduction at 4 packed grants
+    # them without parsing derived strings: speculative accept rate, the
+    # batched-prefill call reduction at 4 packed grants, and the
+    # observability section's latency/occupancy/overlap numbers
     accepted_per_call = 0.0
     prefill_call_reduction = 0.0
+    obs = {"overlap_efficiency": 0.0, "ttft_p50": 0.0, "ttft_p99": 0.0,
+           "pool_occupancy_peak": 0, "obs_overhead_pct": 0.0}
     for row in rows:
         if row["name"] == "engine/speculative":
             for part in row["derived"].split(";"):
@@ -74,6 +77,12 @@ def main(argv=None) -> None:
             for part in row["derived"].split(";"):
                 if part.startswith("call_reduction="):
                     prefill_call_reduction = float(part.split("=", 1)[1])
+        if row["name"] == "engine/observability":
+            for part in row["derived"].split(";"):
+                k, _, v = part.partition("=")
+                if k in obs:
+                    obs[k] = int(v) if k == "pool_occupancy_peak" \
+                        else float(v)
     doc = {
         "schema": "bench-smoke-v1",
         "env": {"python": platform.python_version(),
@@ -83,6 +92,7 @@ def main(argv=None) -> None:
         "wall_s": round(time.perf_counter() - t0, 2),
         "accepted_per_call": accepted_per_call,
         "prefill_call_reduction": prefill_call_reduction,
+        **obs,
         "engine": rows,
         "perf_ledger": ledger,
     }

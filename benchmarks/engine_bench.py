@@ -215,3 +215,67 @@ def run(emit):
          f"accepted_per_call={apc:.3f};"
          f"decode_calls={m_sp['decode_calls']};"
          f"decode_tokens={m_sp['decode_tokens']};tokens_equal=True")
+
+    # ---- observability: overhead, latency percentiles, overlap probe ------
+    _obs_section(cfg, iso2, params, emit)
+
+
+def _steady_decode(cfg, iso, params, obs_on, timed_steps=30):
+    """Engine in steady-state decode; returns (engine, median step wall,
+    outputs).  Prefill and closure compilation happen before the timed
+    region, so the median isolates per-step host+device work — the region
+    the observability layer adds its bookkeeping to."""
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso,
+                    serving=ServingConfig(page_size=16, max_batch=2,
+                                          max_len=160,
+                                          prefill_token_budget=128,
+                                          observability=obs_on))
+    eng = PagedEngine(config, params)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.add_request(Request(
+            prompt=rng.integers(2, cfg.vocab_size, 48).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=timed_steps + 8,
+                                    eos_id=-1)))
+    while eng.scheduler.waiting or \
+            any(s is not None and s.prefilled < sum(s.chunk_plan)
+                for s in eng.slots):
+        eng.step()
+    for _ in range(3):                        # decode warm-up
+        eng.step()
+    times = []
+    for _ in range(timed_steps):
+        t0 = time.perf_counter()
+        eng.step()
+        times.append(time.perf_counter() - t0)
+    outs = eng.run_until_complete()
+    return eng, sorted(times)[len(times) // 2], outs
+
+
+def _obs_section(cfg, iso2, params, emit):
+    """Registry/trace overhead on the decode loop (obs on vs off), TTFT
+    percentiles from the typed histogram, pool-occupancy peak, and the
+    decode overlap-efficiency probe.  ci_smoke lifts these into first-class
+    BENCH_pr.json fields."""
+    eng_on, med_on, outs_on = _steady_decode(cfg, iso2, params, obs_on=True)
+    eng_off, med_off, outs_off = _steady_decode(cfg, iso2, params,
+                                                obs_on=False)
+    # rids auto-increment globally, so compare streams in submission order
+    toks_on = [outs_on[r] for r in sorted(outs_on)]
+    toks_off = [outs_off[r] for r in sorted(outs_off)]
+    assert toks_on == toks_off, "observability changed generated tokens!"
+    overhead_pct = 100.0 * (med_on - med_off) / max(med_off, 1e-9)
+    ttft = eng_on.registry.histogram("ttft")
+    ovl = eng_on.measure_overlap_efficiency(iters=6, warmup=2)
+    exp = ovl["exposed_comm_s"]
+    assert len(eng_on.trace.events()) > 0 and eng_on.trace.dropped == 0
+    assert len(eng_off.trace.events()) == 0, "obs off must silence the trace"
+    emit("engine/observability", med_on * 1e6,
+         f"obs_overhead_pct={overhead_pct:.2f};"
+         f"ttft_p50={ttft.percentile(0.5):.4f};"
+         f"ttft_p99={ttft.percentile(0.99):.4f};"
+         f"pool_occupancy_peak={eng_on.metrics['peak_used_pages']};"
+         f"overlap_efficiency={ovl['overlap_efficiency']:.4f};"
+         f"exposed_comm_ms={(-1.0 if exp is None else exp * 1e3):.3f};"
+         f"trace_events={len(eng_on.trace.events())};tokens_equal=True")

@@ -216,6 +216,12 @@ class ServingConfig:
     # window positions roll back by pos invalidation.  Attention-only stacks
     # (a K-token step would advance recurrent SSM/xLSTM state K times).
     spec_k: int = 0
+    # observability (src/repro/obs): the typed metrics registry is ALWAYS on
+    # (counter bumps are host-side nanoseconds); this flag gates the
+    # structured trace-event ring (scheduler/allocator/engine narration,
+    # exportable as a Chrome/Perfetto trace — docs/observability.md)
+    observability: bool = True
+    trace_events: int = 65536        # trace ring capacity (oldest dropped)
 
 
 @dataclass(frozen=True)

@@ -21,6 +21,43 @@ from repro.serving import Engine, PagedEngine, Request
 from repro.serving.requests import SamplingParams
 
 
+def _drive(eng, args):
+    """Step the engine to completion, printing a one-line metrics summary
+    every ``--metrics-every`` steps (the dense and paged engines share the
+    loop; pool columns are paged-only)."""
+    if not args.metrics_every:
+        return eng.run_until_complete()
+    paged = hasattr(eng, "alloc")
+    t_last = time.perf_counter()
+    toks_last = 0
+    for _ in range(10_000):
+        eng.step()
+        waiting = eng.scheduler.waiting if paged else eng.pending
+        done = not waiting and all(s is None for s in eng.slots)
+        m = eng.metrics
+        if m["steps"] % args.metrics_every == 0 or done:
+            now = time.perf_counter()
+            toks = m["decode_tokens"] + m["prefill_samples"]
+            rate = (toks - toks_last) / max(now - t_last, 1e-9)
+            t_last, toks_last = now, toks
+            active = sum(s is not None for s in eng.slots)
+            line = (f"[metrics] step={m['steps']} active={active} "
+                    f"waiting={len(waiting)} tok/s={rate:.1f}")
+            if paged:
+                line += (f" pool={eng.alloc.used_pages}/"
+                         f"{eng.alloc.num_pages}"
+                         f" frag={eng.alloc.fragmentation()}")
+                if eng.spec_k:
+                    line += f" accept/call={eng.accepted_per_call():.2f}"
+            print(line)
+        if done:
+            break
+    out = {}
+    for st in eng._finished:
+        out[st.request.rid] = st.generated
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -55,7 +92,24 @@ def main(argv=None) -> int:
                          "self-drafted window per decode step (greedy only; "
                          "paged engine runs it through the flash-decode "
                          "kernel, dense engine through the padded cache)")
+    ap.add_argument("--trace-out", default=None, metavar="trace.json",
+                    help="export the engine's structured trace as Chrome-"
+                         "trace JSON (open at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print a one-line metrics summary every N engine "
+                         "steps (active slots, pool occupancy, tok/s, "
+                         "accept rate)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into DIR "
+                         "(TensorBoard/Perfetto; engine closure dispatches "
+                         "are TraceAnnotation'd)")
+    ap.add_argument("--probe-overlap", action="store_true",
+                    help="after the run, measure decode overlap efficiency "
+                         "(overlapped vs sequential ISO schedule on "
+                         "identical synthetic batches; paged engine only)")
     args = ap.parse_args(argv)
+    if args.probe_overlap and not args.paged:
+        ap.error("--probe-overlap requires --paged")
     if args.spec_k and args.temperature > 0:
         ap.error("--spec-k is greedy-only (needs --temperature 0)")
 
@@ -110,8 +164,14 @@ def main(argv=None) -> int:
             req.patches = (rng.standard_normal(
                 (cfg.num_patches, cfg.d_model)) * 0.1).astype(np.float32)
         eng.add_request(req)
-    outs = eng.run_until_complete()
+    if args.jax_profile:
+        from repro.obs import jaxprof
+        jaxprof.start(args.jax_profile)
+    outs = _drive(eng, args)
     wall = time.perf_counter() - t0
+    if args.jax_profile:
+        from repro.obs import jaxprof
+        jaxprof.stop()
 
     m = eng.metrics
     total_new = sum(len(v) for v in outs.values())
@@ -140,6 +200,20 @@ def main(argv=None) -> int:
               f"extra_accepted={m['spec_accepted']} "
               f"decode_calls={m['decode_calls']} "
               f"decode_tokens={m['decode_tokens']}")
+    if args.probe_overlap:
+        res = eng.measure_overlap_efficiency()
+        exp = res["exposed_comm_s"]
+        print(f"overlap probe: efficiency={res['overlap_efficiency']:.3f} "
+              f"t_seq={res['t_sequential_s'] * 1e3:.2f}ms "
+              f"t_ovl={res['t_overlap_s'] * 1e3:.2f}ms "
+              f"exposed_comm="
+              f"{'n/a' if exp is None else f'{exp * 1e3:.2f}ms'} "
+              f"(tp={res['tp']}, B={res['batch']})")
+    if args.trace_out:
+        from repro.obs import write_chrome_trace
+        n = write_chrome_trace(eng.trace.events(), args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out} "
+              f"(dropped={eng.trace.dropped}; open at https://ui.perfetto.dev)")
     for rid in sorted(outs)[:3]:
         print(f"  rid {rid}: {outs[rid][:10]}{'...' if len(outs[rid]) > 10 else ''}")
     return 0

@@ -1,0 +1,45 @@
+"""jax.profiler hooks: line device timelines up with the host trace.
+
+``annotate(name)`` wraps the engines' jitted-closure dispatches.  While a
+profiler trace is active it returns ``jax.profiler.TraceAnnotation`` — the
+host slice shows up in the device timeline with the same name as the
+engine's own ``prefill_call``/``decode_call`` events, so the two traces can
+be correlated by eye in Perfetto.  With no active trace it returns a shared
+nullcontext: the hot path pays one module-global read, nothing else.
+
+``start(dir)`` / ``stop()`` wrap ``jax.profiler.start_trace``/``stop_trace``
+(exposed in launch/serve.py as ``--jax-profile DIR``).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_active = False
+_NULL = contextlib.nullcontext()
+
+
+def profiling_active() -> bool:
+    return _active
+
+
+def annotate(name: str):
+    if not _active:
+        return _NULL
+    import jax
+    return jax.profiler.TraceAnnotation(name)
+
+
+def start(log_dir: str) -> None:
+    global _active
+    import jax
+    jax.profiler.start_trace(log_dir)
+    _active = True
+
+
+def stop() -> None:
+    global _active
+    if not _active:
+        return
+    import jax
+    _active = False
+    jax.profiler.stop_trace()

@@ -18,6 +18,10 @@ import numpy as np
 from repro.config import Config
 from repro.launch import runner
 from repro.models import api
+from repro.obs import jaxprof
+from repro.obs.registry import (ACCEPT_LEN_BUCKETS, MetricsRegistry,
+                                TPOT_BUCKETS_S, TTFT_BUCKETS_S)
+from repro.obs.trace import TraceRing
 from repro.serving.requests import Request, RequestState
 from repro.serving.sampler import sample
 
@@ -28,7 +32,8 @@ def _bucket(n: int, b: int) -> int:
 
 class Engine:
     def __init__(self, config: Config, params, mesh=None, *, max_batch: int = 4,
-                 max_len: int = 512, bucket: int = 64, spec_k: int = 0):
+                 max_len: int = 512, bucket: int = 64, spec_k: int = 0,
+                 observability: bool = True):
         self.config = config
         self.cfg = config.model
         self.params = params
@@ -58,12 +63,28 @@ class Engine:
         self.spec_k = spec_k if all(k in ("attn_mlp", "attn_moe")
                                     for k in self.cfg.block_pattern) else 0
         self._drafts: List[Optional[Any]] = [None] * max_batch
-        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
-                        "decode_tokens": 0, "completed": 0, "decode_calls": 0,
-                        "spec_accepted": 0, "prefill_samples": 0}
+        # observability parity with PagedEngine (src/repro/obs): same
+        # registry-backed counter names (plus dense-only spec_accepted) so
+        # differential tests can assert metric equality, not just tokens.
+        # preemptions is registered and stays 0 — the dense engine never
+        # evicts — precisely so cross-engine metric diffs are key-aligned.
+        self.registry = MetricsRegistry()
+        self.trace = TraceRing(enabled=observability)
+        self.registry.histogram("ttft", TTFT_BUCKETS_S)
+        self.registry.histogram("tpot", TPOT_BUCKETS_S)
+        self.registry.histogram("accept_len", ACCEPT_LEN_BUCKETS)
+        self.registry.counters((
+            "prefill_s", "decode_s", "prefill_dispatch_s",
+            "decode_dispatch_s", "prefill_tokens", "decode_tokens",
+            "completed", "decode_calls", "prefill_calls", "steps",
+            "preemptions", "ttft_sum", "ttft_n", "spec_accepted",
+            "spec_calls", "spec_tokens", "prefill_samples"))
+        self.metrics = self.registry.view()
+        self._t_submit: Dict[int, float] = {}
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request) -> int:
+        self._t_submit[req.rid] = time.perf_counter()
         self.pending.append(req)
         return req.rid
 
@@ -112,10 +133,18 @@ class Engine:
             batch["patches"] = jnp.asarray(req.patches)[None]
 
         t0 = time.perf_counter()
-        out = self._get_prefill(blen, batch)(self.params, batch)
-        jax.block_until_ready(out["logits_local"])
-        self.metrics["prefill_s"] += time.perf_counter() - t0
+        with jaxprof.annotate(f"prefill/T={blen}"):
+            out = self._get_prefill(blen, batch)(self.params, batch)
+        # fence the WHOLE output (caches included) inside the timed region;
+        # logits alone can land before the KV write-back finishes
+        self.metrics["prefill_dispatch_s"] += time.perf_counter() - t0
+        jax.block_until_ready(out)
+        dur = time.perf_counter() - t0
+        self.metrics["prefill_s"] += dur
         self.metrics["prefill_tokens"] += plen
+        self.metrics["prefill_calls"] += 1
+        self.trace.emit("prefill_call", rid=req.rid, slot=slot, dur=dur,
+                        ts=t0, tokens=plen, pad=blen - plen, rows=1)
 
         extra = out["caches"]
         # effective prompt length in the decoder stream (vlm prepends patches)
@@ -127,6 +156,12 @@ class Engine:
         first = sample(logits[eff_plen - 1][:self.cfg.vocab_size], req.sampling,
                        step=0)
         self.metrics["prefill_samples"] += 1
+        ttft = time.perf_counter() - self._t_submit.pop(req.rid,
+                                                        time.perf_counter())
+        self.metrics["ttft_sum"] += ttft
+        self.metrics["ttft_n"] += 1
+        self.registry.histogram("ttft").observe(ttft)
+        self.trace.emit("sample", rid=req.rid, slot=slot, first=True)
 
         st = RequestState(request=req, slot=slot, prompt_len=eff_plen)
         st.generated.append(first)
@@ -140,6 +175,7 @@ class Engine:
             self._drafts[slot] = d
         if st.done:
             self.metrics["completed"] += 1
+            self.trace.emit("finish", rid=req.rid, slot=slot)
             self._finished.append(st)
             self._clear_slot(slot)
         else:
@@ -184,10 +220,12 @@ class Engine:
     def step(self) -> List[Tuple[int, int]]:
         """One engine iteration; returns (rid, token) events."""
         events: List[Tuple[int, int]] = []
+        self.metrics["steps"] += 1
         # admission: start pending requests on free slots (prefill, batch=1)
         for i in range(self.max_batch):
             if self.slots[i] is None and self.pending:
                 req = self.pending.pop(0)
+                self.trace.emit("admit", rid=req.rid, slot=i)
                 self._start_request(req, i)
                 st = [s for s in ([self.slots[i]] + self._finished)
                       if s and s.request.rid == req.rid]
@@ -205,11 +243,18 @@ class Engine:
         toks = jnp.asarray(self.last_tokens[:, None].astype(np.int32))
         lens = jnp.asarray(self.lengths.astype(np.int32))
         t0 = time.perf_counter()
-        logits, self.caches = self._get_decode()(self.params, toks, self.caches,
-                                                 lens)
+        with jaxprof.annotate("decode/K=1"):
+            logits, self.caches = self._get_decode()(self.params, toks,
+                                                     self.caches, lens)
+        # fence logits AND the updated caches inside the timed region —
+        # decode_s is execution time, decode_dispatch_s the async view
+        self.metrics["decode_dispatch_s"] += time.perf_counter() - t0
+        jax.block_until_ready((logits, self.caches))
+        dur = time.perf_counter() - t0
         logits = np.asarray(jax.device_get(logits))
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_s"] += dur
         self.metrics["decode_calls"] += 1
+        self.trace.emit("decode_call", dur=dur, ts=t0, k=1, active=len(active))
 
         for st in active:
             i = st.slot
@@ -223,10 +268,14 @@ class Engine:
                 # draft, or it re-engages with a stale anchor
                 self._drafts[i].observe([tok])
             self.metrics["decode_tokens"] += 1
+            self.trace.emit("accept", rid=st.request.rid, slot=i, n=1,
+                            spec=False)
+            self.registry.histogram("tpot").observe(dur)
             events.append((st.request.rid, tok))
             st.finish_check()
             if st.done:
                 self.metrics["completed"] += 1
+                self.trace.emit("finish", rid=st.request.rid, slot=i)
                 self._finished.append(st)
                 self._clear_slot(i)
         return events
@@ -256,11 +305,17 @@ class Engine:
             toks[i] = [self.last_tokens[i]] + d
         lens = jnp.asarray(self.lengths.astype(np.int32))
         t0 = time.perf_counter()
-        logits, self.caches = self._get_spec_decode(K)(
-            self.params, jnp.asarray(toks), self.caches, lens)
+        with jaxprof.annotate(f"decode/K={K}"):
+            logits, self.caches = self._get_spec_decode(K)(
+                self.params, jnp.asarray(toks), self.caches, lens)
+        self.metrics["decode_dispatch_s"] += time.perf_counter() - t0
+        jax.block_until_ready((logits, self.caches))
+        dur = time.perf_counter() - t0
         logits = np.asarray(jax.device_get(logits))
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_s"] += dur
         self.metrics["decode_calls"] += 1
+        self.metrics["spec_calls"] += 1
+        self.trace.emit("decode_call", dur=dur, ts=t0, k=K, active=len(active))
 
         events: List[Tuple[int, int]] = []
         new_lens = self.lengths.copy()
@@ -270,7 +325,12 @@ class Engine:
             budget = st.request.sampling.max_new_tokens - len(st.generated)
             acc = accept_greedy(drafts[i], argmaxes)[:max(budget, 1)]
             self.metrics["spec_accepted"] += len(acc) - 1
+            self.metrics["spec_tokens"] += len(acc)
             self.metrics["decode_tokens"] += len(acc)
+            self.registry.histogram("accept_len").observe(len(acc))
+            self.registry.histogram("tpot").observe(dur / len(acc))
+            self.trace.emit("accept", rid=st.request.rid, slot=i, n=len(acc),
+                            spec=True)
             for tok in acc:
                 st.generated.append(int(tok))
                 events.append((st.request.rid, int(tok)))
@@ -280,6 +340,7 @@ class Engine:
             st.finish_check()
             if st.done:
                 self.metrics["completed"] += 1
+                self.trace.emit("finish", rid=st.request.rid, slot=i)
                 self._finished.append(st)
                 self._clear_slot(i)
                 # self.lengths is replaced wholesale below — zero the slot in

@@ -55,7 +55,7 @@ class PageAllocator:
         committed token count.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, trace=None):
         assert num_pages > 0 and page_size > 0
         self.num_pages = num_pages
         self.page_size = page_size
@@ -64,6 +64,15 @@ class PageAllocator:
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
         self.refcount: Dict[int, int] = {}        # page -> #tables holding it
+        # optional obs.TraceRing: every pool mutation narrates itself
+        # (alloc/free/cow/adopt) so a trace replay can prove conservation —
+        # pages_allocated - pages_freed == used_pages.  None = silent.
+        self.trace = trace
+
+    def _emit(self, kind: str, rid: int, **payload) -> None:
+        if self.trace is not None:
+            self.trace.emit(kind, rid=rid, free=len(self._free),
+                            used=self.used_pages, **payload)
 
     # ---- queries ----------------------------------------------------------
     @property
@@ -128,6 +137,7 @@ class PageAllocator:
                 f"free list handed out live page {pg}"
             self.refcount[pg] = 1
             table.append(pg)
+        self._emit("alloc", rid, n=need)
 
     def commit(self, rid: int, n_tokens: int) -> None:
         """Record ``n_tokens`` more live tokens for ``rid`` (capacity must
@@ -148,6 +158,7 @@ class PageAllocator:
             self.refcount[pg] += 1
         self.tables[rid] = list(pages)
         self.lengths[rid] = n_tokens
+        self._emit("adopt", rid, n_pages=len(pages), tokens=n_tokens)
 
     def cow(self, rid: int, block_idx: int) -> Optional[Tuple[int, int]]:
         """Copy-on-write: give ``rid`` a private copy of a shared page before
@@ -167,6 +178,10 @@ class PageAllocator:
         self.refcount[new] = 1
         self.refcount[old] -= 1
         table[block_idx] = new
+        # the copy target counts as an allocation for conservation (the old
+        # page stays live with the other sharers)
+        self._emit("alloc", rid, n=1)
+        self._emit("cow", rid, old=old, new=new)
         return old, new
 
     def free(self, rid: int) -> List[int]:
@@ -187,6 +202,8 @@ class PageAllocator:
                 released.append(pg)
             else:
                 self.refcount[pg] = rc - 1
+        if released:
+            self._emit("free", rid, n=len(released))
         return released
 
     def block_table(self, rid: int, max_blocks: int) -> np.ndarray:

@@ -54,6 +54,11 @@ from repro.core.chunking import grant_buckets, round_to_bucket
 from repro.core.overlap import AxisCtx
 from repro.layers import embeddings as emb_lib
 from repro.models import api
+from repro.obs import jaxprof
+from repro.obs.registry import (ACCEPT_LEN_BUCKETS, GRANT_SIZE_BUCKETS,
+                                MetricsRegistry, TPOT_BUCKETS_S,
+                                TTFT_BUCKETS_S)
+from repro.obs.trace import TraceRing
 from repro.models.decoder import cache_specs, decoder_param_specs
 from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
                                    PrefixCache, pages_for, token_page_coords,
@@ -97,7 +102,21 @@ class PagedEngine:
         self._decode_overlap = (mesh is not None and sv.decode_overlap
                                 and sv.max_batch >= 2)
 
-        self.alloc = PageAllocator(num_pages, self.ps)
+        # observability (src/repro/obs): typed registry behind the legacy
+        # dict view, structured trace ring the scheduler/allocator/phase
+        # loops narrate into.  The registry is always on (counter bumps are
+        # host-side nanoseconds); ``observability=False`` silences the trace.
+        self.registry = MetricsRegistry()
+        self.trace = TraceRing(capacity=sv.trace_events,
+                               enabled=sv.observability)
+        self.registry.histogram("ttft", TTFT_BUCKETS_S)
+        self.registry.histogram("tpot", TPOT_BUCKETS_S)
+        self.registry.histogram("grant_size", GRANT_SIZE_BUCKETS)
+        self.registry.histogram("accept_len", ACCEPT_LEN_BUCKETS)
+        self.registry.gauge("pool_occupancy")
+        self.registry.gauge("free_list_fragmentation")
+
+        self.alloc = PageAllocator(num_pages, self.ps, trace=self.trace)
         self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=self.tp,
                                dtype=cache_dtype)
         self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=self.tp,
@@ -118,7 +137,7 @@ class PagedEngine:
         self.scheduler = TokenBudgetScheduler(
             policy=sv.scheduler_policy,
             prefill_token_budget=sv.prefill_token_budget,
-            grant_buckets=self._buckets)
+            grant_buckets=self._buckets, trace=self.trace)
         # batched multi-request prefill grants: pack same-padded-length grants
         # into ONE forward call per tick (per-row pos_offset/prefix_len/
         # valid_len threaded through StageCtx into the paged prefill kernel).
@@ -155,16 +174,22 @@ class PagedEngine:
         self._finished: List[RequestState] = []
         self._prefill_fns: Dict[Tuple, Any] = {}
         self._decode_fns: Dict[int, Any] = {}             # verify width K -> fn
+        # overlap-probe closures live OUTSIDE _decode_fns: the CI
+        # compile-guard lane pins that cache's key set to real traffic
+        self._probe_decode_fns: Dict[Tuple[bool, bool], Any] = {}
         self._copy_page_fn = None
-        self.metrics = {"prefill_s": 0.0, "decode_s": 0.0, "prefill_tokens": 0,
-                        "decode_tokens": 0, "completed": 0, "decode_calls": 0,
-                        "prefill_calls": 0, "steps": 0, "preemptions": 0,
-                        "ttft_sum": 0.0, "ttft_n": 0,
-                        "prefix_shared_tokens": 0, "cow_copies": 0,
-                        "peak_used_pages": 0, "prefill_pad_tokens": 0,
-                        "prefill_samples": 0, "spec_calls": 0,
-                        "spec_tokens": 0, "prefill_grants": 0,
-                        "resumed_grants": 0, "prefill_pad_rows": 0}
+        # legacy counter key set, pre-registered so `metrics[k] == 0` holds
+        # before first use; timed sums are fenced EXECUTION time, the
+        # *_dispatch_s pair keeps the async (dispatch-only) view
+        self.registry.counters((
+            "prefill_s", "decode_s", "prefill_dispatch_s",
+            "decode_dispatch_s", "prefill_tokens", "decode_tokens",
+            "completed", "decode_calls", "prefill_calls", "steps",
+            "preemptions", "ttft_sum", "ttft_n", "prefix_shared_tokens",
+            "cow_copies", "peak_used_pages", "prefill_pad_tokens",
+            "prefill_samples", "spec_calls", "spec_tokens", "prefill_grants",
+            "resumed_grants", "prefill_pad_rows"))
+        self.metrics = self.registry.view()
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -202,6 +227,7 @@ class PagedEngine:
             st.prefilled = 0
             self.slots[st.slot] = st
             self.lengths[st.slot] = 0
+            self.trace.emit("admit", rid=rid, slot=st.slot)
             self._try_share_prefix(st)
 
     def _try_share_prefix(self, st: RequestState) -> None:
@@ -275,6 +301,7 @@ class PagedEngine:
         if victim is None:
             return False
         st = self._by_rid[victim]
+        self.trace.emit("evict", rid=victim, slot=st.slot)
         self._release_pages(victim)
         self.slots[st.slot] = None
         self.lengths[st.slot] = 0
@@ -534,12 +561,35 @@ class PagedEngine:
     def _get_decode(self, K: int = 1):
         """Jitted decode closure for a K-token window (K=1 plain decode,
         K=spec_k+1 speculative verify) — one compiled closure per K."""
-        if K in self._decode_fns:
-            return self._decode_fns[K]
-        cfg, ctx = self.cfg, self._ctx
+        if K not in self._decode_fns:
+            self._decode_fns[K] = self._build_decode_fn(
+                K, overlap=self._decode_overlap, ctx=self._ctx)
+        return self._decode_fns[K]
+
+    def _get_probe_decode(self, overlap: bool, comm: bool = True):
+        """Decode closure variants for the overlap-efficiency probe
+        (obs/overlap_probe.py): sequential vs batch-split schedule, plus a
+        collectives-disabled compute floor (``comm=False`` swaps in a bare
+        AxisCtx — psum degrades to identity inside the same shard_map).
+        Cached in ``_probe_decode_fns``, never ``_decode_fns``, whose key
+        set the compile-guard lane pins to real traffic."""
+        key = (overlap, comm)
+        if key not in self._probe_decode_fns:
+            ctx = self._ctx if comm else AxisCtx()
+            self._probe_decode_fns[key] = self._build_decode_fn(
+                1, overlap=overlap, ctx=ctx)
+        return self._probe_decode_fns[key]
+
+    def measure_overlap_efficiency(self, iters: int = 10, warmup: int = 3):
+        """Time overlapped vs sequential decode on identical synthetic
+        batches; see obs/overlap_probe.decode_overlap_probe."""
+        from repro.obs.overlap_probe import decode_overlap_probe
+        return decode_overlap_probe(self, iters=iters, warmup=warmup)
+
+    def _build_decode_fn(self, K: int, overlap: bool, ctx: AxisCtx):
+        cfg = self.cfg
         scratch = self.kv.scratch_page
         ps = self.ps
-        overlap = self._decode_overlap
 
         def fn(params, toks, bt, lengths, kv_arrays, states, active):
             # paged flash decode: the stack reads the page pools in place
@@ -584,8 +634,7 @@ class PagedEngine:
                 jnp.where(ok, positions, -1))
             return logits, new_kv, tuple(new_states)
 
-        self._decode_fns[K] = self._wrap_decode(fn)
-        return self._decode_fns[K]
+        return self._wrap_decode(fn)
 
     # ------------------------------------------------------------------
     # step phases
@@ -624,15 +673,23 @@ class PagedEngine:
         fn = self._get_prefill(padded - n_patches, n_patches,
                                resumed=start > 0)
         t0_wall = time.perf_counter()
-        with self._mesh_ctx():
+        with self._mesh_ctx(), jaxprof.annotate(f"prefill/T={padded}"):
             logits_last, new_kv, new_states = fn(
                 self.params, tokens, patches, self.kv.arrays, states_slot,
                 bt_row, jnp.int32(start), jnp.int32(n_tokens))
-        jax.block_until_ready(logits_last)
-        self.metrics["prefill_s"] += time.perf_counter() - t0_wall
+        # dispatch returns before the device finishes; the timed region must
+        # cover EVERY output or prefill_s under-reports (the KV scatter can
+        # outlive the logits) — dispatch-only time keeps its own counter
+        self.metrics["prefill_dispatch_s"] += time.perf_counter() - t0_wall
+        jax.block_until_ready((logits_last, new_kv, new_states))
+        dur = time.perf_counter() - t0_wall
+        self.metrics["prefill_s"] += dur
         self.metrics["prefill_tokens"] += n_tokens
         self.metrics["prefill_pad_tokens"] += padded - n_tokens
         self.metrics["prefill_calls"] += 1
+        self.trace.emit("prefill_call", rid=req.rid, slot=slot, dur=dur,
+                        ts=t0_wall, tokens=n_tokens, pad=padded - n_tokens,
+                        rows=1)
 
         self.kv.arrays = new_kv
         self.states = jax.tree_util.tree_map(
@@ -655,17 +712,26 @@ class PagedEngine:
         st.prefilled = start + n_tokens
         self.lengths[slot] = st.prefilled
         self.metrics["prefill_grants"] += 1
+        self.registry.histogram("grant_size").observe(n_tokens)
         if start > 0:
             self.metrics["resumed_grants"] += 1
+        # scheduler-issued grants can be dropped and re-issued (packmate
+        # eviction, deferred sharing) — the commit is the countable event
+        self.trace.emit("grant_commit", rid=req.rid, slot=slot, start=start,
+                        n=n_tokens, last=last)
         if not last:
             return None
         tok = sample(logits_row[:self.cfg.vocab_size], req.sampling,
                      step=len(st.generated))
         self.metrics["prefill_samples"] += 1
-        if st.t_first < 0:
+        first = st.t_first < 0
+        if first:
             st.t_first = time.perf_counter()
-            self.metrics["ttft_sum"] += st.t_first - st.t_submit
+            ttft = st.t_first - st.t_submit
+            self.metrics["ttft_sum"] += ttft
             self.metrics["ttft_n"] += 1
+            self.registry.histogram("ttft").observe(ttft)
+        self.trace.emit("sample", rid=req.rid, slot=slot, first=first)
         if self.spec_k:
             # (re)build the self-draft over everything resident — after a
             # recompute preemption that includes the already-generated tokens
@@ -703,17 +769,21 @@ class PagedEngine:
         fn = self._get_prefill_batched(T, rows,
                                        all_fresh=bool(np.all(starts == 0)))
         t0_wall = time.perf_counter()
-        with self._mesh_ctx():
+        with self._mesh_ctx(), jaxprof.annotate(f"prefill/T={T}x{rows}"):
             logits_last, new_kv = fn(self.params, jnp.asarray(toks),
                                      self.kv.arrays, jnp.asarray(bts),
                                      jnp.asarray(starts), jnp.asarray(n_reals))
-        jax.block_until_ready(logits_last)
+        self.metrics["prefill_dispatch_s"] += time.perf_counter() - t0_wall
+        jax.block_until_ready((logits_last, new_kv))
+        dur = time.perf_counter() - t0_wall
         n_total = int(n_reals.sum())
-        self.metrics["prefill_s"] += time.perf_counter() - t0_wall
+        self.metrics["prefill_s"] += dur
         self.metrics["prefill_tokens"] += n_total
         self.metrics["prefill_pad_tokens"] += rows * T - n_total
         self.metrics["prefill_pad_rows"] += rows - R
         self.metrics["prefill_calls"] += 1
+        self.trace.emit("prefill_call", dur=dur, ts=t0_wall, tokens=n_total,
+                        pad=rows * T - n_total, rows=R)
         self.kv.arrays = new_kv
         logits_np = None
         if any(p[4] for p in group):
@@ -731,6 +801,7 @@ class PagedEngine:
         # NOT here: the prefill-sampled first token is a prefill_samples
         # event, and in-flight requests must not vanish from the count
         self.metrics["completed"] += 1
+        self.trace.emit("finish", rid=st.request.rid, slot=st.slot)
         self._release_pages(st.request.rid)
         if self.prefix_cache is not None:
             self.prefix_cache.forget(st.request.rid)
@@ -815,6 +886,7 @@ class PagedEngine:
             ready, deferred = [], []
             for g in pack:
                 if self._defer_for_packmate_sharing(g, ready):
+                    self.trace.emit("defer", rid=g.rid)
                     deferred.append(g)
                     continue
                 prep = self._prep_grant(g)
@@ -923,13 +995,20 @@ class PagedEngine:
                 toks[i, 1:] = drafts[i]
         lens = jnp.asarray(self.lengths.astype(np.int32))
         t0 = time.perf_counter()
-        with self._mesh_ctx():
+        with self._mesh_ctx(), jaxprof.annotate(f"decode/K={K}"):
             logits, new_kv, new_states = self._get_decode(K)(
                 self.params, jnp.asarray(toks), jnp.asarray(bt), lens,
                 self.kv.arrays, self.states, jnp.asarray(mask))
+        # fence EVERY output inside the timed region: the logits transfer
+        # below would otherwise hide the KV-scatter tail and decode_s would
+        # report dispatch time (the async view keeps its own counter)
+        self.metrics["decode_dispatch_s"] += time.perf_counter() - t0
+        jax.block_until_ready((logits, new_kv, new_states))
+        dur = time.perf_counter() - t0
         logits = np.asarray(jax.device_get(logits))
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_s"] += dur
         self.metrics["decode_calls"] += 1
+        self.trace.emit("decode_call", dur=dur, ts=t0, k=K, active=len(active))
         if K > 1:
             self.metrics["spec_calls"] += 1
         self.kv.arrays = new_kv
@@ -953,6 +1032,7 @@ class PagedEngine:
                 budget = st.request.sampling.max_new_tokens - len(st.generated)
                 acc = accept_greedy(drafts[i], argmaxes)[:max(budget, 1)]
                 self.metrics["spec_tokens"] += len(acc)
+                self.registry.histogram("accept_len").observe(len(acc))
                 self._drafts[i].observe([int(t) for t in acc])
                 # rejected window positions: their KV was scattered but they
                 # are NOT committed — invalidate their pos entries so no
@@ -963,6 +1043,9 @@ class PagedEngine:
                     rollback.append((table[pos // self.ps], pos % self.ps))
             self.alloc.commit(st.request.rid, len(acc))
             self.metrics["decode_tokens"] += len(acc)
+            self.trace.emit("accept", rid=st.request.rid, slot=i, n=len(acc),
+                            spec=K > 1)
+            self.registry.histogram("tpot").observe(dur / len(acc))
             for tok in acc:
                 st.generated.append(int(tok))
                 events.append((st.request.rid, int(tok)))
@@ -972,6 +1055,7 @@ class PagedEngine:
             if st.done:
                 self._finish(st)
         if rollback:
+            self.trace.emit("spec_rollback", n=len(rollback))
             pg = jnp.asarray([p for p, _ in rollback], jnp.int32)
             off = jnp.asarray([o for _, o in rollback], jnp.int32)
             new_kv = dict(self.kv.arrays)
@@ -987,8 +1071,14 @@ class PagedEngine:
         self._admit()
         self._prefill_phase(events)
         self._decode_phase(events)
+        used = self.alloc.used_pages
+        frag = self.alloc.fragmentation()
+        self.registry.gauge("pool_occupancy").set(used)
+        self.registry.gauge("free_list_fragmentation").set(frag)
         self.metrics["peak_used_pages"] = max(self.metrics["peak_used_pages"],
-                                              self.alloc.used_pages)
+                                              used)
+        self.trace.emit("pool", used=used, free=self.alloc.free_pages,
+                        frag=frag)
         return events
 
     def run_until_complete(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

@@ -50,11 +50,13 @@ class TokenBudgetScheduler:
     are testable without a model."""
 
     def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512,
-                 grant_buckets: Optional[Tuple[int, ...]] = None):
+                 grant_buckets: Optional[Tuple[int, ...]] = None, trace=None):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown scheduler policy {policy!r}")
         self.policy = policy
         self.budget = max(1, prefill_token_budget)
+        # optional obs.TraceRing: grant/pack decisions narrate themselves
+        self.trace = trace
         # grant-size bucketing: every grant's forward-call length is rounded
         # up to a bucket so the engine's compiled-prefill count stays
         # O(#buckets).  None = no bucketing (padded == n_tokens).
@@ -137,9 +139,12 @@ class TokenBudgetScheduler:
             remaining = max(0, remaining - take)
             padded = take if self.grant_buckets is None else \
                 round_to_bucket(take, self.grant_buckets)
-            grants.append(PrefillGrant(rid=rid, start=done, n_tokens=take,
-                                       last=done + take >= ends[-1],
-                                       padded=padded))
+            g = PrefillGrant(rid=rid, start=done, n_tokens=take,
+                             last=done + take >= ends[-1], padded=padded)
+            grants.append(g)
+            if self.trace is not None:
+                self.trace.emit("grant", rid=rid, start=g.start, n=g.n_tokens,
+                                padded=g.padded, last=g.last)
             if remaining == 0:
                 break
         return grants
@@ -173,6 +178,11 @@ class TokenBudgetScheduler:
                 packs.append([g])
             else:
                 packs[idx].append(g)
+        if self.trace is not None:
+            for pack in packs:
+                if len(pack) > 1:
+                    self.trace.emit("pack", rid=pack[0].rid,
+                                    rows=len(pack), padded=pack[0].padded)
         return packs
 
     def pick_victim(self, running: Sequence[int], protect: Sequence[int] = ()

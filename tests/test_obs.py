@@ -1,0 +1,490 @@
+"""Observability layer: typed registry units, trace-ring bounds, replay
+conservation on real engine workloads, allocator trace conservation walks
+(seeded + hypothesis), and overlap-probe isolation from serving state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.obs import (ACCEPT_LEN_BUCKETS, TTFT_BUCKETS_S, Counter, Gauge,
+                       Histogram, MetricsRegistry, TraceRing, chrome_trace,
+                       replay_counters, validate_chrome_trace)
+from repro.obs.replay import REPLAYABLE
+from repro.serving import Engine, PagedEngine, Request
+from repro.serving.kvcache import OutOfPages, PageAllocator
+from repro.serving.requests import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# registry units
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    c = Counter("x")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = Gauge("pool")
+    g.set(3)
+    g.set(7)
+    g.set(2)
+    assert g.value == 2 and g.peak == 7
+
+
+def test_histogram_percentiles_bracket_observations():
+    h = Histogram("ttft", TTFT_BUCKETS_S)
+    vals = [0.003, 0.004, 0.011, 0.012, 0.040, 0.041, 0.150, 0.900]
+    for v in vals:
+        h.observe(v)
+    assert h.n == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.min == min(vals) and h.max == max(vals)
+    # percentiles are bucket-interpolated but must stay inside [min, max]
+    # and be monotone in q
+    last = h.min
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        p = h.percentile(q)
+        assert h.min <= p <= h.max, (q, p)
+        assert p >= last - 1e-12
+        last = p
+    # the median of this sample sits in the (0.01, 0.02] bucket
+    assert 0.01 <= h.percentile(0.5) <= 0.02
+
+
+def test_histogram_single_observation_all_percentiles_equal():
+    h = Histogram("a", ACCEPT_LEN_BUCKETS)
+    h.observe(3)
+    for q in (0.0, 0.5, 0.99, 1.0):
+        assert h.percentile(q) == 3.0
+    assert h.percentile(0.5) == h.mean == 3.0
+
+
+def test_histogram_empty_and_overflow():
+    h = Histogram("t", (1.0, 2.0))
+    assert h.percentile(0.5) == 0.0 and h.mean == 0.0
+    h.observe(50.0)                       # overflow bucket
+    assert h.counts[-1] == 1
+    assert h.percentile(0.99) == 50.0
+    snap = h.snapshot()
+    assert snap["n"] == 1 and snap["max"] == 50.0
+
+
+def test_metrics_view_dict_idiom():
+    r = MetricsRegistry()
+    r.counters(["decode_tokens", "steps"])
+    m = r.view()
+    assert m["decode_tokens"] == 0
+    m["decode_tokens"] += 7                      # the engines' hot-path idiom
+    m["steps"] = max(m["steps"], 3)
+    assert m["decode_tokens"] == 7 and m["steps"] == 3
+    with pytest.raises(KeyError):
+        m["typo_metric"]                         # reads of unknown keys fail
+    m["late_key"] = 2                            # writes create a counter
+    assert m["late_key"] == 2 and "late_key" in m
+    assert r.counter("decode_tokens").value == 7
+    # gauges share the scalar namespace and surface through the view too
+    r.gauge("pool_occupancy").set(5)
+    assert m["pool_occupancy"] == 5
+    assert r.snapshot()["pool_occupancy_peak"] == 5
+
+
+def test_registry_snapshot_histogram_stats():
+    r = MetricsRegistry()
+    h = r.histogram("ttft", TTFT_BUCKETS_S)
+    h.observe(0.01)
+    h.observe(0.03)
+    snap = r.snapshot()
+    assert snap["ttft_n"] == 2
+    assert snap["ttft_min"] == 0.01 and snap["ttft_max"] == 0.03
+    assert 0.01 <= snap["ttft_p50"] <= 0.03
+
+
+def test_registry_type_confusion_rejected():
+    r = MetricsRegistry()
+    r.counter("x")
+    with pytest.raises(AssertionError):
+        r.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# trace ring
+# ---------------------------------------------------------------------------
+
+def test_trace_ring_bounded_and_counts_drops():
+    ring = TraceRing(capacity=4)
+    for i in range(10):
+        ring.emit("accept", rid=i, n=1)
+    assert len(ring) == 4 and ring.dropped == 6
+    assert [e.rid for e in ring.events()] == [6, 7, 8, 9]
+    ring.clear()
+    assert len(ring) == 0 and ring.dropped == 0
+
+
+def test_trace_ring_disabled_is_silent():
+    ring = TraceRing(capacity=4, enabled=False)
+    ring.emit("accept", n=1)
+    assert len(ring) == 0 and ring.dropped == 0
+
+
+def test_trace_timestamps_monotone_and_spans_carry_dur():
+    ring = TraceRing()
+    ring.emit("prefill_call", dur=0.25, ts=1.0, tokens=16)
+    ring.emit("decode_call", dur=0.5, ts=2.0, k=1)
+    evs = ring.events()
+    assert evs[0].dur == 0.25 and evs[0].payload["tokens"] == 16
+    assert evs[0].ts < evs[1].ts
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export + validation
+# ---------------------------------------------------------------------------
+
+def _synthetic_ring():
+    ring = TraceRing()
+    ring.emit("grant", rid=0, ts=0.0, start=0, n=16, padded=16, last=True)
+    ring.emit("alloc", rid=0, ts=0.001, n=2, free=6, used=2)
+    ring.emit("grant_commit", rid=0, slot=0, ts=0.0015, start=0, n=16,
+              last=True)
+    ring.emit("prefill_call", rid=0, slot=0, ts=0.002, dur=0.01, tokens=16,
+              pad=0, rows=1)
+    ring.emit("sample", rid=0, slot=0, ts=0.013, first=True)
+    ring.emit("decode_call", ts=0.02, dur=0.005, k=1, active=1)
+    ring.emit("accept", rid=0, slot=0, ts=0.025, n=1, spec=False)
+    ring.emit("pool", ts=0.03, used=2, free=6, frag=3)
+    ring.emit("free", rid=0, ts=0.04, n=2, free=8, used=0)
+    ring.emit("finish", rid=0, slot=0, ts=0.04)
+    return ring
+
+
+def test_chrome_trace_schema_valid_and_typed():
+    doc = chrome_trace(_synthetic_ring().events())
+    assert validate_chrome_trace(doc) == []
+    by_ph = {}
+    for e in doc["traceEvents"]:
+        by_ph.setdefault(e["ph"], []).append(e)
+    assert {"M", "X", "i", "C"} <= set(by_ph)     # all four record types
+    # spans: dur>0 events become complete slices in microseconds
+    x = [e for e in by_ph["X"] if e["name"] == "prefill_call"][0]
+    assert x["dur"] == pytest.approx(0.01 * 1e6)
+    # counters carry numeric-only args
+    c = by_ph["C"][0]
+    assert c["name"] == "pool"
+    assert all(isinstance(v, (int, float)) for v in c["args"].values())
+    # slot events land on per-slot threads, allocator events on track 2
+    assert x["tid"] == 10
+    assert [e for e in by_ph["i"] if e["name"] == "free"][0]["tid"] == 2
+    # rebased: first non-metadata event starts at ts 0
+    assert min(e["ts"] for e in doc["traceEvents"] if e["ph"] != "M") == 0
+
+
+def test_chrome_trace_validator_flags_bad_docs():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({"traceEvents": [{"ph": "Z"}]})
+    bad_ts = {"traceEvents": [
+        {"name": "a", "ph": "i", "pid": 1, "tid": 0, "ts": 5.0, "s": "t"},
+        {"name": "b", "ph": "i", "pid": 1, "tid": 0, "ts": 1.0, "s": "t"}]}
+    assert any("monotonic" in p for p in validate_chrome_trace(bad_ts))
+    bad_counter = {"traceEvents": [
+        {"name": "pool", "ph": "C", "pid": 1, "tid": 2, "ts": 0.0,
+         "args": {"used": "three"}}]}
+    assert any("numeric" in p for p in validate_chrome_trace(bad_counter))
+
+
+def test_replay_reconstructs_synthetic_stream():
+    c = replay_counters(_synthetic_ring().events())
+    assert c["prefill_grants"] == 1 and c["resumed_grants"] == 0
+    assert c["prefill_calls"] == 1 and c["prefill_tokens"] == 16
+    assert c["decode_calls"] == 1 and c["decode_tokens"] == 1
+    assert c["prefill_samples"] == 1 and c["ttft_n"] == 1
+    assert c["completed"] == 1
+    assert c["pages_allocated"] - c["pages_freed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator trace conservation: alloc - free == occupancy, every step
+# ---------------------------------------------------------------------------
+
+def _alloc_walk_step(a, rng):
+    op = rng.integers(0, 4)
+    live = sorted(a.tables)
+    if op == 0:
+        rid = int(rng.integers(0, 6))
+        try:
+            want = a.tokens(rid) + int(rng.integers(1, 9))
+            a.ensure(rid, want)
+            a.commit(rid, want - a.tokens(rid))
+        except OutOfPages:
+            pass
+    elif op == 1 and live:
+        a.free(int(rng.choice(live)))
+    elif op == 2 and live:
+        donor = int(rng.choice(live))
+        rid = 100 + int(rng.integers(0, 1000))
+        if rid not in a.tables and a.tables[donor]:
+            k = int(rng.integers(1, len(a.tables[donor]) + 1))
+            a.adopt(rid, a.tables[donor][:k],
+                    min(a.tokens(donor), k * a.page_size))
+    elif op == 3 and live:
+        rid = int(rng.choice(live))
+        if a.tables[rid]:
+            try:
+                a.cow(rid, int(rng.integers(0, len(a.tables[rid]))))
+            except OutOfPages:
+                pass
+
+
+def test_allocator_trace_conserves_pool_random_walk():
+    """pages_allocated - pages_freed replayed from the trace must equal the
+    allocator's physical occupancy after every operation, through grow /
+    free / adopt (refcount, no alloc) / CoW (alloc of the copy target)."""
+    rng = np.random.default_rng(11)
+    ring = TraceRing()
+    a = PageAllocator(num_pages=12, page_size=4, trace=ring)
+    for _ in range(400):
+        _alloc_walk_step(a, rng)
+        c = replay_counters(ring.events())
+        assert c["pages_allocated"] - c["pages_freed"] == a.used_pages
+        assert c["cow_copies"] == sum(
+            1 for e in ring.events() if e.kind == "cow")
+    for rid in sorted(a.tables):
+        a.free(rid)
+    c = replay_counters(ring.events())
+    assert c["pages_allocated"] - c["pages_freed"] == 0 == a.used_pages
+
+
+def test_allocator_trace_conservation_hypothesis_walk():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(5, 60))
+    def walk(seed, n_ops):
+        rng = np.random.default_rng(seed)
+        ring = TraceRing()
+        a = PageAllocator(num_pages=10, page_size=4, trace=ring)
+        for _ in range(n_ops):
+            _alloc_walk_step(a, rng)
+        c = replay_counters(ring.events())
+        assert c["pages_allocated"] - c["pages_freed"] == a.used_pages
+
+    walk()
+
+
+# ---------------------------------------------------------------------------
+# engine conservation: replay(trace) == registry, end to end
+# ---------------------------------------------------------------------------
+
+def _paged_engine(cfg, iso, params, **sv):
+    kw = dict(page_size=8, max_batch=2, max_len=160, prefill_token_budget=16)
+    kw.update(sv)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso, serving=ServingConfig(**kw))
+    return PagedEngine(config, params)
+
+
+def _requests(rng, lengths, new=5, prefix=None):
+    out = []
+    for n in lengths:
+        p = rng.integers(2, 64, n).astype(np.int32)
+        if prefix is not None:
+            p = np.concatenate([prefix, p])
+        out.append(Request(prompt=p,
+                           sampling=SamplingParams(max_new_tokens=new,
+                                                   eos_id=-1)))
+    return out
+
+
+def _assert_replay_matches(eng, outs):
+    assert eng.trace.dropped == 0
+    rep = replay_counters(eng.trace.events())
+    m = eng.metrics
+    for name in REPLAYABLE:
+        if name in m:
+            assert rep[name] == m[name], \
+                (name, rep[name], m[name])
+    # token conservation through the registry
+    total = sum(len(v) for v in outs.values())
+    assert m["decode_tokens"] + m["prefill_samples"] == total
+    # trace exports schema-valid
+    assert validate_chrome_trace(chrome_trace(eng.trace.events())) == []
+    return rep
+
+
+def test_paged_engine_trace_replay_matches_registry():
+    """Mixed-length chunked-prefill workload: replaying the trace must land
+    on exactly the registry's counters, page conservation must close, and
+    the typed histograms must have seen every request/grant."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params)
+    rng = np.random.default_rng(7)
+    for r in _requests(rng, (40, 12, 25, 7)):
+        eng.add_request(r)
+    outs = eng.run_until_complete()
+    rep = _assert_replay_matches(eng, outs)
+    # all requests done -> every page returned; gauge tracked the peak
+    assert rep["pages_allocated"] - rep["pages_freed"] == 0
+    assert eng.alloc.used_pages == 0
+    assert eng.registry.gauge("pool_occupancy").value == 0
+    assert eng.registry.gauge("pool_occupancy").peak == \
+        eng.metrics["peak_used_pages"] > 0
+    # typed distributions populated: one TTFT per request, one grant-size
+    # observation per grant
+    assert eng.registry.histogram("ttft").n == 4 == eng.metrics["ttft_n"]
+    assert eng.registry.histogram("grant_size").n == \
+        eng.metrics["prefill_grants"] > 4          # 40-tok prompt resumes
+    assert eng.registry.histogram("tpot").n == eng.metrics["decode_tokens"]
+
+
+def test_paged_engine_replay_with_preemption_and_sharing():
+    """Preemption (evict events) and CoW prefix sharing (adopt/cow events)
+    must keep the replay and the page conservation exact."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    # tight pool forces eviction; shared prefix forces adopt + cow
+    eng = _paged_engine(cfg, iso, params, num_pages=14,
+                        prefix_sharing=True)
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(2, 64, 16).astype(np.int32)
+    for r in _requests(rng, (24, 20, 18), new=6, prefix=prefix):
+        eng.add_request(r)
+    outs = eng.run_until_complete()
+    rep = _assert_replay_matches(eng, outs)
+    assert rep["prefix_shared_tokens"] == eng.metrics["prefix_shared_tokens"] > 0
+    assert rep["pages_allocated"] - rep["pages_freed"] == 0
+
+
+def test_paged_engine_spec_replay_matches_registry():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params, spec_k=2)
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=np.tile(np.arange(4, 10), 6).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=8, eos_id=-1))
+            for _ in range(2)]
+    for r in reqs:
+        eng.add_request(r)
+    outs = eng.run_until_complete()
+    rep = _assert_replay_matches(eng, outs)
+    assert rep["spec_calls"] == eng.metrics["spec_calls"] > 0
+    assert rep["spec_tokens"] == eng.metrics["spec_tokens"]
+    # one accept-length observation per slot per verify call
+    spec_accepts = sum(1 for e in eng.trace.events()
+                       if e.kind == "accept" and e.payload.get("spec"))
+    assert eng.registry.histogram("accept_len").n == spec_accepts > 0
+
+
+def test_observability_flag_silences_trace_not_registry():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params, observability=False)
+    rng = np.random.default_rng(2)
+    for r in _requests(rng, (12, 9), new=3):
+        eng.add_request(r)
+    outs = eng.run_until_complete()
+    assert len(eng.trace.events()) == 0            # ring silenced
+    total = sum(len(v) for v in outs.values())
+    assert eng.metrics["decode_tokens"] + eng.metrics["prefill_samples"] \
+        == total                                   # registry still on
+
+
+# ---------------------------------------------------------------------------
+# dense engine parity
+# ---------------------------------------------------------------------------
+
+def test_dense_engine_registry_parity_and_replay():
+    """The dense Engine now reports the same shape of metrics as the paged
+    one (ttft_sum/ttft_n, typed histograms, trace replay)."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = Engine(config, params, mesh=None, max_batch=2, max_len=96,
+                 bucket=16)
+    rng = np.random.default_rng(1)
+    for r in _requests(rng, (20, 11, 15), new=4):
+        eng.add_request(r)
+    outs = eng.run_until_complete()
+    m = eng.metrics
+    assert m["ttft_n"] == 3 and m["ttft_sum"] > 0
+    assert m["preemptions"] == 0                   # key exists for diffing
+    assert eng.registry.histogram("ttft").n == 3
+    assert eng.registry.histogram("tpot").n == m["decode_tokens"]
+    rep = _assert_replay_matches(eng, outs)
+    assert rep["completed"] == 3
+
+
+def test_dense_and_paged_share_replayable_key_set():
+    """Every replayable counter must exist in both engines' registries so a
+    dashboard can diff them key-for-key."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    paged = _paged_engine(cfg, iso, params)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso)
+    dense = Engine(config, params, mesh=None, max_batch=2, max_len=96,
+                   bucket=16)
+    for name in ("decode_tokens", "prefill_samples", "ttft_sum", "ttft_n",
+                 "preemptions", "completed", "prefill_s", "decode_s",
+                 "prefill_dispatch_s", "decode_dispatch_s"):
+        assert name in paged.metrics, f"paged missing {name}"
+        assert name in dense.metrics, f"dense missing {name}"
+
+
+# ---------------------------------------------------------------------------
+# overlap probe: isolated from serving state
+# ---------------------------------------------------------------------------
+
+def test_overlap_probe_does_not_disturb_engine():
+    """The probe compiles its own closures (never polluting the serving
+    decode-closure cache the compile guard pins) and leaves pool/scheduler
+    state untouched, so traffic after the probe still matches."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params)
+    ref = _paged_engine(cfg, iso, params)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (18, 9)]
+
+    res = eng.measure_overlap_efficiency(iters=2, warmup=1)
+    assert set(res) >= {"overlap_efficiency", "t_sequential_s",
+                        "t_overlap_s", "exposed_comm_s", "batch", "tp"}
+    assert res["t_sequential_s"] > 0 and res["t_overlap_s"] > 0
+    assert set(eng._decode_fns) <= {1}, "probe polluted serving closures"
+    assert eng.alloc.used_pages == 0, "probe leaked pages"
+
+    for e in (eng, ref):
+        for p in prompts:
+            e.add_request(Request(prompt=p.copy(),
+                                  sampling=SamplingParams(max_new_tokens=4,
+                                                          eos_id=-1)))
+    outs = eng.run_until_complete()
+    refs = ref.run_until_complete()
+    assert [outs[r] for r in sorted(outs)] == [refs[r] for r in sorted(refs)]
+
+
+def test_overlap_probe_reports_unbatchable():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params, max_batch=1)
+    res = eng.measure_overlap_efficiency(iters=1, warmup=0)
+    assert res["overlap_efficiency"] == 0.0 and res["batch"] < 2

@@ -1,0 +1,88 @@
+"""CI trace-schema lane: a mixed serving workload (chunked + packed prefill,
+prefix sharing, speculative decode) must export a schema-valid Chrome trace
+whose replay reproduces the engine's final counters — the
+narration-is-complete contract for the whole stack (preemption replay is
+covered separately in test_obs.py)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_dense, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.obs import (replay_counters, validate_chrome_trace,
+                       write_chrome_trace)
+from repro.obs.replay import REPLAYABLE
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+
+def _mixed_engine_run():
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    config = Config(
+        model=cfg, parallel=ParallelConfig(data=1, model=1), iso=iso,
+        serving=ServingConfig(page_size=8, max_batch=3, max_len=160,
+                              prefill_token_budget=24, num_pages=30,
+                              prefix_sharing=True, spec_k=2))
+    eng = PagedEngine(config, params)
+    rng = np.random.default_rng(13)
+    prefix = np.tile(np.arange(4, 12), 2).astype(np.int32)   # 16 tokens
+    for n in (30, 22, 18, 9):
+        body = np.tile(np.arange(4, 10), (n // 6) + 1)[:n].astype(np.int32)
+        eng.add_request(Request(
+            prompt=np.concatenate([prefix, body]),
+            sampling=SamplingParams(max_new_tokens=6, eos_id=-1)))
+    outs = eng.run_until_complete()
+    return eng, outs
+
+
+def test_mixed_workload_trace_roundtrip(tmp_path):
+    eng, outs = _mixed_engine_run()
+    assert eng.trace.dropped == 0
+
+    # workload actually exercised the interesting paths
+    kinds = {e.kind for e in eng.trace.events()}
+    assert {"grant", "grant_commit", "prefill_call", "decode_call", "sample",
+            "accept", "alloc", "free", "pool", "admit", "finish",
+            "adopt"} <= kinds, kinds
+    assert eng.metrics["spec_calls"] > 0
+    assert eng.metrics["prefix_shared_tokens"] > 0
+    assert eng.metrics["resumed_grants"] > 0        # chunked prefill resumed
+
+    # export -> reload -> schema-validate (what the CI lane gates on)
+    path = tmp_path / "trace.json"
+    n = write_chrome_trace(eng.trace.events(), str(path))
+    assert n == len(eng.trace.events())
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] != "M"}
+    assert "prefill_call" in names and "pool" in names
+
+    # replay(trace) == registry, key for key
+    rep = replay_counters(eng.trace.events())
+    for name in REPLAYABLE:
+        assert rep[name] == eng.metrics[name], \
+            (name, rep[name], eng.metrics[name])
+    assert rep["pages_allocated"] - rep["pages_freed"] == \
+        eng.alloc.used_pages == 0
+    total = sum(len(v) for v in outs.values())
+    assert eng.metrics["decode_tokens"] + eng.metrics["prefill_samples"] \
+        == total
+
+
+def test_trace_spans_have_positive_wall_durations():
+    eng, _ = _mixed_engine_run()
+    spans = [e for e in eng.trace.events()
+             if e.kind in ("prefill_call", "decode_call")]
+    assert spans and all(e.dur > 0 for e in spans)
+    # spans account for the registry's fenced phase timers
+    prefill_dur = sum(e.dur for e in spans if e.kind == "prefill_call")
+    assert abs(prefill_dur - eng.metrics["prefill_s"]) < 1e-6
+    decode_dur = sum(e.dur for e in spans if e.kind == "decode_call")
+    assert abs(decode_dur - eng.metrics["decode_s"]) < 1e-6
