@@ -7,7 +7,9 @@ recorded per commit instead of staying empty:
     paged vs dense (KV bytes, TTFT), CoW prefix sharing, the
     bucketed-prefill counters (pad tokens, compiled-closure count), and the
     batched-prefill section (packed vs batch-1 grants at 1/2/4 requests;
-    the 4-wide call reduction is lifted into ``prefill_call_reduction``);
+    the 4-wide call reduction is lifted into ``prefill_call_reduction``),
+    and the split-KV decode section (the 128-page modeled critical-path
+    ratio is lifted into ``decode_split_speedup``);
   * ``benchmarks/perf_ledger.py --smoke`` in a subprocess (it forces 512
     placeholder XLA devices at import, which must not leak into the
     engine-bench process whose jit runs on the single real CPU device).
@@ -66,6 +68,7 @@ def main(argv=None) -> None:
     # observability section's latency/occupancy/overlap numbers
     accepted_per_call = 0.0
     prefill_call_reduction = 0.0
+    decode_split_speedup = 0.0
     obs = {"overlap_efficiency": 0.0, "ttft_p50": 0.0, "ttft_p99": 0.0,
            "pool_occupancy_peak": 0, "obs_overhead_pct": 0.0}
     for row in rows:
@@ -77,6 +80,12 @@ def main(argv=None) -> None:
             for part in row["derived"].split(";"):
                 if part.startswith("call_reduction="):
                     prefill_call_reduction = float(part.split("=", 1)[1])
+        if row["name"] == "engine/decode_split_128":
+            # long-context split-KV: modeled critical-path ratio at 128
+            # resident pages (see engine_bench._decode_split_section)
+            for part in row["derived"].split(";"):
+                if part.startswith("split_speedup="):
+                    decode_split_speedup = float(part.split("=", 1)[1])
         if row["name"] == "engine/observability":
             for part in row["derived"].split(";"):
                 k, _, v = part.partition("=")
@@ -92,6 +101,7 @@ def main(argv=None) -> None:
         "wall_s": round(time.perf_counter() - t0, 2),
         "accepted_per_call": accepted_per_call,
         "prefill_call_reduction": prefill_call_reduction,
+        "decode_split_speedup": decode_split_speedup,
         **obs,
         "engine": rows,
         "perf_ledger": ledger,

@@ -216,8 +216,64 @@ def run(emit):
          f"decode_calls={m_sp['decode_calls']};"
          f"decode_tokens={m_sp['decode_tokens']};tokens_equal=True")
 
+    # ---- split-KV flash-decode: long-context sequence parallelism ---------
+    _decode_split_section(emit)
+
     # ---- observability: overhead, latency percentiles, overlap probe ------
     _obs_section(cfg, iso2, params, emit)
+
+
+def _decode_split_section(emit, kv_splits=4):
+    """Split-KV vs sequential page walk at 8/32/128 resident pages.
+
+    ``split_speedup`` is the MODELED decode critical-path ratio
+    ``MB / (ceil(MB/S) + 1)``: a sequential walk chains MB dependent page
+    steps, the split walk chains ceil(MB/S) per span (spans independent)
+    plus one reduce step.  On this CPU container the Pallas interpreter
+    executes the grid sequentially, so measured wall time CANNOT show the
+    parallel win — it is reported alongside (wall_us_seq/wall_us_split) as
+    an honesty check that the split adds no blow-up, while the modeled ratio
+    is what real hardware parallelism delivers (ci_smoke lifts the 128-page
+    row into BENCH_pr.json).  Numerics are asserted equal each depth."""
+    from repro.kernels.flash_decode import flash_decode
+
+    rng = np.random.default_rng(0)
+    ps, hq, hkv, hd = 16, 4, 2, 32
+
+    def _time(fn, *args, iters=5):
+        fn(*args)[0].block_until_ready()          # compile outside the timer
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    for mb in (8, 32, 128):
+        L = mb * ps
+        k_pages = jnp.asarray(
+            rng.standard_normal((mb + 1, ps, hkv, hd)), jnp.float32)
+        v_pages = jnp.asarray(
+            rng.standard_normal((mb + 1, ps, hkv, hd)), jnp.float32)
+        bt = jnp.arange(mb, dtype=jnp.int32)[None]
+        lens = jnp.asarray([L], jnp.int32)
+        q = jnp.asarray(rng.standard_normal((1, hq, hd)), jnp.float32)
+
+        seq_fn = jax.jit(lambda *a: flash_decode(*a, kv_splits=1))
+        spl_fn = jax.jit(lambda *a: flash_decode(*a, kv_splits=kv_splits))
+        args = (q, k_pages, v_pages, bt, lens)
+        o_seq = seq_fn(*args)[0]
+        o_spl = spl_fn(*args)[0]
+        assert float(jnp.max(jnp.abs(o_seq - o_spl))) < 1e-5, \
+            f"split-KV diverged at {mb} pages"
+        wall_seq = _time(seq_fn, *args)
+        wall_spl = _time(spl_fn, *args)
+        depth_seq = mb
+        depth_spl = -(-mb // kv_splits) + 1       # spans parallel + reduce
+        speedup = depth_seq / depth_spl
+        emit(f"engine/decode_split_{mb}", wall_spl * 1e6,
+             f"split_speedup={speedup:.3f};pages={mb};kv_splits={kv_splits};"
+             f"wall_us_seq={wall_seq * 1e6:.1f};"
+             f"wall_us_split={wall_spl * 1e6:.1f};tokens_equal=True")
 
 
 def _steady_decode(cfg, iso, params, obs_on, timed_steps=30):

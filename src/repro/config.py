@@ -216,6 +216,15 @@ class ServingConfig:
     # window positions roll back by pos invalidation.  Attention-only stacks
     # (a K-token step would advance recurrent SSM/xLSTM state K times).
     spec_k: int = 0
+    # split-KV (sequence-parallel) flash-decode: partition each request's page
+    # walk into S contiguous spans computed as independent grid steps, folded
+    # by a partial-softmax reduce kernel (kernels/flash_decode.py).  0 = auto
+    # (split by decode_split_factor only when the deepest resident request
+    # spans >= decode_split_min_pages pages), 1 = sequential walk, >1 forces
+    # that split count.  Decode closures are compile-keyed on (K, S).
+    decode_kv_splits: int = 0
+    decode_split_factor: int = 4     # S chosen when auto mode decides to split
+    decode_split_min_pages: int = 16 # auto splits only at/past this page depth
     # observability (src/repro/obs): the typed metrics registry is ALWAYS on
     # (counter bumps are host-side nanoseconds); this flag gates the
     # structured trace-event ring (scheduler/allocator/engine narration,

@@ -205,7 +205,10 @@ def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
     """Decode (x: (B,K,D), K=1 plain / K>1 speculative verify): sequential
     collectives (paper: overlap doesn't pay at decode), cache read+update per
     layer.  caches: per-position pytrees stacked over periods, each with
-    optional k/v (+pos handled by caller), ssm/mlstm/slstm states, cross_k/v."""
+    optional k/v (+pos handled by caller), ssm/mlstm/slstm states, cross_k/v.
+    ``sctx.kv_splits`` > 1 runs each paged attention's page walk as that many
+    split-KV spans (kernels/flash_decode.py) — static, so it is part of the
+    caller's compile key."""
     from repro.core.overlap import psum_now
     n_pos = len(pattern)
 
@@ -311,7 +314,9 @@ def run_stack_decode_overlap(params_periods, pattern: Sequence[str], x, caches,
     the pool is read shared by both halves and the per-half KV scatters are
     threaded functionally half0 -> half1.  With ``ctx.tp_axis=None`` the
     collectives degrade to identity and this is numerically the plain
-    ``run_stack_decode`` split in two.
+    ``run_stack_decode`` split in two.  ``sctx.kv_splits`` rides into each
+    half's StageCtx through the dataclass replace below, so split-KV
+    flash-decode composes with the batch-split schedule unchanged.
     """
     from dataclasses import replace as _dc_replace
 

@@ -14,8 +14,20 @@ Layout (mirrors PagedKVCache, minus the period dim which the caller scans):
     lengths      (B,)    int32      tokens resident; window token qi sits at
                                     position lengths[b] + qi (NOT in the pool)
 
-Grid is (batch, kv_head, page) with the page dimension iterated sequentially
-(minor-most), exactly like the k-block dimension of kernels/flash_prefill.py.
+Grid is (batch, kv_head, split, page): the page walk of each request is
+partitioned into ``kv_splits`` contiguous spans of ``ceil(MB / kv_splits)``
+pages (the Flash-Decoding sequence-parallel structure: a split grid axis over
+the KV length, per-span online-softmax partials, then a second reduce kernel
+folding the spans).  The page dimension stays minor-most and sequential
+WITHIN a span — exactly the old walk — but spans are independent grid slots,
+so a long-context request's walk no longer serializes over its whole block
+table while batchmates idle.  Each span emits its own ``(out, m, l)`` partial
+into a ``(B, Hkv, S, ...)`` buffer; ``_decode_reduce_kernel`` then folds the
+S span states with the same merge rule as
+``layers.attention.merge_softmax_states`` (disjoint-key-set softmax union),
+so the caller-side contract is unchanged at every S.  ``kv_splits=1``
+degenerates to the sequential walk and skips the reduce entirely.
+
 The block table and lengths ride in via ``PrefetchScalarGridSpec`` scalar
 prefetch, so the k/v BlockSpec index maps can resolve ``page -> pool slot``
 before the kernel body runs (the TPU DMA pattern for paged attention).  GQA is
@@ -24,6 +36,14 @@ head's whole query group.  The K>1 verify window rides in the SAME grid: query
 rows are laid out (Hkv, group*K) with row ``g*K + qi``, so the per-position
 sliding-window shift is an iota-mod inside the kernel body and the page walk
 is shared by all K positions.
+
+Pages entirely past a request's resident length (``j * ps >= length``) are
+skipped with a ``pl.when`` body guard rather than paying a fully-masked
+matmul: a dead page leaves (m, l, acc) bit-identically unchanged (alpha =
+exp(0) = 1, p = 0), so the guard is a pure cost saving
+(``guard_dead_pages=False`` keeps the unguarded body for the parity
+regression).  A span whose every page is dead emits the neutral state
+``(0, NEG_INF, 0)`` and vanishes in the reduce.
 
 The kernel returns the *partial* softmax state ``(out, m, l)`` over the paged
 keys only; the caller folds the window's own (k, v) — lower-triangular among
@@ -35,9 +55,10 @@ length + qi, so causality over the pool reduces to the validity mask; the
 per-query causal structure lives entirely in the intra-window merge.
 
 ``interpret=True`` (the default) runs the same kernel under the Pallas
-interpreter — the CPU-container fallback, mirroring flash_prefill.py.  On real
-TPU hardware ``ps`` and ``hd`` should be multiples of the (8, 128) register
-tile; the tiny test shapes rely on interpret mode's laxness.
+interpreter — the CPU-container fallback, mirroring flash_prefill.py.  When
+compiled for real TPU hardware (``interpret=False``) the (8, 128) register
+tile alignment is ASSERTED up front (``check_tpu_tile_alignment``); the tiny
+test shapes rely on interpret mode's laxness.
 """
 from __future__ import annotations
 
@@ -51,64 +72,144 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def check_tpu_tile_alignment(ps: int, hd: int, kernel: str) -> None:
+    """Real-TPU (8, 128) register-tile alignment for the paged kernels.
+
+    The fp32 VPU/MXU tile is (sublane 8, lane 128): the page token axis must
+    be a sublane multiple and the head dim a lane multiple or Mosaic pads
+    every page load.  Only enforced when compiling for hardware — interpret
+    mode (the CPU-container fallback) is layout-lax by design and the tiny
+    test shapes depend on that.
+    """
+    if ps % 8 != 0 or hd % 128 != 0:
+        raise ValueError(
+            f"{kernel}: page_size={ps} must be a multiple of 8 (sublane) and "
+            f"head_dim={hd} a multiple of 128 (lane) to match the TPU "
+            f"(8, 128) register tile when interpret=False; pad the pool "
+            f"layout or run under the interpreter")
+
+
 def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
                    o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
-                   page_size: int, window: int, num_pages: int,
-                   k_tokens: int):
+                   page_size: int, window: int, pages_per_split: int,
+                   k_tokens: int, guard_dead_pages: bool):
     b = pl.program_id(0)
-    j = pl.program_id(2)
+    split = pl.program_id(2)
+    jj = pl.program_id(3)                      # page index WITHIN the span
+    j = split * pages_per_split + jj           # global page-walk index
+    length = len_ref[b]                        # tokens resident
 
-    @pl.when(j == 0)
+    @pl.when(jj == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)                 # (group*K, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    def _page_body():
+        q = q_ref[0, 0].astype(jnp.float32)             # (group*K, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)          # (ps, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
 
-    hd = q.shape[-1]
-    s = jnp.dot(q, k.T) * (hd ** -0.5)                  # (group*K, ps)
+        hd = q.shape[-1]
+        s = jnp.dot(q, k.T) * (hd ** -0.5)              # (group*K, ps)
 
-    length = len_ref[b]                                 # tokens resident
-    k_pos = j * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 1)
-    # validity doubles as causality: every paged key sits at a position
-    # < length <= length + qi for all K window queries
-    mask = k_pos < length
-    if window:
-        # per-query window shift: row r = g*K + qi queries position L + qi
-        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % k_tokens
-        mask &= k_pos > length + qi - window
-    # explicit mask multiply (not just -inf fill): a fully-masked page keeps
-    # m at NEG_INF and exp(0)=1 would otherwise leak weight per masked key
-    s = jnp.where(mask, s, NEG_INF)
+        k_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        # validity doubles as causality: every paged key sits at a position
+        # < length <= length + qi for all K window queries
+        mask = k_pos < length
+        if window:
+            # per-query window shift: row r = g*K + qi queries pos L + qi
+            qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % k_tokens
+            mask &= k_pos > length + qi - window
+        # explicit mask multiply (not just -inf fill): a fully-masked page
+        # keeps m at NEG_INF and exp(0)=1 would otherwise leak weight per
+        # masked key
+        s = jnp.where(mask, s, NEG_INF)
 
-    m_prev = m_scr[...]                                 # (group, 1)
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.exp(s - m_cur) * mask
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
-    m_scr[...] = m_cur
+        m_prev = m_scr[...]                             # (group*K, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur) * mask
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+        m_scr[...] = m_cur
 
-    @pl.when(j == num_pages - 1)
+    if guard_dead_pages:
+        # skip pages entirely past the resident tokens: a dead page leaves
+        # (m, l, acc) bit-identically unchanged, so this is pure cost saving
+        pl.when(j * page_size < length)(_page_body)
+    else:
+        _page_body()
+
+    @pl.when(jj == pages_per_split - 1)
     def _finish():
         l = l_scr[...]
-        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
-        m_ref[0, 0] = m_scr[...].astype(m_ref.dtype)
-        l_ref[0, 0] = l.astype(l_ref.dtype)
+        o_ref[0, 0, 0] = (acc_scr[...]
+                          / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        m_ref[0, 0, 0] = m_scr[...].astype(m_ref.dtype)
+        l_ref[0, 0, 0] = l.astype(l_ref.dtype)
+
+
+def _decode_reduce_kernel(o_ref, m_ref, l_ref, o_out, m_out, l_out):
+    """Fold the S per-span partials into one state — the second phase of
+    Flash-Decoding.  Same math as ``layers.attention.merge_softmax_states``
+    flattened over the span axis: spans cover disjoint key-position ranges,
+    so ``m = max_s m_s``, each span reweights by ``w_s = exp(m_s - m) * l_s``
+    and a neutral span (m_s = NEG_INF, l_s = 0) contributes exactly nothing
+    (NEG_INF is finite, so even an all-empty row folds to (0, NEG_INF, 0)
+    without NaNs)."""
+    m_s = m_ref[0, 0]                                   # (S, gk, 1)
+    o_s = o_ref[0, 0]                                   # (S, gk, hd)
+    m = jnp.max(m_s, axis=0)                            # (gk, 1)
+    w = jnp.exp(m_s - m[None]) * l_ref[0, 0]            # (S, gk, 1)
+    l = jnp.sum(w, axis=0)                              # (gk, 1)
+    o_out[0, 0] = jnp.sum(o_s * w, axis=0) / jnp.maximum(l, 1e-30)
+    m_out[0, 0] = m
+    l_out[0, 0] = l
+
+
+def _decode_reduce(out, m, l, *, interpret: bool = True):
+    """(B, Hkv, S, gk, ·) span partials -> (B, Hkv, gk, ·) folded state."""
+    B, Hkv, S, gk, hd = out.shape
+    return pl.pallas_call(
+        _decode_reduce_kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, gk, hd), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, S, gk, 1), lambda b, h: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, S, gk, 1), lambda b, h: (b, h, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, gk, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, gk, 1), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, gk, 1), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, gk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(out, m, l)
 
 
 def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
-                 window: int = 0, interpret: bool = True):
+                 window: int = 0, kv_splits: int = 1,
+                 guard_dead_pages: bool = True, interpret: bool = True):
     """Paged flash attention for a decode/verify window per request.
 
     q: (B, Hq, hd) single-token decode, or (B, K, Hq, hd) a K-token
     speculative verify window (token qi at position ``lengths[b] + qi``);
     k_pages/v_pages: (N, ps, Hkv, hd); block_tables: (B, MB) int32 (-1 pad);
     lengths: (B,) int32 resident token counts.
+
+    ``kv_splits`` partitions each request's page walk into S contiguous
+    spans run as independent grid slots (sequence-parallel Flash-Decoding);
+    the per-span partials are folded by a second reduce kernel, so the
+    result is the same partial state at every S (clamped to the table
+    width; S=1 is the sequential walk, no reduce).  ``guard_dead_pages``
+    skips pages past ``ceil(length/ps)`` (bit-identical — regression-pinned).
 
     Returns ``(out, m, l)`` fp32 partial softmax state over the paged keys:
     out = acc / l, m the running max, l the running denominator — shaped
@@ -125,34 +226,47 @@ def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
     gk = group * K
+    if not interpret:
+        check_tpu_tile_alignment(ps, hd, "flash_decode")
+
+    S = max(1, min(int(kv_splits), MB))
+    pps = -(-MB // S)                                  # pages per span
 
     # pad table entries (-1) alias page 0; they are always masked because a
     # request's pages cover positions [0, lengths) contiguously
     bt = jnp.clip(block_tables, 0, N - 1).astype(jnp.int32)
+    if S * pps > MB:
+        # ragged last span: the extra walk positions j >= MB alias page 0
+        # and sit at key positions >= MB*ps >= length, so the validity mask
+        # always hides them
+        bt = jnp.pad(bt, ((0, 0), (0, S * pps - MB)))
     # query-row layout r = g*K + qi (the kernel recovers qi as iota % K)
     qg = q.reshape(B, K, Hkv, group, hd).transpose(0, 2, 3, 1, 4)
     qg = qg.reshape(B, Hkv, gk, hd)
 
     kernel = functools.partial(_decode_kernel, page_size=ps, window=window,
-                               num_pages=MB, k_tokens=K)
+                               pages_per_split=pps, k_tokens=K,
+                               guard_dead_pages=guard_dead_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # block_tables, lengths
-        grid=(B, Hkv, MB),
+        grid=(B, Hkv, S, pps),
         in_specs=[
             pl.BlockSpec((1, 1, gk, hd),
-                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+                         lambda b, h, s, jj, bt, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+                         lambda b, h, s, jj, bt, ln:
+                         (bt[b, s * pps + jj], 0, h, 0)),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+                         lambda b, h, s, jj, bt, ln:
+                         (bt[b, s * pps + jj], 0, h, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, gk, hd),
-                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, gk, 1),
-                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, gk, 1),
-                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, gk, hd),
+                         lambda b, h, s, jj, bt, ln: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, gk, 1),
+                         lambda b, h, s, jj, bt, ln: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, gk, 1),
+                         lambda b, h, s, jj, bt, ln: (b, h, s, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((gk, 1), jnp.float32),      # running max
@@ -164,12 +278,17 @@ def flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, Hkv, gk, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
-            jax.ShapeDtypeStruct((B, Hkv, gk, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, gk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, gk, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, S, gk, 1), jnp.float32),
         ],
         interpret=interpret,
     )(bt, lengths.astype(jnp.int32), qg, k_pages, v_pages)
+
+    if S == 1:
+        out, m, l = out[:, :, 0], m[:, :, 0], l[:, :, 0]
+    else:
+        out, m, l = _decode_reduce(out, m, l, interpret=interpret)
 
     def unrow(t, last):
         t = t.reshape(B, Hkv, group, K, last).transpose(0, 3, 1, 2, 4)

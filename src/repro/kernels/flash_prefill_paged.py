@@ -51,10 +51,11 @@ That split keeps the pool read-only inside the kernel; the chunk's KV is
 scattered to its pages afterwards by the engine.
 
 ``interpret=True`` (the default) runs the same kernel under the Pallas
-interpreter — the CPU-container fallback, mirroring flash_decode.py.  On real
-TPU hardware ``ps``/``hd`` should be multiples of the (8, 128) register tile
-and ``block_q`` of the sublane count; tiny test shapes rely on interpret
-mode's laxness.
+interpreter — the CPU-container fallback, mirroring flash_decode.py.  When
+compiled for real TPU hardware (``interpret=False``) the (8, 128) register
+tile alignment of ``ps``/``hd`` and the sublane alignment of ``block_q`` are
+ASSERTED up front (flash_decode.check_tpu_tile_alignment); tiny test shapes
+rely on interpret mode's laxness.
 """
 from __future__ import annotations
 
@@ -141,6 +142,13 @@ def flash_prefill_paged(q, k_pages, v_pages, block_tables, prefix_lens,
     MB = block_tables.shape[1]
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
+    if not interpret:
+        from repro.kernels.flash_decode import check_tpu_tile_alignment
+        check_tpu_tile_alignment(ps, hd, "flash_prefill_paged")
+        if block_q % 8 != 0:
+            raise ValueError(
+                f"flash_prefill_paged: block_q={block_q} must be a sublane "
+                f"(8) multiple when compiled for hardware")
 
     block_q = min(block_q, max(8, Sq))
     sq_p = math.ceil(Sq / block_q) * block_q

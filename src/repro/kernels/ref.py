@@ -98,6 +98,74 @@ def paged_verify_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return out, m, l
 
 
+def paged_decode_split_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                           kv_splits: int, window: int = 0):
+    """Split-parametrized oracle for the sequence-parallel (split-KV) mode of
+    kernels/flash_decode.py: compute an independent masked-softmax partial
+    per contiguous page span, then fold the spans left-to-right with the
+    ``merge_softmax_states`` rule (disjoint-key-set softmax union) — the
+    same two-phase structure as the kernel, but in pure jnp, so span
+    boundaries are provable at every S.
+
+    q: (B,K,Hq,hd) (or (B,Hq,hd), squeezed like the kernel); spans cover
+    page-walk indices ``[s*ceil(MB/S), (s+1)*ceil(MB/S))``.  Returns
+    ``(out, m, l)`` fp32 partial state shaped like ``paged_verify_ref``
+    (3-D q squeezes the K axis).  An empty span is (0, NEG_INF, 0) and
+    contributes nothing to the fold; rows with lengths == 0 stay
+    (0, NEG_INF, 0) through every span.
+    """
+    NEG_INF = -1e30
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, K, Hq, hd = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    group = Hq // Hkv
+    S = max(1, min(int(kv_splits), MB))
+    pps = -(-MB // S)
+    idx = jnp.clip(block_tables, 0, N - 1)
+    kd = k_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    vd = v_pages[idx].reshape(B, MB * ps, Hkv, hd)
+    kr = jnp.repeat(kd, group, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(vd, group, axis=2).astype(jnp.float32)
+    s_all = jnp.einsum("bkhd,bshd->bkhs", q.astype(jnp.float32),
+                       kr) * (hd ** -0.5)
+    k_pos = jnp.arange(MB * ps, dtype=jnp.int32)[None, None, :]
+    base = k_pos < lengths[:, None, None]               # (B, 1, S_keys)
+    if window:
+        q_abs = (lengths[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+                 )[:, :, None]
+        base = base & (k_pos > q_abs - window)
+    else:
+        base = jnp.broadcast_to(base, (B, K, MB * ps))
+
+    def span_partial(lo, hi):
+        span = (k_pos >= lo) & (k_pos < hi)
+        mask = (base & span)[:, :, None, :]             # (B, K, 1, S_keys)
+        sc = jnp.where(mask, s_all, NEG_INF)
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m) * mask
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bkhs,bshd->bkhd", p, vr) / jnp.maximum(l, 1e-30)
+        return out, m, l
+
+    out, m, l = span_partial(0, pps * ps)
+    for sp in range(1, S):
+        o_b, m_b, l_b = span_partial(sp * pps * ps, (sp + 1) * pps * ps)
+        # merge_softmax_states, kept in partial (out, m, l) form so the
+        # fold can continue (the layer primitive returns only the output)
+        m_u = jnp.maximum(m, m_b)
+        w_a = jnp.exp(m - m_u) * l
+        w_b = jnp.exp(m_b - m_u) * l_b
+        l_u = w_a + w_b
+        out = (out * w_a + o_b * w_b) / jnp.maximum(l_u, 1e-30)
+        m, l = m_u, l_u
+    if squeeze:
+        out, m, l = out[:, 0], m[:, 0], l[:, 0]
+    return out, m, l
+
+
 def paged_prefill_ref(q, k_pages, v_pages, block_tables, prefix_lens,
                       q_starts, *, window: int = 0):
     """Oracle for kernels/flash_prefill_paged.py: gather the prefix dense,

@@ -372,13 +372,17 @@ def attn_decode_partial(p: dict, x, cfg: ModelConfig, layout_group: int, *,
 
 def attn_decode_paged_partial(p: dict, x, cfg: ModelConfig, layout_group: int,
                               *, k_pages, v_pages, block_tables, lengths,
-                              window: int = 0):
+                              window: int = 0, kv_splits: int = 1):
     """Decode straight against the paged KV pool (no dense gather).
 
     x: (B,K,D) — K=1 plain decode, K>1 a speculative verify window whose
     token qi sits at position ``lengths[b] + qi``; k_pages/v_pages:
     (N, ps, Hkv_loc, hd) page pool (local shard); block_tables: (B, MB) int32
-    (-1 pad); lengths: (B,) tokens resident.
+    (-1 pad); lengths: (B,) tokens resident.  ``kv_splits`` > 1 runs the
+    kernel's sequence-parallel (split-KV) page walk: S contiguous spans
+    emit per-span partials that the kernel's reduce step folds with the
+    ``merge_softmax_states`` rule, so the state this layer merges is the
+    same at every S.
 
     The Pallas kernel (kernels/flash_decode.py) walks the block table with an
     online softmax and returns the partial state over paged keys (one per
@@ -395,7 +399,8 @@ def attn_decode_paged_partial(p: dict, x, cfg: ModelConfig, layout_group: int,
              ).astype(jnp.int32)
     q, k_new, v_new = project_qkv(p, x, cfg, q_pos)
     out_p, m_p, l_p = flash_decode(q, k_pages, v_pages, block_tables,
-                                   lengths, window=window)  # (B,K,Hq,·)
+                                   lengths, window=window,
+                                   kv_splits=kv_splits)  # (B,K,Hq,·)
     # intra-window: window token qi attends tokens 0..qi of the window
     # (lower triangular) — their KV is not in the pool during this call
     out_i, m_i, l_i = sdpa_partial(q, k_new, v_new, q_pos=q_pos, k_pos=q_pos,

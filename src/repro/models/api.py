@@ -44,10 +44,11 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig,
 
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
                 unroll: bool = False, block_tables=None, decode_mask=None,
-                overlap_batch: bool = False):
+                overlap_batch: bool = False, kv_splits: int = 1):
     """tokens: (B,K) — K=1 plain decode, K>1 a speculative verify window
     (dense caches AND the paged path via ``block_tables``; see
-    models/decoder.decode_step for the full contract)."""
+    models/decoder.decode_step for the full contract).  ``kv_splits`` (static)
+    selects split-KV flash-decode for the paged path."""
     if cfg.family == "audio":
         assert block_tables is None, "paged decode does not support enc-dec"
         return whisper_lib.whisper_decode_step(params, cfg, ctx, tokens, caches,
@@ -55,7 +56,8 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
     return dec_lib.decode_step(params, cfg, ctx, tokens, caches, lengths,
                                unroll=unroll, block_tables=block_tables,
                                decode_mask=decode_mask,
-                               overlap_batch=overlap_batch)
+                               overlap_batch=overlap_batch,
+                               kv_splits=kv_splits)
 
 
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,

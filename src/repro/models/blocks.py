@@ -47,6 +47,11 @@ class StageCtx:
     # request, and the (B,) bool mask of slots really decoding this step
     block_tables: Optional[jnp.ndarray] = None
     decode_mask: Optional[jnp.ndarray] = None
+    # split-KV (sequence-parallel) flash-decode: partition each request's
+    # page walk into this many contiguous spans, folded by the kernel's
+    # reduce step (kernels/flash_decode.py).  Static — part of the decode
+    # closure's compile key (serving keys closures on (K, S)).
+    kv_splits: int = 1
     # grant-size bucketing (paged prefill): number of REAL tokens in this call
     # — traced scalar, or per-row (B,) vector for batched grants whose rows
     # carry different real lengths.  Call-relative positions >= valid_len are
@@ -137,7 +142,7 @@ def attn_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
                 p["attn"], xn, cfg, sctx.group_eff,
                 k_pages=cache["k_pages"], v_pages=cache["v_pages"],
                 block_tables=sctx.block_tables, lengths=sctx.lengths,
-                window=sctx.window)
+                window=sctx.window, kv_splits=sctx.kv_splits)
         else:
             partial, kv_new = attn_lib.attn_decode_partial(
                 p["attn"], xn, cfg, sctx.group_eff,
@@ -192,7 +197,7 @@ def hybrid_stage(p, x, start_pos, seq_state, sctx: StageCtx, cache=None):
                 p["attn"], xn, cfg, sctx.group_eff,
                 k_pages=cache["k_pages"], v_pages=cache["v_pages"],
                 block_tables=sctx.block_tables, lengths=sctx.lengths,
-                window=sctx.window)
+                window=sctx.window, kv_splits=sctx.kv_splits)
         else:
             a_part, kv_new = attn_lib.attn_decode_partial(
                 p["attn"], xn, cfg, sctx.group_eff,

@@ -228,8 +228,8 @@ def _build_caches(extras: Sequence[Dict], cfg: ModelConfig, B: int, S: int,
 
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
                 lengths, unroll: bool = False, block_tables=None,
-                decode_mask=None,
-                overlap_batch: bool = False) -> Tuple[jnp.ndarray, Any]:
+                decode_mask=None, overlap_batch: bool = False,
+                kv_splits: int = 1) -> Tuple[jnp.ndarray, Any]:
     """tokens: (B,K) int32 — K=1 plain decode, K>1 a speculative verify
     window whose token qi sits at position ``lengths[b] + qi``; lengths:
     (B,) tokens already processed.
@@ -241,7 +241,10 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
     window runs through the same kernel grid (see kernels/flash_decode.py)
     and scatters all K positions' KV.  ``overlap_batch`` switches to the
     batch-split ISO schedule (core/iso.py) so each half's TP all-reduce
-    hides behind the other half's compute.
+    hides behind the other half's compute.  ``kv_splits`` (static) runs the
+    paged attention's page walk as that many sequence-parallel spans
+    (split-KV flash-decode) — it rides through StageCtx into both decode
+    drivers, orthogonal to ``overlap_batch``.
 
     Returns (logits_local (B,K,V_loc), updated caches).
     """
@@ -256,6 +259,7 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
     sctx = _stage_ctx(cfg, ctx, "decode", lengths=lengths)
     sctx.block_tables = block_tables
     sctx.decode_mask = decode_mask
+    sctx.kv_splits = kv_splits
     if overlap_batch:
         from repro.core.iso import run_stack_decode_overlap
         x, new_caches = run_stack_decode_overlap(

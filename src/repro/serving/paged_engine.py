@@ -173,7 +173,7 @@ class PagedEngine:
         self._by_rid: Dict[int, RequestState] = {}        # waiting + running
         self._finished: List[RequestState] = []
         self._prefill_fns: Dict[Tuple, Any] = {}
-        self._decode_fns: Dict[int, Any] = {}             # verify width K -> fn
+        self._decode_fns: Dict[Tuple[int, int], Any] = {}  # (K, kv_splits) -> fn
         # overlap-probe closures live OUTSIDE _decode_fns: the CI
         # compile-guard lane pins that cache's key set to real traffic
         self._probe_decode_fns: Dict[Tuple[bool, bool], Any] = {}
@@ -558,13 +558,33 @@ class PagedEngine:
             return 2 * len(self._buckets) * len(self._row_buckets)
         return 2 * len(self._buckets)
 
-    def _get_decode(self, K: int = 1):
+    def _kv_splits(self, K: int = 1) -> int:
+        """Split count S for this decode step's flash-decode page walk
+        (split-KV sequence parallelism — kernels/flash_decode.py).
+
+        ``ServingConfig.decode_kv_splits`` 0 = auto: split by
+        ``decode_split_factor`` only when the deepest resident request's walk
+        spans at least ``decode_split_min_pages`` pages (shallow walks gain
+        nothing from the extra reduce step); 1 = sequential; >1 forced.
+        Clamped to the block-table width so every span owns >= 1 page slot.
+        S is STATIC — part of the decode closure's (K, S) compile key."""
+        sv = self.sv
+        s = sv.decode_kv_splits
+        if s == 0:
+            deepest = pages_for(int(self.lengths.max()) + K, self.ps)
+            s = sv.decode_split_factor \
+                if deepest >= sv.decode_split_min_pages else 1
+        return max(1, min(int(s), self.max_blocks))
+
+    def _get_decode(self, K: int = 1, S: int = 1):
         """Jitted decode closure for a K-token window (K=1 plain decode,
-        K=spec_k+1 speculative verify) — one compiled closure per K."""
-        if K not in self._decode_fns:
-            self._decode_fns[K] = self._build_decode_fn(
-                K, overlap=self._decode_overlap, ctx=self._ctx)
-        return self._decode_fns[K]
+        K=spec_k+1 speculative verify) walking the pages in S split-KV
+        spans — one compiled closure per (K, S)."""
+        key = (K, S)
+        if key not in self._decode_fns:
+            self._decode_fns[key] = self._build_decode_fn(
+                K, overlap=self._decode_overlap, ctx=self._ctx, kv_splits=S)
+        return self._decode_fns[key]
 
     def _get_probe_decode(self, overlap: bool, comm: bool = True):
         """Decode closure variants for the overlap-efficiency probe
@@ -576,8 +596,10 @@ class PagedEngine:
         key = (overlap, comm)
         if key not in self._probe_decode_fns:
             ctx = self._ctx if comm else AxisCtx()
+            # probes always walk sequentially (kv_splits=1): the probe
+            # measures overlap efficiency, not split-KV reduce cost
             self._probe_decode_fns[key] = self._build_decode_fn(
-                1, overlap=overlap, ctx=ctx)
+                1, overlap=overlap, ctx=ctx, kv_splits=1)
         return self._probe_decode_fns[key]
 
     def measure_overlap_efficiency(self, iters: int = 10, warmup: int = 3):
@@ -586,7 +608,8 @@ class PagedEngine:
         from repro.obs.overlap_probe import decode_overlap_probe
         return decode_overlap_probe(self, iters=iters, warmup=warmup)
 
-    def _build_decode_fn(self, K: int, overlap: bool, ctx: AxisCtx):
+    def _build_decode_fn(self, K: int, overlap: bool, ctx: AxisCtx,
+                         kv_splits: int = 1):
         cfg = self.cfg
         scratch = self.kv.scratch_page
         ps = self.ps
@@ -605,7 +628,8 @@ class PagedEngine:
                 caches.append(c)
             logits, new_caches = api.decode_step(
                 params, cfg, ctx, toks, tuple(caches), lengths,
-                block_tables=bt, decode_mask=active, overlap_batch=overlap)
+                block_tables=bt, decode_mask=active, overlap_batch=overlap,
+                kv_splits=kv_splits)
             B = toks.shape[0]
             page, off, ok, positions = window_page_coords(
                 lengths, bt, K, ps, scratch=scratch, decode_mask=active)
@@ -994,9 +1018,10 @@ class PagedEngine:
                 drafts[i] = self._drafts[i].draft(self.spec_k)
                 toks[i, 1:] = drafts[i]
         lens = jnp.asarray(self.lengths.astype(np.int32))
+        S = self._kv_splits(K)
         t0 = time.perf_counter()
-        with self._mesh_ctx(), jaxprof.annotate(f"decode/K={K}"):
-            logits, new_kv, new_states = self._get_decode(K)(
+        with self._mesh_ctx(), jaxprof.annotate(f"decode/K={K}/S={S}"):
+            logits, new_kv, new_states = self._get_decode(K, S)(
                 self.params, jnp.asarray(toks), jnp.asarray(bt), lens,
                 self.kv.arrays, self.states, jnp.asarray(mask))
         # fence EVERY output inside the timed region: the logits transfer

@@ -75,8 +75,14 @@ class TokenBudgetScheduler:
         self.waiting.append(rid)
 
     def forget(self, rid: int) -> None:
+        """Drop every trace of ``rid`` — including its waiting-queue entry.
+        A request cancelled BEFORE admission would otherwise linger in
+        ``waiting`` with no ``_arrival``, and the next ``pop_waiting``/
+        ``order`` would KeyError inside ``_key``."""
         self._arrival.pop(rid, None)
         self._priority.pop(rid, None)
+        while rid in self.waiting:
+            self.waiting.remove(rid)
 
     def _key(self, rid: int):
         if self.policy == "priority":
@@ -95,8 +101,11 @@ class TokenBudgetScheduler:
 
     def requeue_front(self, rid: int) -> None:
         """Preempted request: back to waiting, arrival preserved (so FCFS puts
-        it ahead of anything that arrived later)."""
-        self.waiting.append(rid)
+        it ahead of anything that arrived later).  Idempotent — a rid already
+        waiting is NOT enqueued twice (a duplicate entry would survive the
+        single ``waiting.remove`` in ``pop_waiting`` and be admitted again)."""
+        if rid not in self.waiting:
+            self.waiting.append(rid)
 
     # ---- per-step planning -------------------------------------------------
     def grant_prefill(self, prefill_states: Sequence[Tuple[int, int, Tuple[int, ...]]]
@@ -188,7 +197,8 @@ class TokenBudgetScheduler:
     def pick_victim(self, running: Sequence[int], protect: Sequence[int] = ()
                     ) -> Optional[int]:
         """Eviction victim: reverse policy order (lowest priority, youngest)."""
-        cands = [r for r in running if r not in set(protect)]
+        protected = set(protect)              # hoisted: not O(len) per request
+        cands = [r for r in running if r not in protected]
         if not cands:
             return None
         return max(cands, key=self._key)

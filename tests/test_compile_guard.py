@@ -31,7 +31,7 @@ from repro.serving.requests import SamplingParams
 
 
 def _run_trace(lengths, *, grant_bucketing=True, new=3, budget=24,
-               prefill_batching=True):
+               prefill_batching=True, **sv_kwargs):
     cfg = tiny_dense(vocab_size=64)
     iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
     params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
@@ -42,7 +42,8 @@ def _run_trace(lengths, *, grant_bucketing=True, new=3, budget=24,
                                           max_len=160,
                                           prefill_token_budget=budget,
                                           grant_bucketing=grant_bucketing,
-                                          prefill_batching=prefill_batching))
+                                          prefill_batching=prefill_batching,
+                                          **sv_kwargs))
     eng = PagedEngine(config, params)
     rng = np.random.default_rng(0)
     for n in lengths:
@@ -73,11 +74,12 @@ def test_prefill_compiles_bounded_by_buckets():
     for key, fn in eng._prefill_fns.items():
         assert compat.jit_cache_size(fn) == 1, \
             f"prefill closure {key} recompiled"
-    # K=1 decode stays ONE closure compiled once — speculative support must
-    # not widen the plain path's compile footprint
-    assert set(eng._decode_fns) == {1}, \
+    # K=1 sequential decode stays ONE closure compiled once — speculative
+    # and split-KV support must not widen the plain path's compile footprint
+    assert set(eng._decode_fns) == {(1, 1)}, \
         f"unexpected decode closures: {sorted(eng._decode_fns)}"
-    assert compat.jit_cache_size(eng._decode_fns[1]) == 1, "decode recompiled"
+    assert compat.jit_cache_size(eng._decode_fns[(1, 1)]) == 1, \
+        "decode recompiled"
 
 
 def test_unbucketed_engine_reports_no_bound():
@@ -117,9 +119,44 @@ def test_batched_grants_compile_bound():
         assert compat.jit_cache_size(fn) == 1, \
             f"batched prefill closure {key} recompiled"
     # decode stays ONE closure compiled once — packing must not widen it
-    assert set(eng._decode_fns) == {1}, \
+    assert set(eng._decode_fns) == {(1, 1)}, \
         f"unexpected decode closures: {sorted(eng._decode_fns)}"
-    assert compat.jit_cache_size(eng._decode_fns[1]) == 1, "decode recompiled"
+    assert compat.jit_cache_size(eng._decode_fns[(1, 1)]) == 1, \
+        "decode recompiled"
+
+
+def test_decode_closures_keyed_exactly_K_S():
+    """Split-KV traffic compiles decode closures keyed EXACTLY (K, S).
+
+    Forced splits (decode_kv_splits=2) with speculation (spec_k=1, greedy)
+    must produce only (K, 2) keys — K in {1, 2} as speculation engages and
+    falls back — each compiled exactly once.  A traced-vs-static leak of
+    either the verify width or the split count into the closure body would
+    recompile an existing key and trip jit_cache_size."""
+    lengths = (9, 17, 33, 41)
+    eng = _run_trace(lengths, decode_kv_splits=2, spec_k=1)
+    keys = set(eng._decode_fns)
+    assert keys and keys <= {(1, 2), (2, 2)}, \
+        f"unexpected decode closures: {sorted(keys)}"
+    for key, fn in eng._decode_fns.items():
+        assert compat.jit_cache_size(fn) == 1, f"decode closure {key} recompiled"
+
+
+def test_decode_split_auto_threshold_keys():
+    """Auto mode (decode_kv_splits=0): shallow traffic stays sequential
+    ((1, 1) only); traffic past decode_split_min_pages pages compiles the
+    split closure ((1, factor)) — the depth heuristic is part of the key."""
+    shallow = _run_trace((9, 17), decode_kv_splits=0,
+                         decode_split_min_pages=16)
+    assert set(shallow._decode_fns) == {(1, 1)}, \
+        sorted(shallow._decode_fns)
+    # prompt of 120 tokens on 8-token pages = 15 resident pages at first
+    # decode, >= min_pages=4 -> every decode step splits by the factor
+    deep = _run_trace((120,), decode_kv_splits=0, decode_split_min_pages=4,
+                      decode_split_factor=4, budget=64)
+    assert set(deep._decode_fns) == {(1, 4)}, sorted(deep._decode_fns)
+    for key, fn in deep._decode_fns.items():
+        assert compat.jit_cache_size(fn) == 1, f"decode closure {key} recompiled"
 
 
 def test_batch1_engine_keeps_fresh_resumed_bound():

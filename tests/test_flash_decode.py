@@ -209,3 +209,155 @@ def test_verify_layer_matches_dense_cache(K, window):
     assert float(jnp.max(jnp.abs(paged - dense))) < 1e-4
     assert float(jnp.max(jnp.abs(kv_paged[0] - kv_dense[0]))) < 1e-5
     assert float(jnp.max(jnp.abs(kv_paged[1] - kv_dense[1]))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# split-KV (sequence-parallel) mode: kv_splits > 1 partial + reduce
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_decode import NEG_INF               # noqa: E402
+from repro.kernels.ref import paged_decode_split_ref         # noqa: E402
+
+
+@pytest.mark.parametrize("kv_splits", [1, 2, 4])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("K", [1, 2, 4])
+@pytest.mark.parametrize("window", [0, 12])
+def test_flash_decode_split_parity_grid(kv_splits, dtype, tol, K, window):
+    """Split-KV decode matches BOTH the sequential walk (kv_splits=1) and the
+    span-folding oracle, for every (S, dtype, K, window) combination — the
+    reduce step must be invisible to every downstream consumer."""
+    rng = np.random.default_rng(21)
+    ps, hq, hkv, hd = 8, 4, 2, 16
+    lengths = [1, ps - 1, ps + 1, 5 * ps - 3, 3 * ps]
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=32, dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((len(lengths), K, hq, hd)), dtype)
+    out, m, l = flash_decode(q, k_pages, v_pages, bt, lens, window=window,
+                             kv_splits=kv_splits)
+    seq_o, seq_m, seq_l = flash_decode(q, k_pages, v_pages, bt, lens,
+                                       window=window, kv_splits=1)
+    assert out.shape == seq_o.shape
+    assert float(jnp.max(jnp.abs(out - seq_o))) < tol
+    assert float(jnp.max(jnp.abs(l - seq_l))) < tol
+    # the reduced running max is the true global max — merge contract intact
+    assert float(jnp.max(jnp.abs(m - seq_m))) < tol
+    ro, rm, rl = paged_decode_split_ref(q, k_pages, v_pages, bt, lens,
+                                        kv_splits=kv_splits, window=window)
+    assert float(jnp.max(jnp.abs(out - ro))) < tol
+
+
+@pytest.mark.parametrize("kv_splits", [2, 3, 16])
+def test_flash_decode_split_matches_sequential_oracle(kv_splits):
+    """Every split count collapses to the ONE sequential oracle — including
+    S > resident pages, where the surplus spans are empty and must come back
+    as the neutral partial (0, NEG_INF, 0) that vanishes in the reduce."""
+    rng = np.random.default_rng(22)
+    ps, hq, hkv, hd = 8, 4, 4, 16
+    lengths = [3, 11, 24, 17]
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=24, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((len(lengths), hq, hd)), jnp.float32)
+    out, m, l = flash_decode(q, k_pages, v_pages, bt, lens,
+                             kv_splits=kv_splits)
+    ref = paged_decode_ref(q, k_pages, v_pages, bt, lens)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+    assert bool(jnp.all(l[:, :, 0] > 0))
+
+
+def test_flash_decode_split_edge_rows():
+    """Zero-length rows and single-page rows under aggressive splitting:
+    the empty row's reduced state stays exactly (0, NEG_INF, 0)."""
+    rng = np.random.default_rng(23)
+    ps, hq, hkv, hd = 8, 2, 2, 16
+    k_pages, v_pages, bt, lens = _make_paged(rng, [12, 0, 5], ps, hkv, hd,
+                                             num_pages=8, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((3, hq, hd)), jnp.float32)
+    out, m, l = flash_decode(q, k_pages, v_pages, bt, lens, kv_splits=4)
+    ref = paged_decode_ref(q, k_pages, v_pages, bt, lens)
+    assert float(jnp.max(jnp.abs(out[0] - ref[0]))) < 1e-5
+    assert float(jnp.max(jnp.abs(out[2] - ref[2]))) < 1e-5   # single page
+    assert float(jnp.max(jnp.abs(out[1]))) == 0.0            # empty row
+    assert float(l[1].max()) == 0.0
+    assert float(m[1].max()) == float(np.float32(NEG_INF))
+
+    # the merge with a fresh self token still gives the empty row weight 1
+    # on itself — the layer contract is split-count independent
+    v_new = jnp.asarray(rng.standard_normal((3, hq, hd)), jnp.float32)
+    s_new = jnp.zeros((3, hq, 1), jnp.float32)
+    merged = merge_softmax_states(out, m, l, v_new, s_new,
+                                  jnp.ones_like(s_new))
+    assert float(jnp.max(jnp.abs(merged[1] - v_new[1]))) < 1e-6
+
+
+def test_flash_decode_split_boundaries_vs_ref():
+    """Lengths landing exactly ON span boundaries (and one token either
+    side): the span mask must neither drop nor double-count the boundary
+    page."""
+    rng = np.random.default_rng(24)
+    ps, S, hq, hkv, hd = 8, 2, 4, 2, 16
+    # with MB=6 pages and S=2, the span boundary sits at page 3 = token 24
+    lengths = [23, 24, 25, 48]
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=32, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((len(lengths), hq, hd)), jnp.float32)
+    out, _, _ = flash_decode(q, k_pages, v_pages, bt, lens, kv_splits=S)
+    ref = paged_decode_ref(q, k_pages, v_pages, bt, lens)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+
+
+@pytest.mark.parametrize("K,window,kv_splits", [(1, 0, 2), (3, 0, 4),
+                                                (2, 12, 3)])
+def test_split_layer_matches_dense_cache(K, window, kv_splits):
+    """Layer-level: attn_decode_paged_partial with kv_splits > 1 still equals
+    the dense K-token decode over the gathered cache — the reduce step is
+    invisible through the intra-window merge."""
+    rng = np.random.default_rng(26)
+    cfg = tiny_dense(vocab_size=32, sliding_window=window)
+    group = cfg.num_heads // cfg.num_kv_heads
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = 8
+    lengths = [13, 9, 16, 29]
+    B = len(lengths)
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=16, dtype=jnp.float32)
+    p = attn_lib.init_attention(
+        jax.random.PRNGKey(0), cfg,
+        head_layout(cfg.num_heads, cfg.num_kv_heads, 1), dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, K, cfg.d_model)) * 0.2,
+                    jnp.float32)
+
+    split, kv_split = attn_lib.attn_decode_paged_partial(
+        p, x, cfg, group, k_pages=k_pages, v_pages=v_pages,
+        block_tables=bt, lengths=lens, window=window, kv_splits=kv_splits)
+    kd = gather_pages(k_pages[None], bt)[0]
+    vd = gather_pages(v_pages[None], bt)[0]
+    dense, kv_dense = attn_lib.attn_decode_partial(
+        p, x, cfg, group, cache_k=kd, cache_v=vd, lengths=lens,
+        window=window)
+    assert float(jnp.max(jnp.abs(split - dense))) < 1e-4
+    assert float(jnp.max(jnp.abs(kv_split[0] - kv_dense[0]))) < 1e-5
+    assert float(jnp.max(jnp.abs(kv_split[1] - kv_dense[1]))) < 1e-5
+
+
+@pytest.mark.parametrize("kv_splits", [1, 4])
+def test_flash_decode_dead_page_guard_is_byte_identical(kv_splits):
+    """The pl.when guard that skips pages past ceil(L/ps) must be pure
+    compute savings: (alpha=exp(0)=1, p=0) leaves the running state bit-for-
+    bit unchanged, so guarded == unguarded EXACTLY — in both walk modes."""
+    rng = np.random.default_rng(25)
+    ps, hq, hkv, hd = 8, 4, 2, 16
+    lengths = [1, 9, 40, 0]                  # deep tables, shallow lengths
+    k_pages, v_pages, bt, lens = _make_paged(rng, lengths, ps, hkv, hd,
+                                             num_pages=32, dtype=jnp.float32)
+    # widen the tables so every row carries dead trailing pages
+    bt = jnp.pad(bt, ((0, 0), (0, 3)), constant_values=-1)
+    q = jnp.asarray(rng.standard_normal((len(lengths), 2, hq, hd)),
+                    jnp.float32)
+    guarded = flash_decode(q, k_pages, v_pages, bt, lens,
+                           kv_splits=kv_splits, guard_dead_pages=True)
+    unguarded = flash_decode(q, k_pages, v_pages, bt, lens,
+                             kv_splits=kv_splits, guard_dead_pages=False)
+    for g, u in zip(guarded, unguarded):
+        assert bool(jnp.all(g == u)), "guard changed the numerics"

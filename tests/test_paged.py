@@ -143,6 +143,56 @@ def test_scheduler_grant_bucketing_rounds_padded():
     assert g.padded == g.n_tokens == 17
 
 
+def test_scheduler_cancel_while_waiting_forgets_queue_entry():
+    """Regression: ``forget`` on a still-waiting rid must also drop it from
+    the waiting queue — it used to leave the rid behind with no ``_arrival``,
+    so the next ``pop_waiting`` KeyError'd inside ``_key``."""
+    s = TokenBudgetScheduler("fcfs", prefill_token_budget=8)
+    for rid in (1, 2, 3):
+        s.add(rid)
+    s.forget(2)                                   # cancel before admission
+    assert 2 not in s.waiting
+    assert s.pop_waiting() == 1                   # no KeyError
+    assert s.pop_waiting() == 3
+    assert s.pop_waiting() is None
+    # forgetting a never-seen or already-popped rid stays a no-op
+    s.forget(2)
+    s.forget(99)
+
+
+def test_scheduler_requeue_front_is_idempotent():
+    """Regression: double-preemption bookkeeping (or a requeue racing an
+    un-popped rid) must not enqueue a duplicate — a duplicate entry survives
+    the single ``waiting.remove`` in ``pop_waiting`` and would be admitted
+    twice."""
+    s = TokenBudgetScheduler("fcfs", prefill_token_budget=8)
+    s.add(1)
+    s.add(2)
+    rid = s.pop_waiting()
+    assert rid == 1
+    s.requeue_front(1)
+    s.requeue_front(1)                            # double requeue
+    assert s.waiting.count(1) == 1
+    s.requeue_front(2)                            # already waiting, un-popped
+    assert s.waiting.count(2) == 1
+    # arrival preserved: 1 still beats 2
+    assert s.pop_waiting() == 1
+    assert s.pop_waiting() == 2
+    assert s.pop_waiting() is None
+
+
+def test_scheduler_pick_victim_protect_semantics():
+    """pick_victim honours ``protect`` for any iterable (the hoisted-set fix
+    must not change semantics) and still evicts in reverse policy order."""
+    s = TokenBudgetScheduler("fcfs", prefill_token_budget=8)
+    for rid in (1, 2, 3, 4):
+        s.add(rid)
+    assert s.pick_victim([1, 2, 3, 4]) == 4              # youngest
+    assert s.pick_victim([1, 2, 3, 4], protect=(4,)) == 3
+    assert s.pick_victim([1, 2, 3, 4], protect=iter([3, 4])) == 2
+    assert s.pick_victim([1], protect=[1]) is None
+
+
 def test_scheduler_fcfs_fairness_across_steps():
     """Every waiting request is eventually granted (no starvation)."""
     s = TokenBudgetScheduler("fcfs", prefill_token_budget=8)

@@ -1,0 +1,158 @@
+"""Split-KV (sequence-parallel) flash-decode end-to-end through the engine.
+
+The kernel-level parity grid lives in tests/test_flash_decode.py; this file
+proves the serving integration: a PagedEngine running with
+``decode_kv_splits`` S > 1 must emit token streams IDENTICAL to the
+sequential-walk engine (S=1) on mixed traffic — chunked prefill, CoW prefix
+sharing, speculative verify windows, batch-split overlap — because the
+split's partial-reduce is numerically a re-association of the same online
+softmax, well inside fp32 argmax stability for these workloads.
+
+Also pins the auto heuristic (ServingConfig.decode_kv_splits=0): shallow
+traffic never pays the reduce step, deep traffic always splits, and either
+way the closure cache stays keyed exactly (K, S).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+CFG = tiny_dense(vocab_size=64)
+ISO = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(jax.random.PRNGKey(0), CFG, tp=1,
+                           dtype=jnp.float32)
+
+
+def _paged(params, *, kv_splits=1, spec_k=0, budget=16, page_size=8,
+           max_len=160, max_batch=2, min_pages=16, factor=4):
+    config = Config(model=CFG, parallel=ParallelConfig(data=1, model=1),
+                    iso=ISO,
+                    serving=ServingConfig(page_size=page_size,
+                                          max_batch=max_batch,
+                                          max_len=max_len,
+                                          prefill_token_budget=budget,
+                                          spec_k=spec_k,
+                                          decode_kv_splits=kv_splits,
+                                          decode_split_min_pages=min_pages,
+                                          decode_split_factor=factor))
+    return PagedEngine(config, params)
+
+
+def _repetitive(rng, n, period=6):
+    base = rng.integers(2, 64, period).astype(np.int32)
+    return np.tile(base, -(-n // period))[:n]
+
+
+def _mixed_prompts(rng):
+    shared = rng.integers(2, 64, 24).astype(np.int32)
+    return [
+        _repetitive(rng, 30),
+        rng.integers(2, 64, 33).astype(np.int32),
+        np.concatenate([shared, rng.integers(2, 64, 9).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(2, 64, 5).astype(np.int32)]),
+    ]
+
+
+def _run(eng, prompts, new=8):
+    rids = [eng.add_request(Request(
+        prompt=p.copy(),
+        sampling=SamplingParams(max_new_tokens=new, eos_id=-1)))
+        for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids]
+
+
+@pytest.mark.parametrize("kv_splits", [2, 4])
+def test_split_engine_matches_sequential(params, kv_splits):
+    """Forced split-KV decode is token-identical to the sequential walk on
+    mixed traffic (chunked prefill + prefix sharing + batched decode)."""
+    rng = np.random.default_rng(31)
+    prompts = _mixed_prompts(rng)
+    seq = _run(_paged(params, kv_splits=1), prompts)
+    split = _run(_paged(params, kv_splits=kv_splits), prompts)
+    assert split == seq
+    # and the split engine compiled exactly the forced-S closures
+    eng = _paged(params, kv_splits=kv_splits)
+    _run(eng, prompts[:2])
+    assert set(eng._decode_fns) == {(1, kv_splits)}, sorted(eng._decode_fns)
+
+
+@pytest.mark.parametrize("kv_splits", [2, 4])
+def test_split_engine_matches_sequential_with_speculation(params, kv_splits):
+    """Split-KV composes with the K-token speculative verify window: the
+    (K, S) closure reduces every window position's walk and the greedy
+    accept rule sees identical logits."""
+    rng = np.random.default_rng(32)
+    prompts = _mixed_prompts(rng)
+    seq = _run(_paged(params, kv_splits=1, spec_k=2), prompts)
+    split = _run(_paged(params, kv_splits=kv_splits, spec_k=2), prompts)
+    plain = _run(_paged(params, kv_splits=1), prompts)
+    assert split == seq == plain
+
+
+def test_split_auto_heuristic_engages_on_depth(params):
+    """Auto mode: a workload past decode_split_min_pages pages decodes
+    through the split closure and still matches the sequential stream."""
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(2, 64, 120).astype(np.int32),
+               _repetitive(rng, 100)]
+    seq = _run(_paged(params, kv_splits=1, budget=64), prompts)
+    auto = _paged(params, kv_splits=0, min_pages=4, factor=4, budget=64)
+    got = _run(auto, prompts)
+    assert got == seq
+    assert set(auto._decode_fns) == {(1, 4)}, sorted(auto._decode_fns)
+    # shallow traffic under the same auto config stays sequential
+    shallow = _paged(params, kv_splits=0, min_pages=16)
+    _run(shallow, [rng.integers(2, 64, 12).astype(np.int32)])
+    assert set(shallow._decode_fns) == {(1, 1)}, sorted(shallow._decode_fns)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: arbitrary mixed workloads, split on == split off
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(st.integers(min_value=4, max_value=40), min_size=1,
+                    max_size=3),
+           st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def test_random_walk_split_equals_sequential(lengths, seed):
+        """Property: for ANY mixed-length workload, the split-KV paged
+        engine emits token streams identical to the sequential-walk paged
+        engine — the re-run of the PR-4 speculative walk with
+        decode_kv_splits > 1 layered on."""
+        params = _WALK_PARAMS[0]
+        rng = np.random.default_rng(seed)
+        prompts = [_repetitive(rng, n) if i % 2 == 0
+                   else rng.integers(2, 64, n).astype(np.int32)
+                   for i, n in enumerate(lengths)]
+        outs = []
+        for kv_splits in (1, 3):
+            eng = _paged(params, kv_splits=kv_splits, spec_k=2, max_len=80)
+            outs.append(_run(eng, prompts, new=4))
+        assert outs[0] == outs[1]
+
+    # module-scope params reused across hypothesis examples (fixtures and
+    # @given do not compose)
+    _WALK_PARAMS = [api.init_params(jax.random.PRNGKey(0), CFG, tp=1,
+                                    dtype=jnp.float32)]
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_walk_split_equals_sequential():
+        pass
