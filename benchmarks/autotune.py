@@ -1,0 +1,137 @@
+"""Offline autotune entrypoint: profile this machine, emit a cost table.
+
+Runs the three measurement sweeps in ``repro.perf.costmodel`` (alpha-beta
+psum probe, per-bucket prefill timings, per-(K, S) decode-depth timings)
+against a real ``PagedEngine`` built from ``--arch``, and writes the
+versioned per-platform JSON table the serving stack loads through
+``ServingConfig.cost_table``:
+
+    PYTHONPATH=src python -m benchmarks.autotune \
+        --arch qwen3-4b --reduce tiny --out src/repro/perf/tables/cpu_tp1.json
+
+``--smoke`` shrinks every sweep to the CI-sized subset (same schema, fewer
+points) — the ci.yml ``autotune-table`` lane runs exactly:
+
+    python -m benchmarks.autotune --smoke --out cost_table.json --verify
+
+``--verify`` re-serves a mixed-traffic workload (prefix sharing + chunked
+prefill + speculation) twice — static defaults vs the just-emitted table —
+and asserts the token streams are IDENTICAL.  Decisions may differ (that is
+the point); tokens may not, because every decision axis is token-neutral by
+construction (chunk boundaries are exact splits, pack width and split count
+are call-grouping only, skipping speculation is the plain-decode path).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def _build(arch: str, reduce: str, tp: int, spec_k: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import (Config, ISOConfig, ParallelConfig,
+                              ServingConfig, get_model_config)
+    from repro.launch.train import reduce_cfg
+    from repro.models import api
+
+    cfg = get_model_config(arch)
+    if reduce:
+        cfg = reduce_cfg(cfg, reduce)
+    iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=16,
+                    chunk_align=16)
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=tp),
+                    iso=iso,
+                    serving=ServingConfig(page_size=16, max_batch=4,
+                                          max_len=160,
+                                          prefill_token_budget=64,
+                                          spec_k=spec_k))
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=tp,
+                             dtype=jnp.float32)
+    return config, params
+
+
+def _serve_tokens(config, params, cost_model=None):
+    """Mixed traffic (repetitive + random + shared-prefix pair) through a
+    fresh engine; returns (token streams, decision-event count)."""
+    import dataclasses
+
+    from repro.serving import PagedEngine, Request
+    from repro.serving.requests import SamplingParams
+
+    sv = dataclasses.replace(config.serving, cost_model=cost_model)
+    eng = PagedEngine(config, params, serving=sv)
+    rng = np.random.default_rng(11)
+    V = config.model.vocab_size
+    base = rng.integers(2, V, 6).astype(np.int32)
+    shared = rng.integers(2, V, 32).astype(np.int32)
+    prompts = [
+        np.tile(base, 8)[:44],
+        rng.integers(2, V, 57).astype(np.int32),
+        np.concatenate([shared, rng.integers(2, V, 9).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(2, V, 5).astype(np.int32)]),
+    ]
+    rids = [eng.add_request(Request(
+        prompt=p, sampling=SamplingParams(max_new_tokens=8, eos_id=-1)))
+        for p in prompts]
+    outs = eng.run_until_complete()
+    decisions = sum(1 for e in eng.trace.events() if e.kind == "decision")
+    return [outs[r] for r in rids], decisions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--reduce", default="tiny",
+                    help="launch.train.reduce_cfg preset ('' = full size)")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="spec window the decode sweep measures (K=spec_k+1)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweeps (same schema, fewer points)")
+    ap.add_argument("--out", default=None,
+                    help="table path (default: the bundled per-platform "
+                         "location under src/repro/perf/tables/)")
+    ap.add_argument("--verify", action="store_true",
+                    help="assert model-driven serving is token-identical "
+                         "to static defaults with the emitted table")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.perf.costmodel import (CostModel, autotune,
+                                      default_table_path, write_table)
+
+    assert args.tp == 1 or jax.device_count() >= args.tp, \
+        f"--tp {args.tp} needs {args.tp} devices, have {jax.device_count()}"
+    config, params = _build(args.arch, args.reduce, args.tp, args.spec_k)
+    mesh = None
+    if args.tp > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()[:args.tp]).reshape(1, args.tp),
+                    ("data", "model"))
+    table = autotune(config, params, mesh=mesh, smoke=args.smoke,
+                     log=lambda m: print(m, flush=True))
+    out = args.out or default_table_path(table["platform"], args.tp)
+    write_table(table, out)
+    print(f"wrote {out}: {len(table['prefill_us'])} prefill + "
+          f"{len(table['decode_us'])} decode points, "
+          f"alpha={table['alpha_beta']['alpha_s']:.3e}s "
+          f"beta={table['alpha_beta']['beta_s_per_byte']:.3e}s/B")
+
+    if args.verify:
+        static, _ = _serve_tokens(config, params, cost_model=None)
+        modeled, decisions = _serve_tokens(config, params,
+                                           cost_model=CostModel(table))
+        assert modeled == static, \
+            "model-driven serving diverged from static defaults!"
+        print(f"verify OK: token-identical across {len(static)} requests "
+              f"({decisions} model decisions taken)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+"""CI perf-regression gate: BENCH_pr.json vs the committed baseline.
+
+Compares every gated field in ``benchmarks/common.HEADLINE_FIELDS`` (the
+same table ``ci_smoke.py`` lifts the fields with — one schema source of
+truth) against ``benchmarks/BENCH_baseline.json`` and exits non-zero when
+any field regressed past BOTH its tolerances:
+
+  * ``better="higher"`` fields regress downward, ``"lower"`` upward;
+  * a PR value passes when it is within ``rel_tol`` (fraction of baseline)
+    OR ``abs_tol`` of the baseline in the bad direction — CI CPU runners
+    are noisy, so tolerances catch cliffs, not jitter;
+  * ``better=None`` fields are informational: printed, never gated.
+
+Improvements always pass (and are worth folding into the baseline).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --pr BENCH_pr.json [--baseline benchmarks/BENCH_baseline.json]
+
+Updating the baseline (a deliberate act — commit the diff with an
+explanation of what moved and why):
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --pr BENCH_pr.json --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import HEADLINE_FIELDS, write_json
+
+BASELINE_SCHEMA = "bench-baseline-v1"
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_baseline.json")
+
+
+def check_field(field: str, base: float, got: float) -> tuple[bool, str]:
+    """(ok, verdict line) for one gated field."""
+    spec = HEADLINE_FIELDS[field]
+    better = spec["better"]
+    if better is None:
+        return True, f"  info  {field}: {got:g} (baseline {base:g})"
+    delta = got - base
+    bad = -delta if better == "higher" else delta
+    if bad <= 0:
+        tag = "  ok  " if bad == 0 else "  up  "
+        return True, f"{tag}{field}: {got:g} (baseline {base:g})"
+    rel_ok = abs(base) > 0 and bad / abs(base) <= spec.get("rel_tol", 0.0)
+    abs_ok = bad <= spec.get("abs_tol", 0.0)
+    if rel_ok or abs_ok:
+        return True, (f"  tol  {field}: {got:g} vs {base:g} "
+                      f"(within tolerance)")
+    return False, (f"  FAIL {field}: {got:g} vs baseline {base:g} — "
+                   f"regressed {bad:g} (> rel {spec.get('rel_tol', 0)} "
+                   f"and abs {spec.get('abs_tol', 0)})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pr", required=True, help="BENCH_pr.json from ci_smoke")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from --pr instead of checking")
+    args = ap.parse_args(argv)
+
+    with open(args.pr) as f:
+        pr = json.load(f)
+    fields = {k: pr.get(k, spec["default"])
+              for k, spec in HEADLINE_FIELDS.items()}
+
+    if args.update_baseline:
+        write_json({"schema": BASELINE_SCHEMA,
+                    "source_env": pr.get("env", {}),
+                    "fields": fields}, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        for k, v in fields.items():
+            print(f"  {k} = {v:g}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline} — nothing to gate "
+              f"(run --update-baseline to create one)")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != BASELINE_SCHEMA:
+        print(f"FAIL: baseline schema {baseline.get('schema')!r} != "
+              f"{BASELINE_SCHEMA!r}")
+        return 1
+    base_fields = baseline.get("fields", {})
+
+    failures = 0
+    for field in HEADLINE_FIELDS:
+        if field not in base_fields:
+            print(f"  skip {field}: not in baseline")
+            continue
+        ok, line = check_field(field, float(base_fields[field]),
+                               float(fields[field]))
+        print(line)
+        failures += 0 if ok else 1
+    if failures:
+        print(f"\n{failures} field(s) regressed past tolerance. If the "
+              f"change is intentional, update the baseline "
+              f"(--update-baseline) and justify it in the PR.")
+        return 1
+    print("\nperf gate: all fields within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

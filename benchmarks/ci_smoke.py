@@ -43,6 +43,7 @@ def main(argv=None) -> None:
 
     import jax
     from benchmarks import engine_bench
+    from benchmarks.common import lift_headlines, write_json
 
     rows = []
 
@@ -63,35 +64,9 @@ def main(argv=None) -> None:
             with open(path) as f:
                 ledger = json.load(f)
     # headline metrics as first-class fields so the per-push artifact tracks
-    # them without parsing derived strings: speculative accept rate, the
-    # batched-prefill call reduction at 4 packed grants, and the
-    # observability section's latency/occupancy/overlap numbers
-    accepted_per_call = 0.0
-    prefill_call_reduction = 0.0
-    decode_split_speedup = 0.0
-    obs = {"overlap_efficiency": 0.0, "ttft_p50": 0.0, "ttft_p99": 0.0,
-           "pool_occupancy_peak": 0, "obs_overhead_pct": 0.0}
-    for row in rows:
-        if row["name"] == "engine/speculative":
-            for part in row["derived"].split(";"):
-                if part.startswith("accepted_per_call="):
-                    accepted_per_call = float(part.split("=", 1)[1])
-        if row["name"] == "engine/batched_prefill_4":
-            for part in row["derived"].split(";"):
-                if part.startswith("call_reduction="):
-                    prefill_call_reduction = float(part.split("=", 1)[1])
-        if row["name"] == "engine/decode_split_128":
-            # long-context split-KV: modeled critical-path ratio at 128
-            # resident pages (see engine_bench._decode_split_section)
-            for part in row["derived"].split(";"):
-                if part.startswith("split_speedup="):
-                    decode_split_speedup = float(part.split("=", 1)[1])
-        if row["name"] == "engine/observability":
-            for part in row["derived"].split(";"):
-                k, _, v = part.partition("=")
-                if k in obs:
-                    obs[k] = int(v) if k == "pool_occupancy_peak" \
-                        else float(v)
+    # them without parsing derived strings; which row/key feeds each field —
+    # and the tolerances check_regression.py gates them with — live in ONE
+    # place: benchmarks/common.HEADLINE_FIELDS
     doc = {
         "schema": "bench-smoke-v1",
         "env": {"python": platform.python_version(),
@@ -99,15 +74,11 @@ def main(argv=None) -> None:
                 "jax": jax.__version__,
                 "backend": jax.default_backend()},
         "wall_s": round(time.perf_counter() - t0, 2),
-        "accepted_per_call": accepted_per_call,
-        "prefill_call_reduction": prefill_call_reduction,
-        "decode_split_speedup": decode_split_speedup,
-        **obs,
+        **lift_headlines(rows),
         "engine": rows,
         "perf_ledger": ledger,
     }
-    with open(args.out, "w") as f:
-        json.dump(doc, f, indent=1)
+    write_json(doc, args.out)
     print(f"wrote {args.out} ({len(rows)} engine rows, "
           f"{len(ledger)} ledger rows)")
 

@@ -1,7 +1,18 @@
-"""Shared benchmark timing helpers."""
+"""Shared benchmark timing helpers + the BENCH field schema.
+
+``HEADLINE_FIELDS`` is the single source of truth for the headline metrics
+lifted out of engine-bench rows into top-level ``BENCH_pr.json`` fields:
+which row carries each metric, which ``derived`` key holds it, how to cast
+it, which direction is better, and the regression tolerances the CI gate
+(benchmarks/check_regression.py) applies against ``BENCH_baseline.json``.
+``ci_smoke.py`` lifts fields through :func:`lift_headlines`; the gate reads
+the same table — one schema, no drift between writer and checker.
+"""
 from __future__ import annotations
 
+import json
 import time
+from typing import Any, Dict, Sequence
 
 import jax
 
@@ -21,3 +32,86 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# BENCH headline-field schema
+# ---------------------------------------------------------------------------
+# field -> {row: engine-bench row name, key: derived key, cast: float|int,
+#           default, better: "higher"|"lower"|None (None = informational,
+#           never gated), rel_tol/abs_tol: a PR value passes the regression
+#           gate when it is within EITHER tolerance of baseline in the bad
+#           direction (CPU CI runners are noisy; tolerances are deliberately
+#           loose — the gate catches cliffs, not jitter)}
+
+HEADLINE_FIELDS: Dict[str, Dict[str, Any]] = {
+    "accepted_per_call": {
+        "row": "engine/speculative", "key": "accepted_per_call",
+        "cast": float, "default": 0.0, "better": "higher",
+        "rel_tol": 0.15, "abs_tol": 0.25},
+    "prefill_call_reduction": {
+        "row": "engine/batched_prefill_4", "key": "call_reduction",
+        "cast": float, "default": 0.0, "better": "higher",
+        "rel_tol": 0.15, "abs_tol": 0.25},
+    "decode_split_speedup": {
+        "row": "engine/decode_split_128", "key": "split_speedup",
+        "cast": float, "default": 0.0, "better": "higher",
+        "rel_tol": 0.10, "abs_tol": 0.10},
+    "overlap_efficiency": {
+        "row": "engine/observability", "key": "overlap_efficiency",
+        "cast": float, "default": 0.0, "better": "higher",
+        "rel_tol": 0.50, "abs_tol": 0.25},
+    "obs_overhead_pct": {
+        "row": "engine/observability", "key": "obs_overhead_pct",
+        "cast": float, "default": 0.0, "better": "lower",
+        "rel_tol": 1.0, "abs_tol": 15.0},
+    # informational (better=None): latency/occupancy depend on runner load;
+    # recorded per push for the trajectory, never gated
+    "ttft_p50": {
+        "row": "engine/observability", "key": "ttft_p50",
+        "cast": float, "default": 0.0, "better": None},
+    "ttft_p99": {
+        "row": "engine/observability", "key": "ttft_p99",
+        "cast": float, "default": 0.0, "better": None},
+    "pool_occupancy_peak": {
+        "row": "engine/observability", "key": "pool_occupancy_peak",
+        "cast": int, "default": 0, "better": None},
+}
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    """``"a=1;b=2"`` -> ``{"a": "1", "b": "2"}`` (the engine-bench ``derived``
+    column convention; parts without ``=`` are skipped)."""
+    out: Dict[str, str] = {}
+    for part in derived.split(";"):
+        k, eq, v = part.partition("=")
+        if eq:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def lift_headlines(rows: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Lift every ``HEADLINE_FIELDS`` metric out of engine-bench rows
+    (``{"name", "us_per_call", "derived"}``) into a flat field dict.
+    Missing rows/keys yield the field's default — a bench subset run still
+    produces a schema-complete document."""
+    by_name = {row["name"]: parse_derived(row.get("derived", ""))
+               for row in rows}
+    out: Dict[str, Any] = {}
+    for field, spec in HEADLINE_FIELDS.items():
+        raw = by_name.get(spec["row"], {}).get(spec["key"])
+        try:
+            out[field] = spec["cast"](raw) if raw is not None \
+                else spec["default"]
+        except ValueError:
+            out[field] = spec["default"]
+    return out
+
+
+def write_json(doc: Any, path: str) -> str:
+    """The one JSON writer every bench artifact goes through (stable
+    formatting → clean diffs for committed baselines)."""
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path

@@ -8,7 +8,6 @@ CI runs the ``--smoke`` subset (one ledger, two variants) and ``--json`` dumps
 the rows for the bench-smoke artifact (benchmarks/ci_smoke.py).
 """
 import argparse
-import json
 import os
 
 os.environ.setdefault("XLA_FLAGS",
@@ -73,8 +72,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     rows = run_ledgers(SMOKE_LEDGERS if args.smoke else LEDGERS)
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(rows, f, indent=1)
+        from benchmarks.common import write_json
+        write_json(rows, args.json)
 
 
 if __name__ == "__main__":

@@ -231,6 +231,19 @@ class ServingConfig:
     # exportable as a Chrome/Perfetto trace — docs/observability.md)
     observability: bool = True
     trace_events: int = 65536        # trace ring capacity (oldest dropped)
+    # measured cost model (perf/costmodel.py): a profiled alpha-beta +
+    # kernel-timing table that lets the engine/scheduler CHOOSE split counts,
+    # chunk sizes, pack widths and the spec gate instead of obeying the
+    # static defaults above.  ``cost_table`` is "" (off), "auto" (the bundled
+    # per-platform table under perf/tables/) or an explicit path; any load
+    # failure — missing file, malformed table, wrong platform/mesh — falls
+    # back to the static defaults with one ``warning`` trace event.
+    # ``cost_model`` injects an already-built CostModel directly (tests,
+    # autotune --verify); excluded from hash/eq so Config stays usable as a
+    # jit static arg.
+    cost_table: str = ""
+    cost_model: Optional[object] = field(default=None, compare=False,
+                                         repr=False, hash=False)
 
 
 @dataclass(frozen=True)

@@ -92,6 +92,19 @@ def main(argv=None) -> int:
                          "self-drafted window per decode step (greedy only; "
                          "paged engine runs it through the flash-decode "
                          "kernel, dense engine through the padded cache)")
+    ap.add_argument("--cost-table", default="", metavar="PATH|auto",
+                    help="measured cost model (perf/costmodel.py): 'auto' "
+                         "loads the bundled per-platform table under "
+                         "src/repro/perf/tables/, a path loads that table; "
+                         "the engine/scheduler then CHOOSE split counts, "
+                         "chunk sizes, pack widths and the spec gate from "
+                         "measurements (any load failure falls back to "
+                         "static defaults with one warning trace event)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="before serving, profile this machine (smoke "
+                         "sweeps) and serve with the resulting cost model "
+                         "(ignores --cost-table); write a persistent table "
+                         "with benchmarks/autotune.py instead")
     ap.add_argument("--trace-out", default=None, metavar="trace.json",
                     help="export the engine's structured trace as Chrome-"
                          "trace JSON (open at https://ui.perfetto.dev)")
@@ -110,6 +123,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.probe_overlap and not args.paged:
         ap.error("--probe-overlap requires --paged")
+    if (args.autotune or args.cost_table) and not args.paged:
+        ap.error("--autotune/--cost-table require --paged (the dense Engine "
+                 "has no cost-model decision points)")
     if args.spec_k and args.temperature > 0:
         ap.error("--spec-k is greedy-only (needs --temperature 0)")
 
@@ -128,7 +144,9 @@ def main(argv=None) -> int:
                             scheduler_policy=args.policy,
                             prefix_sharing=not args.no_prefix_sharing,
                             prefill_batching=not args.no_batched_prefill,
-                            spec_k=args.spec_k)
+                            spec_k=args.spec_k,
+                            cost_table="" if args.autotune
+                            else args.cost_table)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
                     serving=serving)
@@ -139,7 +157,23 @@ def main(argv=None) -> int:
         if args.tp > 1:
             from repro.launch.mesh import make_mesh
             mesh = make_mesh(config.parallel)
+        if args.autotune:
+            # in-process profile of THIS machine/mesh (smoke sweeps), then
+            # serve with the resulting model injected
+            import dataclasses
+
+            from repro.perf.costmodel import CostModel, autotune
+            print("[autotune] profiling (smoke sweeps)...")
+            table = autotune(config, params, mesh=mesh, smoke=True,
+                             log=lambda msg: print(f"[autotune] {msg}"))
+            config = config.replace(serving=dataclasses.replace(
+                serving, cost_model=CostModel(table)))
         eng = PagedEngine(config, params, mesh=mesh)
+        if eng.cost_model is not None:
+            print(f"[costmodel] active: platform={eng.cost_model.platform} "
+                  f"tp={eng.cost_model.tp} "
+                  f"alpha={eng.cost_model.alpha_s:.3e}s "
+                  f"beta={eng.cost_model.beta_s_per_byte:.3e}s/B")
     else:
         eng = Engine(config, params, mesh=None, max_batch=args.max_batch,
                      max_len=max_len, bucket=32, spec_k=args.spec_k)
@@ -190,6 +224,12 @@ def main(argv=None) -> int:
         print(f"sharing: shared_tokens={m['prefix_shared_tokens']} "
               f"cow_copies={m['cow_copies']} "
               f"peak_pages={m['peak_used_pages']}")
+        if args.autotune or args.cost_table:
+            ev = eng.trace.events()
+            dec = sum(1 for e in ev if e.kind == "decision")
+            warn = sum(1 for e in ev if e.kind == "warning")
+            print(f"costmodel: decisions={dec} warnings={warn} "
+                  f"(see --trace-out for per-decision detail)")
         if args.spec_k:
             print(f"speculative: spec_k={args.spec_k} "
                   f"verify_calls={m['spec_calls']} "

@@ -24,6 +24,19 @@ Event vocabulary (payload keys in parentheses; -1 rid/slot = not applicable):
               ``evict``   ()                            preemption victim
               ``finish``  ()                            request completed
               ``pool``    (used, free, frag)            per-step occupancy
+  cost model  ``decision`` (point, chosen, static, ...) model-driven choice
+              ``warning``  (what, reason, path)         degradation notice
+
+``decision`` records every choice the measured cost model
+(perf/costmodel.py) made instead of a static default — ``point`` is one of
+``kv_splits``/``grant_cap``/``pack_rows``/``spec_gate``, ``chosen`` the
+model's answer, ``static`` what the constant would have done, plus the
+decision's inputs (depth, k, padded, expected_accept).  ``warning`` is
+emitted exactly once per failed cost-table load (missing / malformed /
+platform-mismatch) before falling back to static defaults.  Both are
+bookkeeping-neutral: ``replay.replay_counters`` ignores kinds outside its
+counter vocabulary, and the Chrome-trace exporter renders any unknown kind
+as an instant.
 
 ``replay.replay_counters`` reconstructs the engine's counters from exactly
 this vocabulary — the conservation tests pin that the narration is complete.

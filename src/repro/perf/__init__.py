@@ -1,3 +1,9 @@
 from repro.perf.model import (HW, HW_PROFILES, layer_costs,  # noqa: F401
                               simulate_pipeline, simulate_iso_fractions,
                               prefill_time, speedup_table)
+from repro.perf.costmodel import (CostModel, autotune,  # noqa: F401
+                                  default_table_path, fit_linear,
+                                  load_cost_model, measure_alpha_beta,
+                                  measure_decode_depths,
+                                  measure_prefill_buckets, validate_table,
+                                  write_table)

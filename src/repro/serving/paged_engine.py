@@ -116,6 +116,19 @@ class PagedEngine:
         self.registry.gauge("pool_occupancy")
         self.registry.gauge("free_list_fragmentation")
 
+        # measured cost model (perf/costmodel.py): an injected CostModel, or
+        # one loaded from ``cost_table`` ("" = off, "auto" = the bundled
+        # per-platform table, else a path).  Load failures — missing file,
+        # malformed table, wrong platform/mesh — emit ONE warning trace event
+        # and leave the model None: every decision below then uses the
+        # static-default path unchanged.
+        self.cost_model = sv.cost_model
+        if self.cost_model is None and sv.cost_table:
+            from repro.perf.costmodel import load_cost_model
+            self.cost_model = load_cost_model(
+                sv.cost_table, platform=jax.default_backend(), tp=self.tp,
+                trace=self.trace)
+
         self.alloc = PageAllocator(num_pages, self.ps, trace=self.trace)
         self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=self.tp,
                                dtype=cache_dtype)
@@ -137,7 +150,8 @@ class PagedEngine:
         self.scheduler = TokenBudgetScheduler(
             policy=sv.scheduler_policy,
             prefill_token_budget=sv.prefill_token_budget,
-            grant_buckets=self._buckets, trace=self.trace)
+            grant_buckets=self._buckets, trace=self.trace,
+            cost_model=self.cost_model)
         # batched multi-request prefill grants: pack same-padded-length grants
         # into ONE forward call per tick (per-row pos_offset/prefix_len/
         # valid_len threaded through StageCtx into the paged prefill kernel).
@@ -562,18 +576,34 @@ class PagedEngine:
         """Split count S for this decode step's flash-decode page walk
         (split-KV sequence parallelism — kernels/flash_decode.py).
 
-        ``ServingConfig.decode_kv_splits`` 0 = auto: split by
-        ``decode_split_factor`` only when the deepest resident request's walk
-        spans at least ``decode_split_min_pages`` pages (shallow walks gain
-        nothing from the extra reduce step); 1 = sequential; >1 forced.
-        Clamped to the block-table width so every span owns >= 1 page slot.
-        S is STATIC — part of the decode closure's (K, S) compile key."""
+        ``ServingConfig.decode_kv_splits`` 0 = auto: with a cost model
+        loaded, S is the split count with the best MEASURED decode time at
+        the deepest resident request's page depth (perf/costmodel.py —
+        logged as a ``decision`` trace event with the static answer it
+        replaced); without one, the static heuristic splits by
+        ``decode_split_factor`` only when the walk spans at least
+        ``decode_split_min_pages`` pages (shallow walks gain nothing from
+        the extra reduce step).  1 = sequential; >1 forced — an explicit
+        setting always beats the model.  Clamped to the block-table width so
+        every span owns >= 1 page slot.  S is STATIC — part of the decode
+        closure's (K, S) compile key.  Split count never changes tokens
+        (split == sequential proven by tests/test_split_kv.py), so a modeled
+        S may differ from the static one without a differential risk."""
         sv = self.sv
         s = sv.decode_kv_splits
         if s == 0:
             deepest = pages_for(int(self.lengths.max()) + K, self.ps)
-            s = sv.decode_split_factor \
+            static = sv.decode_split_factor \
                 if deepest >= sv.decode_split_min_pages else 1
+            s = static
+            if self.cost_model is not None:
+                chosen = self.cost_model.decode_splits(
+                    deepest, K, max_splits=self.max_blocks)
+                if chosen is not None:
+                    s = chosen
+                    self.trace.emit("decision", point="kv_splits",
+                                    chosen=int(chosen), static=int(static),
+                                    depth=int(deepest), k=int(K))
         return max(1, min(int(s), self.max_blocks))
 
     def _get_decode(self, K: int = 1, S: int = 1):
@@ -955,14 +985,36 @@ class PagedEngine:
         for padded, group in by_len.items():
             self._run_pack(group, padded, events)
 
+    # accept-length samples the spec gate needs before trusting the
+    # histogram mean over the static default (tests monkeypatch this)
+    SPEC_GATE_MIN_SAMPLES = 8
+
     def _spec_window(self, active) -> int:
         """Verify-window width for this decode step: spec_k+1 when every
         active request can speculate (greedy sampling, drafted, and room for
         the whole window below max_len), else 1 (plain decode).  One batched
-        call either way — mixed eligibility falls back for the step."""
+        call either way — mixed eligibility falls back for the step.
+
+        With a cost model, the gate also weighs the MEASURED K-token verify
+        cost against the plain-decode steps it would replace: once the
+        ``accept_len`` histogram has enough samples, speculation is skipped
+        (K=1) whenever ``verify_cost >= expected_accept * plain_cost``
+        (perf/costmodel.CostModel.spec_worth).  Skipping speculation is
+        token-neutral — greedy verify == plain decode is the PR 4
+        differential invariant — so the gate can only trade speed."""
         if not self.spec_k:
             return 1
         K = self.spec_k + 1
+        if self.cost_model is not None:
+            hist = self.registry.histogram("accept_len")
+            if hist.n >= self.SPEC_GATE_MIN_SAMPLES:
+                deepest = pages_for(int(self.lengths.max()) + K, self.ps)
+                worth = self.cost_model.spec_worth(K, deepest, hist.mean)
+                if worth is False:
+                    self.trace.emit("decision", point="spec_gate", chosen=1,
+                                    static=K,
+                                    expected_accept=float(hist.mean))
+                    return 1
         need = 0
         for st in active:
             L = int(self.lengths[st.slot])

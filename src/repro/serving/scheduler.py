@@ -50,7 +50,8 @@ class TokenBudgetScheduler:
     are testable without a model."""
 
     def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512,
-                 grant_buckets: Optional[Tuple[int, ...]] = None, trace=None):
+                 grant_buckets: Optional[Tuple[int, ...]] = None, trace=None,
+                 cost_model=None):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown scheduler policy {policy!r}")
         self.policy = policy
@@ -61,6 +62,20 @@ class TokenBudgetScheduler:
         # up to a bucket so the engine's compiled-prefill count stays
         # O(#buckets).  None = no bucketing (padded == n_tokens).
         self.grant_buckets = tuple(grant_buckets) if grant_buckets else None
+        # measured cost model (perf/costmodel.py): with a table, the chunk
+        # cap is the bucket with the best measured time-per-token (grants
+        # past it buy no amortisation — the remainder resumes next step, an
+        # exact split, so tokens cannot change) and pack widths are capped at
+        # the best measured time-per-grant row count.  Both are computed from
+        # the TABLE ONLY — no clocks — so the decision sequence is a pure
+        # function of traffic (tests/test_costmodel.py pins determinism).
+        self.cost_model = cost_model
+        self._grant_cap: Optional[int] = None
+        if cost_model is not None:
+            cap = cost_model.grant_cap(self.grant_buckets)
+            if cap is not None:
+                self._grant_cap = max(1, int(cap))
+        self._pack_caps: Dict[int, int] = {}  # padded len -> modeled rows
         self._arrival: Dict[int, int] = {}
         self._priority: Dict[int, int] = {}
         self._clock = 0
@@ -145,6 +160,13 @@ class TokenBudgetScheduler:
                 prev = e
             if take == 0:
                 continue                      # budget exhausted for non-head
+            if self._grant_cap is not None and take > self._grant_cap:
+                # modeled chunk cap: the grant's tail resumes next step (an
+                # exact chunk split — the engine prefill takes any offset)
+                if self.trace is not None:
+                    self.trace.emit("decision", rid=rid, point="grant_cap",
+                                    chosen=self._grant_cap, static=take)
+                take = self._grant_cap
             remaining = max(0, remaining - take)
             padded = take if self.grant_buckets is None else \
                 round_to_bucket(take, self.grant_buckets)
@@ -181,8 +203,9 @@ class TokenBudgetScheduler:
         packs: List[List[PrefillGrant]] = []
         open_by_len: Dict[int, int] = {}      # padded length -> pack index
         for g in ordered:
+            limit = self._pack_limit(g.padded, max_rows)
             idx = open_by_len.get(g.padded)
-            if idx is None or len(packs[idx]) >= max_rows:
+            if idx is None or len(packs[idx]) >= limit:
                 open_by_len[g.padded] = len(packs)
                 packs.append([g])
             else:
@@ -193,6 +216,25 @@ class TokenBudgetScheduler:
                     self.trace.emit("pack", rid=pack[0].rid,
                                     rows=len(pack), padded=pack[0].padded)
         return packs
+
+    def _pack_limit(self, padded: int, max_rows: int) -> int:
+        """Row cap for packs of ``padded``-token grants: the measured row
+        bucket with the best time-per-grant when a cost model is loaded
+        (memoised per padded length; the modeled answer never changes within
+        a run), else ``max_rows``.  Packing only changes CALL GROUPING —
+        packed grants are byte-identical to batch-1 (PR 5 differential) — so
+        a modeled cap can shift performance but never tokens."""
+        if self.cost_model is None:
+            return max_rows
+        cap = self._pack_caps.get(padded)
+        if cap is None:
+            modeled = self.cost_model.pack_rows(padded)
+            cap = max_rows if modeled is None else max(1, int(modeled))
+            self._pack_caps[padded] = cap
+            if self.trace is not None and cap < max_rows:
+                self.trace.emit("decision", point="pack_rows", chosen=cap,
+                                static=max_rows, padded=padded)
+        return min(cap, max_rows)
 
     def pick_victim(self, running: Sequence[int], protect: Sequence[int] = ()
                     ) -> Optional[int]:

@@ -1,0 +1,177 @@
+"""Perf-regression gate (benchmarks/check_regression.py) and the shared
+headline-field schema (benchmarks/common.HEADLINE_FIELDS).
+
+The gate is CI's only defence against silent perf cliffs, so its compare
+logic is pinned here: improvements always pass, bad-direction deltas pass
+within EITHER tolerance (rel OR abs — CPU runners are noisy), informational
+fields never gate, and a regression past both tolerances fails the run.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_regression import (BASELINE_SCHEMA, check_field,
+                                         main as gate_main)
+from benchmarks.common import (HEADLINE_FIELDS, lift_headlines,
+                               parse_derived, write_json)
+
+
+# ---------------------------------------------------------------------------
+# common.py: the single source of truth ci_smoke + the gate both read
+# ---------------------------------------------------------------------------
+
+def test_headline_schema_is_well_formed():
+    assert HEADLINE_FIELDS, "schema must not be empty"
+    for field, spec in HEADLINE_FIELDS.items():
+        assert spec["better"] in ("higher", "lower", None), field
+        assert "row" in spec and "key" in spec, field
+        if spec["better"] is not None:
+            assert spec.get("rel_tol", 0) > 0 or spec.get("abs_tol", 0) > 0, \
+                f"{field}: gated field needs at least one tolerance"
+
+
+def test_parse_derived():
+    assert parse_derived("a=1.5;b=2;note=fast") == {
+        "a": "1.5", "b": "2", "note": "fast"}
+    assert parse_derived("no-equals-sign") == {}
+    assert parse_derived("") == {}
+
+
+def test_lift_headlines_pulls_fields_from_rows():
+    rows = [
+        {"name": "engine/speculative", "us_per_call": 10.0,
+         "derived": "accepted_per_call=3.2"},
+        {"name": "engine/decode_split_128", "us_per_call": 20.0,
+         "derived": "split_speedup=1.4;splits=4"},
+        {"name": "engine/observability", "us_per_call": 5.0,
+         "derived": "pool_occupancy_peak=12;ttft_p50=not-a-number"},
+    ]
+    out = lift_headlines(rows)
+    assert out["accepted_per_call"] == 3.2
+    assert out["decode_split_speedup"] == 1.4
+    assert out["pool_occupancy_peak"] == 12      # int cast
+    # unparsable value or absent row -> schema default, never an exception
+    assert out["ttft_p50"] == HEADLINE_FIELDS["ttft_p50"]["default"]
+    assert out["overlap_efficiency"] == \
+        HEADLINE_FIELDS["overlap_efficiency"]["default"]
+
+
+# ---------------------------------------------------------------------------
+# check_field: the compare logic, direction by direction
+# ---------------------------------------------------------------------------
+
+def _spec_for(better, rel=0.10, abs_=0.10):
+    """Pick a real schema field with the wanted direction so the test
+    exercises the production table, not a synthetic one."""
+    for field, spec in HEADLINE_FIELDS.items():
+        if spec["better"] == better:
+            return field, spec
+    pytest.skip(f"no field with better={better!r}")
+
+
+def test_higher_is_better_directions():
+    field, spec = _spec_for("higher")
+    ok, _ = check_field(field, 2.0, 2.0)        # equal
+    assert ok
+    ok, _ = check_field(field, 2.0, 3.0)        # improvement
+    assert ok
+    # within rel tolerance of the bad direction
+    ok, _ = check_field(field, 2.0, 2.0 * (1 - spec["rel_tol"] * 0.5))
+    assert ok
+    # past BOTH tolerances
+    bad = 2.0 - max(2.0 * spec["rel_tol"], spec["abs_tol"]) * 2
+    ok, line = check_field(field, 2.0, bad)
+    assert not ok and "FAIL" in line
+
+
+def test_lower_is_better_directions():
+    field, spec = _spec_for("lower")
+    ok, _ = check_field(field, 5.0, 4.0)        # improvement (down)
+    assert ok
+    ok, _ = check_field(field, 5.0, 5.0 + spec["abs_tol"] * 0.5)
+    assert ok
+    bad = 5.0 + max(5.0 * spec["rel_tol"], spec["abs_tol"]) * 2
+    ok, line = check_field(field, 5.0, bad)
+    assert not ok and "FAIL" in line
+
+
+def test_informational_fields_never_gate():
+    field, _ = _spec_for(None)
+    for got in (-100.0, 0.0, 100.0):
+        ok, line = check_field(field, 1.0, got)
+        assert ok and "info" in line
+
+
+def test_abs_tolerance_rescues_tiny_baselines():
+    # rel_tol of a near-zero baseline is meaningless; abs_tol must carry it
+    field, spec = _spec_for("higher")
+    if spec.get("abs_tol", 0) <= 0:
+        pytest.skip("field has no abs tolerance")
+    ok, _ = check_field(field, 0.0, -spec["abs_tol"] * 0.5)
+    assert ok
+
+
+# ---------------------------------------------------------------------------
+# main(): end-to-end through temp files
+# ---------------------------------------------------------------------------
+
+def _bench_doc():
+    return {f: spec["default"] + (1.0 if spec["better"] else 0.0)
+            for f, spec in HEADLINE_FIELDS.items()}
+
+
+def test_gate_roundtrip_update_then_pass(tmp_path, capsys):
+    pr = tmp_path / "BENCH_pr.json"
+    base = tmp_path / "baseline.json"
+    write_json(_bench_doc(), str(pr))
+    assert gate_main(["--pr", str(pr), "--baseline", str(base),
+                      "--update-baseline"]) == 0
+    doc = json.loads(base.read_text())
+    assert doc["schema"] == BASELINE_SCHEMA
+    assert set(doc["fields"]) == set(HEADLINE_FIELDS)
+    # identical PR vs its own baseline: all ok
+    assert gate_main(["--pr", str(pr), "--baseline", str(base)]) == 0
+    assert "within tolerance" in capsys.readouterr().out
+
+
+def test_gate_fails_on_regression(tmp_path, capsys):
+    field, spec = _spec_for("higher")
+    base_doc = _bench_doc()
+    pr_doc = dict(base_doc)
+    pr_doc[field] = base_doc[field] - max(
+        abs(base_doc[field]) * spec["rel_tol"], spec["abs_tol"]) * 3
+    pr = tmp_path / "BENCH_pr.json"
+    base = tmp_path / "baseline.json"
+    write_json(pr_doc, str(pr))
+    write_json({"schema": BASELINE_SCHEMA, "source_env": {},
+                "fields": base_doc}, str(base))
+    assert gate_main(["--pr", str(pr), "--baseline", str(base)]) == 1
+    assert field in capsys.readouterr().out
+
+
+def test_gate_passes_without_baseline(tmp_path, capsys):
+    pr = tmp_path / "BENCH_pr.json"
+    write_json(_bench_doc(), str(pr))
+    assert gate_main(["--pr", str(pr),
+                      "--baseline", str(tmp_path / "missing.json")]) == 0
+    assert "no baseline" in capsys.readouterr().out
+
+
+def test_gate_rejects_wrong_baseline_schema(tmp_path):
+    pr = tmp_path / "BENCH_pr.json"
+    base = tmp_path / "baseline.json"
+    write_json(_bench_doc(), str(pr))
+    write_json({"schema": "bench-baseline-v999", "fields": {}}, str(base))
+    assert gate_main(["--pr", str(pr), "--baseline", str(base)]) == 1
+
+
+def test_committed_baseline_is_loadable():
+    """The repo's own baseline must stay schema-valid — the bench-smoke CI
+    lane gates every PR against it."""
+    from benchmarks.check_regression import DEFAULT_BASELINE
+    with open(DEFAULT_BASELINE) as f:
+        doc = json.load(f)
+    assert doc["schema"] == BASELINE_SCHEMA
+    for field in HEADLINE_FIELDS:
+        assert field in doc["fields"], f"baseline missing {field}"
+        float(doc["fields"][field])

@@ -1,0 +1,455 @@
+"""Measured cost model (perf/costmodel.py): fit, decisions, fallback,
+determinism, and the engine-level differential.
+
+The load-bearing invariants:
+
+  * every decision axis is TOKEN-NEUTRAL — chunk caps are exact chunk
+    splits, pack width is call grouping, split count is a numerics-stable
+    re-association, skipping speculation is the plain-decode path — so a
+    model-driven engine must emit streams identical to the static-default
+    engine on ANY traffic (the differential here runs sharing + preemption
+    + spec_k=2 + forced splits);
+  * graceful degradation — missing / malformed / wrong-platform tables fall
+    back to static defaults with exactly ONE warning trace event;
+  * determinism — decisions are pure table lookups (no clocks), so an
+    identical table + traffic yields an identical decision sequence.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.perf.costmodel import (SCHEMA, CostModel, fit_linear,
+                                  load_cost_model, measure_alpha_beta,
+                                  validate_table)
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+CFG = tiny_dense(vocab_size=64)
+ISO = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(jax.random.PRNGKey(0), CFG, tp=1,
+                           dtype=jnp.float32)
+
+
+def _table(*, platform="cpu", tp=1, prefill=None, decode=None,
+           alpha=1e-6, beta=1e-10):
+    """Hand-built schema-valid table with controllable decision surfaces."""
+    return {
+        "schema": SCHEMA, "version": 1, "platform": platform,
+        "mesh": {"tp": tp}, "model": "t-dense", "page_size": 8,
+        "alpha_beta": {"alpha_s": alpha, "beta_s_per_byte": beta, "r2": 1.0},
+        "prefill_us": prefill if prefill is not None
+        else {"16x1": 100.0, "32x1": 150.0, "64x1": 260.0},
+        "decode_us": decode if decode is not None
+        else {"1/1/2": 50.0, "1/1/8": 90.0},
+    }
+
+
+def _paged(params, *, cost_model=None, cost_table="", spec_k=0, num_pages=0,
+           budget=16, max_batch=2, kv_splits=0):
+    config = Config(model=CFG, parallel=ParallelConfig(data=1, model=1),
+                    iso=ISO,
+                    serving=ServingConfig(page_size=8, max_batch=max_batch,
+                                          max_len=160, num_pages=num_pages,
+                                          prefill_token_budget=budget,
+                                          spec_k=spec_k,
+                                          decode_kv_splits=kv_splits,
+                                          cost_model=cost_model,
+                                          cost_table=cost_table))
+    return PagedEngine(config, params)
+
+
+def _repetitive(rng, n, period=6):
+    base = rng.integers(2, 64, period).astype(np.int32)
+    return np.tile(base, -(-n // period))[:n]
+
+
+def _mixed_prompts(rng):
+    shared = rng.integers(2, 64, 24).astype(np.int32)
+    return [
+        _repetitive(rng, 30),
+        rng.integers(2, 64, 33).astype(np.int32),
+        np.concatenate([shared, rng.integers(2, 64, 9).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(2, 64, 5).astype(np.int32)]),
+    ]
+
+
+def _run(eng, prompts, new=8):
+    rids = [eng.add_request(Request(
+        prompt=p.copy(),
+        sampling=SamplingParams(max_new_tokens=new, eos_id=-1)))
+        for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# fit + measurement primitives
+# ---------------------------------------------------------------------------
+
+def test_fit_linear_recovers_synthetic_line():
+    alpha, beta = 3e-6, 2e-10
+    xs = [1024, 8192, 65536, 1 << 20]
+    alpha_f, beta_f, r2 = fit_linear([(x, alpha + beta * x) for x in xs])
+    assert abs(alpha_f - alpha) < 1e-9
+    assert abs(beta_f - beta) / beta < 1e-6
+    assert r2 > 0.999
+
+
+def test_fit_linear_degenerate_inputs():
+    a, b, r2 = fit_linear([(100.0, 5.0)])
+    assert (a, b) == (5.0, 0.0) and r2 == 1.0
+    a, b, _ = fit_linear([(100.0, 5.0), (100.0, 7.0)])  # all-equal x
+    assert b == 0.0 and a == 6.0
+    # negative intercept from noise clamps to zero, never a negative latency
+    a, _, _ = fit_linear([(10.0, 0.1), (20.0, 30.0)])
+    assert a >= 0.0
+
+
+def test_measure_alpha_beta_single_device():
+    ab = measure_alpha_beta(sizes=(1024, 65536), iters=2, warmup=1)
+    assert ab["collective"] == "local"
+    assert np.isfinite(ab["alpha_s"]) and ab["alpha_s"] >= 0
+    assert np.isfinite(ab["beta_s_per_byte"]) and ab["beta_s_per_byte"] >= 0
+    assert len(ab["samples"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# table schema
+# ---------------------------------------------------------------------------
+
+def test_validate_table_accepts_good_and_names_problems():
+    assert validate_table(_table()) == []
+    assert validate_table([]) == ["table is not a JSON object"]
+    bad = _table()
+    bad["schema"] = "nope"
+    assert any("schema" in p for p in validate_table(bad))
+    bad = _table()
+    bad["alpha_beta"]["alpha_s"] = float("nan")
+    assert any("alpha_s" in p for p in validate_table(bad))
+    bad = _table(decode={"1/1": 50.0})            # wrong key arity
+    assert any("malformed key" in p for p in validate_table(bad))
+    bad = _table(prefill={"16x1": -1.0})
+    assert any("timing" in p for p in validate_table(bad))
+    bad = _table()
+    del bad["mesh"]
+    assert any("mesh" in p for p in validate_table(bad))
+
+
+# ---------------------------------------------------------------------------
+# CostModel decisions from synthetic tables
+# ---------------------------------------------------------------------------
+
+def test_decode_splits_picks_measured_argmin():
+    cm = CostModel(_table(decode={
+        "1/1/4": 100.0, "1/2/4": 60.0, "1/4/4": 80.0,
+        "1/1/16": 400.0, "1/2/16": 390.0, "1/4/16": 200.0}))
+    assert cm.decode_splits(4, K=1) == 2
+    assert cm.decode_splits(16, K=1) == 4
+    # interpolated depth between measured points still decides
+    assert cm.decode_splits(8, K=1) in (2, 4)
+    # no data for this K -> None (caller falls back to the static heuristic)
+    assert cm.decode_splits(8, K=3) is None
+    # a span can never exceed the page walk
+    assert cm.decode_splits(1, K=1) == 1
+
+
+def test_decode_splits_tie_breaks_smaller_and_respects_cap():
+    cm = CostModel(_table(decode={"1/1/8": 100.0, "1/2/8": 100.0,
+                                  "1/4/8": 50.0}))
+    assert cm.decode_splits(8, K=1, max_splits=2) == 1   # tie -> smaller S
+    assert cm.decode_splits(8, K=1) == 4
+
+
+def test_grant_cap_best_time_per_token():
+    cm = CostModel(_table(prefill={"16x1": 100.0, "32x1": 120.0,
+                                   "64x1": 400.0}))
+    # per-token: 6.25, 3.75, 6.25 -> 32 wins
+    assert cm.grant_cap() == 32
+    assert cm.grant_cap(buckets=(16, 64)) == 16
+    assert cm.grant_cap(buckets=(128,)) is None
+
+
+def test_pack_rows_best_time_per_grant():
+    cm = CostModel(_table(prefill={
+        "32x1": 100.0, "32x2": 150.0, "32x4": 500.0}))
+    # per-grant: 100, 75, 125 -> 2 wins, at the nearest measured bucket
+    assert cm.pack_rows(32) == 2
+    assert cm.pack_rows(40) == 2
+
+
+def test_spec_worth_verify_vs_expected_accepts():
+    cm = CostModel(_table(decode={"1/1/8": 100.0, "3/1/8": 150.0}))
+    assert cm.spec_worth(3, 8, expected_accept=2.0) is True    # 150 < 200
+    assert cm.spec_worth(3, 8, expected_accept=1.2) is False   # 150 >= 120
+    assert cm.spec_worth(5, 8, expected_accept=3.0) is None    # K=5 unmeasured
+
+
+def test_collective_s_alpha_beta():
+    cm = CostModel(_table(alpha=2e-6, beta=1e-9))
+    assert cm.collective_s(0) == pytest.approx(2e-6)
+    assert cm.collective_s(1000) == pytest.approx(2e-6 + 1e-6)
+
+
+def test_costmodel_rejects_invalid_table():
+    bad = _table()
+    bad["schema"] = "nope"
+    with pytest.raises(ValueError):
+        CostModel(bad)
+
+
+# ---------------------------------------------------------------------------
+# fallback contract: static defaults + exactly one warning event
+# ---------------------------------------------------------------------------
+
+def _warnings(eng):
+    return [e for e in eng.trace.events() if e.kind == "warning"]
+
+
+def test_fallback_missing_table(params, tmp_path):
+    eng = _paged(params, cost_table=str(tmp_path / "nope.json"))
+    assert eng.cost_model is None
+    (w,) = _warnings(eng)
+    assert w.payload["what"] == "cost_table"
+    assert w.payload["reason"] == "missing"
+
+
+def test_fallback_malformed_table(params, tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    eng = _paged(params, cost_table=str(p))
+    assert eng.cost_model is None
+    (w,) = _warnings(eng)
+    assert w.payload["reason"].startswith("unreadable")
+
+    p2 = tmp_path / "invalid.json"
+    p2.write_text(json.dumps({"schema": "costmodel-v1"}))
+    eng2 = _paged(params, cost_table=str(p2))
+    assert eng2.cost_model is None
+    (w2,) = _warnings(eng2)
+    assert w2.payload["reason"].startswith("invalid")
+
+
+def test_fallback_wrong_platform_or_mesh(params, tmp_path):
+    p = tmp_path / "tpu.json"
+    p.write_text(json.dumps(_table(platform="tpu")))
+    eng = _paged(params, cost_table=str(p))
+    assert eng.cost_model is None
+    (w,) = _warnings(eng)
+    assert "mismatch" in w.payload["reason"]
+
+    p2 = tmp_path / "tp8.json"
+    p2.write_text(json.dumps(_table(tp=8)))
+    eng2 = _paged(params, cost_table=str(p2))
+    assert eng2.cost_model is None
+    (w2,) = _warnings(eng2)
+    assert "tp8" in w2.payload["reason"]
+
+
+def test_fallback_serves_identically_to_no_table(params, tmp_path):
+    """A failed table load must not just warn — the engine must behave
+    exactly like one never configured with a table."""
+    rng = np.random.default_rng(5)
+    prompts = _mixed_prompts(rng)
+    plain = _run(_paged(params), prompts)
+    fallen = _run(_paged(params, cost_table=str(tmp_path / "gone.json")),
+                  prompts)
+    assert fallen == plain
+
+
+def test_load_cost_model_roundtrip(tmp_path):
+    p = tmp_path / "good.json"
+    p.write_text(json.dumps(_table()))
+    cm = load_cost_model(str(p), platform="cpu", tp=1, trace=None)
+    assert cm is not None and cm.platform == "cpu" and cm.tp == 1
+    assert load_cost_model(str(p), platform="tpu", tp=1, trace=None) is None
+
+
+# ---------------------------------------------------------------------------
+# decisions drive the engine (and are traced)
+# ---------------------------------------------------------------------------
+
+def _decisions(eng, point=None):
+    evs = [e for e in eng.trace.events() if e.kind == "decision"]
+    if point is not None:
+        evs = [e for e in evs if e.payload["point"] == point]
+    return evs
+
+
+def test_modeled_kv_splits_override_static(params):
+    """A table whose measurements favour S=2 at depth must steer the auto
+    heuristic away from the static answer (S=1 at shallow depths) and key
+    the decode closures on the modeled S."""
+    cm = CostModel(_table(decode={"1/1/2": 100.0, "1/2/2": 40.0,
+                                  "1/1/16": 500.0, "1/2/16": 200.0}))
+    eng = _paged(params, cost_model=cm)
+    rng = np.random.default_rng(9)
+    _run(eng, [rng.integers(2, 64, 20).astype(np.int32)], new=4)
+    assert set(eng._decode_fns) == {(1, 2)}, sorted(eng._decode_fns)
+    decs = _decisions(eng, "kv_splits")
+    assert decs and all(d.payload["chosen"] == 2 for d in decs)
+    assert all(d.payload["static"] == 1 for d in decs)
+
+
+def test_explicit_kv_splits_beats_model(params):
+    """ServingConfig.decode_kv_splits != 0 is an explicit operator choice —
+    the model must not override it."""
+    cm = CostModel(_table(decode={"1/1/2": 100.0, "1/2/2": 40.0}))
+    eng = _paged(params, cost_model=cm, kv_splits=1)
+    rng = np.random.default_rng(9)
+    _run(eng, [rng.integers(2, 64, 20).astype(np.int32)], new=4)
+    assert set(eng._decode_fns) == {(1, 1)}
+    assert not _decisions(eng, "kv_splits")
+
+
+def test_modeled_grant_cap_truncates_grants(params):
+    """A table favouring 16-token prefill calls caps every grant at 16;
+    the remainder resumes next step (exact split — tokens unchanged)."""
+    cm = CostModel(_table(prefill={"16x1": 100.0, "32x1": 400.0,
+                                   "64x1": 900.0}))
+    eng = _paged(params, cost_model=cm, budget=64)
+    assert eng.scheduler._grant_cap == 16
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(2, 64, 40).astype(np.int32)]
+    got = _run(eng, prompts)
+    assert _decisions(eng, "grant_cap")
+    assert all(e.payload["n"] <= 16 for e in eng.trace.events()
+               if e.kind == "grant_commit")
+    plain = _run(_paged(params, budget=64), [p.copy() for p in prompts])
+    assert got == plain
+
+
+def test_modeled_pack_cap_limits_rows(params):
+    """A table where 1-row calls beat wider packs forces singleton packs."""
+    prefill = {f"{t}x{r}": 100.0 * t * (r ** 2) / 16
+               for t in (16, 32, 64) for r in (1, 2, 4)}
+    cm = CostModel(_table(prefill=prefill))
+    eng = _paged(params, cost_model=cm, max_batch=4, budget=256)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, 64, 30).astype(np.int32) for _ in range(3)]
+    got = _run(eng, prompts)
+    assert _decisions(eng, "pack_rows")
+    # every prefill call ran a single real row
+    assert all(e.payload["rows"] == 1 for e in eng.trace.events()
+               if e.kind == "prefill_call")
+    plain = _run(_paged(params, max_batch=4, budget=256),
+                 [p.copy() for p in prompts])
+    assert got == plain
+
+
+def test_modeled_spec_gate_disables_unprofitable_speculation(params,
+                                                             monkeypatch):
+    """A table where the K-token verify costs more than the accepts it
+    replaces must gate speculation OFF once the histogram warms up — and
+    the stream must still equal the plain-decode stream."""
+    monkeypatch.setattr(PagedEngine, "SPEC_GATE_MIN_SAMPLES", 1)
+    cm = CostModel(_table(decode={"1/1/2": 100.0, "1/1/16": 100.0,
+                                  "3/1/2": 1000.0, "3/1/16": 1000.0}))
+    rng = np.random.default_rng(12)
+    prompts = [_repetitive(rng, 30), _repetitive(rng, 24)]
+    eng = _paged(params, cost_model=cm, spec_k=2)
+    got = _run(eng, prompts, new=10)
+    gate = _decisions(eng, "spec_gate")
+    assert gate and all(d.payload["chosen"] == 1 for d in gate)
+    plain = _run(_paged(params, spec_k=0), [p.copy() for p in prompts],
+                 new=10)
+    assert got == plain
+    # profitable table (verify cheaper than even ONE plain step, so the
+    # verdict holds for any histogram mean): gate stays open
+    cm2 = CostModel(_table(decode={"1/1/2": 100.0, "1/1/16": 100.0,
+                                   "3/1/2": 90.0, "3/1/16": 90.0}))
+    eng2 = _paged(params, cost_model=cm2, spec_k=2)
+    got2 = _run(eng2, [p.copy() for p in prompts], new=10)
+    assert got2 == plain
+    assert not _decisions(eng2, "spec_gate")
+    assert eng2.metrics["spec_calls"] > 0
+
+
+# ---------------------------------------------------------------------------
+# determinism: identical table + traffic -> identical decision sequence
+# ---------------------------------------------------------------------------
+
+def test_decision_sequence_is_deterministic(params):
+    table = _table(
+        prefill={f"{t}x{r}": 50.0 * t / 16 + 10.0 * r
+                 for t in (16, 32) for r in (1, 2)},
+        decode={"1/1/2": 100.0, "1/2/2": 60.0, "3/1/2": 140.0,
+                "1/1/16": 300.0, "1/2/16": 150.0, "3/1/16": 350.0})
+
+    def run_once():
+        eng = _paged(params, cost_model=CostModel(table), spec_k=2,
+                     max_batch=2, budget=24)
+        rng = np.random.default_rng(21)
+        _run(eng, _mixed_prompts(rng))
+        return [(e.payload["point"], e.payload["chosen"],
+                 e.payload["static"]) for e in _decisions(eng)]
+
+    first = run_once()
+    second = run_once()
+    assert first, "model made no decisions on mixed traffic"
+    assert first == second
+
+
+# ---------------------------------------------------------------------------
+# the differential: model-driven == static on adversarial mixed traffic
+# ---------------------------------------------------------------------------
+
+def test_model_driven_serving_token_equal_on_mixed_traffic(params):
+    """The acceptance-criteria battery: sharing + preemption (tiny pool) +
+    spec_k=2 + a table that FORCES non-default choices on every axis.  The
+    decision sequence differs from static; the tokens must not."""
+    table = _table(
+        prefill={"16x1": 100.0, "16x2": 150.0, "32x1": 400.0,
+                 "32x2": 500.0, "64x1": 900.0, "64x2": 1100.0},
+        decode={"1/1/2": 100.0, "1/2/2": 40.0, "3/1/2": 5000.0,
+                "3/2/2": 5000.0, "1/1/16": 400.0, "1/2/16": 150.0,
+                "3/1/16": 5000.0, "3/2/16": 5000.0})
+    rng = np.random.default_rng(31)
+    prompts = _mixed_prompts(rng)
+    # num_pages small enough to force preemption under 4 requests
+    kw = dict(spec_k=2, num_pages=10, max_batch=2, budget=24)
+    static_eng = _paged(params, **kw)
+    static = _run(static_eng, prompts)
+    model_eng = _paged(params, cost_model=CostModel(table), **kw)
+    modeled = _run(model_eng, prompts)
+    assert modeled == static
+    assert static_eng.metrics["preemptions"] > 0, \
+        "workload failed to exercise preemption"
+    decs = _decisions(model_eng)
+    points = {d.payload["point"] for d in decs}
+    # the table above forces non-static answers on the split + chunk axes
+    assert "kv_splits" in points and "grant_cap" in points
+    # and the engine really decoded through the modeled split closures
+    assert any(s > 1 for (_, s) in model_eng._decode_fns)
+
+
+@pytest.mark.slow
+def test_autotuned_table_token_equal_roundtrip(params, tmp_path):
+    """End-to-end: autotune (smoke) -> write -> load via cost_table ->
+    serve; tokens must equal the static engine's."""
+    from repro.perf.costmodel import autotune, write_table
+
+    config = Config(model=CFG, parallel=ParallelConfig(data=1, model=1),
+                    iso=ISO,
+                    serving=ServingConfig(page_size=8, max_batch=2,
+                                          max_len=160,
+                                          prefill_token_budget=16))
+    table = autotune(config, params, smoke=True)
+    assert validate_table(table) == []
+    path = tmp_path / "local.json"
+    write_table(table, str(path))
+    rng = np.random.default_rng(41)
+    prompts = _mixed_prompts(rng)
+    static = _run(_paged(params), prompts)
+    eng = _paged(params, cost_table=str(path))
+    assert eng.cost_model is not None and not _warnings(eng)
+    assert _run(eng, prompts) == static
