@@ -9,7 +9,9 @@ recorded per commit instead of staying empty:
     batched-prefill section (packed vs batch-1 grants at 1/2/4 requests;
     the 4-wide call reduction is lifted into ``prefill_call_reduction``),
     and the split-KV decode section (the 128-page modeled critical-path
-    ratio is lifted into ``decode_split_speedup``);
+    ratio is lifted into ``decode_split_speedup``), and the disaggregated
+    prefill/decode section (token equality asserted; ``migrated_pages`` /
+    ``migration_us`` lifted as informational fields);
   * ``benchmarks/perf_ledger.py --smoke`` in a subprocess (it forces 512
     placeholder XLA devices at import, which must not leak into the
     engine-bench process whose jit runs on the single real CPU device).

@@ -76,6 +76,15 @@ HEADLINE_FIELDS: Dict[str, Dict[str, Any]] = {
     "pool_occupancy_peak": {
         "row": "engine/observability", "key": "pool_occupancy_peak",
         "cast": int, "default": 0, "better": None},
+    # disaggregated prefill/decode: page-migration volume and host-side
+    # transfer cost on the standard mixed workload (informational — both
+    # track workload shape, not a speedup; the bench asserts token equality)
+    "migrated_pages": {
+        "row": "engine/disagg", "key": "migrated_pages",
+        "cast": int, "default": 0, "better": None},
+    "migration_us": {
+        "row": "engine/disagg", "key": "migration_us",
+        "cast": float, "default": 0.0, "better": None},
 }
 
 

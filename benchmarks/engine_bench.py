@@ -219,6 +219,9 @@ def run(emit):
     # ---- split-KV flash-decode: long-context sequence parallelism ---------
     _decode_split_section(emit)
 
+    # ---- disaggregated prefill/decode: migration cost, per-phase latency --
+    _disagg_section(cfg, iso2, params, emit)
+
     # ---- observability: overhead, latency percentiles, overlap probe ------
     _obs_section(cfg, iso2, params, emit)
 
@@ -274,6 +277,66 @@ def _decode_split_section(emit, kv_splits=4):
              f"split_speedup={speedup:.3f};pages={mb};kv_splits={kv_splits};"
              f"wall_us_seq={wall_seq * 1e6:.1f};"
              f"wall_us_split={wall_spl * 1e6:.1f};tokens_equal=True")
+
+
+def _disagg_section(cfg, iso2, params, emit):
+    """Disaggregated prefill/decode (serving/disagg.py) vs the single paged
+    engine on the same mixed-length workload.  On one CPU host both layouts
+    run the same math, so wall time is an honesty check, not the headline —
+    the row reports what disaggregation actually changes: the page-migration
+    volume and host transfer cost (lifted into BENCH_pr.json), plus the
+    per-phase latency split (TTFT lives on the prefill engine, TPOT on the
+    decode engine).  Token streams must be byte-identical."""
+    from repro.serving import DisaggRouter
+
+    lengths, new = (96, 48, 32), 8
+    max_len = max(lengths) + new + 8
+    config = Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                    iso=iso2,
+                    serving=ServingConfig(page_size=16, max_batch=2,
+                                          max_len=max_len,
+                                          prefill_token_budget=48))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+               for n in lengths]
+
+    def _submit(eng):
+        return [eng.add_request(Request(
+            prompt=p, sampling=SamplingParams(max_new_tokens=new, eos_id=-1)))
+            for p in prompts]
+
+    single = PagedEngine(config, params)
+    s_rids = _submit(single)
+    t0 = time.perf_counter()
+    s_outs = single.run_until_complete()
+    wall_s = time.perf_counter() - t0
+
+    router = DisaggRouter(config, params)
+    d_rids = _submit(router)
+    t0 = time.perf_counter()
+    d_outs = router.run_until_complete()
+    wall_d = time.perf_counter() - t0
+
+    equal = [s_outs[r] for r in s_rids] == [d_outs[r] for r in d_rids]
+    assert equal, "disaggregation changed generated tokens!"
+    ms = router.migration_stats()
+    assert ms["pending_transfers"] == 0 and ms["migrated_requests"] >= \
+        len(prompts), ms
+    mp, md = router.prefill.metrics, router.decode.metrics
+    m1 = single.metrics
+    ttft_d = 1e3 * mp["ttft_sum"] / max(mp["ttft_n"], 1)
+    ttft_s = 1e3 * m1["ttft_sum"] / max(m1["ttft_n"], 1)
+    tpot_d = 1e3 * md["decode_s"] / max(md["decode_tokens"], 1)
+    tpot_s = 1e3 * m1["decode_s"] / max(m1["decode_tokens"], 1)
+    emit("engine/disagg", wall_d * 1e6,
+         f"migrated_pages={ms['migrated_pages']};"
+         f"migration_us={ms['migration_us']:.1f};"
+         f"migrations={ms['migrations']};"
+         f"migrated_requests={ms['migrated_requests']};"
+         f"deferrals={ms['deferrals']};"
+         f"ttft_ms_prefill={ttft_d:.1f};ttft_ms_single={ttft_s:.1f};"
+         f"tpot_ms_decode={tpot_d:.2f};tpot_ms_single={tpot_s:.2f};"
+         f"wall_us_single={wall_s * 1e6:.1f};tokens_equal={equal}")
 
 
 def _steady_decode(cfg, iso, params, obs_on, timed_steps=30):

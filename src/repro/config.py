@@ -244,6 +244,25 @@ class ServingConfig:
     cost_table: str = ""
     cost_model: Optional[object] = field(default=None, compare=False,
                                          repr=False, hash=False)
+    # disaggregated prefill/decode serving (serving/disagg.py): run TWO
+    # PagedEngines — one that only prefills, one that only decodes — with a
+    # page-migration protocol in between (a finished-prefill request's pages,
+    # block table, pos metadata, generated tokens and draft state ship to the
+    # decode pool as a PageTransfer).  The phases have opposite compute/
+    # communication profiles, so production fleets split them onto separate
+    # replicas; single-process/two-mesh here so the differential battery can
+    # prove token equality.  Attention-only stacks (recurrent per-slot state
+    # does not migrate yet).
+    disagg: bool = False
+    # decode-side pool pages (0 = same sizing rule as ``num_pages``); the
+    # prefill side keeps ``num_pages``.  A full decode pool DEFERS migration
+    # (requests queue on the prefill side, bounded-backoff retry) — it never
+    # preempts a decode-resident request and never loses tokens.
+    decode_pool_pages: int = 0
+    # max requests migrated per router step (0 = every ready request);
+    # batching migrations preserves CoW sharing among the batch — pages
+    # shared by two migrating requests transfer ONCE.
+    migrate_batch: int = 0
 
 
 @dataclass(frozen=True)

@@ -29,6 +29,19 @@ def local_test_mesh(data: int = 1, model: int = 1):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
+def disagg_meshes(parallel: ParallelConfig):
+    """Two disjoint (1, model) meshes — prefill + decode engines for
+    disaggregated serving (serving/disagg.py).  Needs 2*model devices (on CPU
+    export XLA_FLAGS=--xla_force_host_platform_device_count=<2*model>)."""
+    tp = parallel.model
+    devs = jax.devices()
+    assert 2 * tp <= len(devs), \
+        f"disagg under tp={tp} needs {2 * tp} devices, have {len(devs)}"
+    shape, axes = (1, tp), ("data", "model")
+    return (compat.make_mesh(shape, axes, devices=devs[:tp]),
+            compat.make_mesh(shape, axes, devices=devs[tp:2 * tp]))
+
+
 def parallel_for_mesh(mesh) -> ParallelConfig:
     names = mesh.axis_names
     if "pod" in names:

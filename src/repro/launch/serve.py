@@ -25,6 +25,8 @@ def _drive(eng, args):
     """Step the engine to completion, printing a one-line metrics summary
     every ``--metrics-every`` steps (the dense and paged engines share the
     loop; pool columns are paged-only)."""
+    if hasattr(eng, "prefill"):               # DisaggRouter: two engines
+        return _drive_disagg(eng, args)
     if not args.metrics_every:
         return eng.run_until_complete()
     paged = hasattr(eng, "alloc")
@@ -58,6 +60,41 @@ def _drive(eng, args):
     return out
 
 
+def _drive_disagg(router, args):
+    """Step the router to completion; per-phase metrics lines on request."""
+    if not args.metrics_every:
+        return router.run_until_complete()
+    t_last = time.perf_counter()
+    toks_last = steps = 0
+    for _ in range(10_000):
+        router.step()
+        steps += 1
+        done = router.done()
+        if steps % args.metrics_every == 0 or done:
+            pm = router.prefill.metrics
+            dm = router.decode.metrics
+            now = time.perf_counter()
+            toks = dm["decode_tokens"] + pm["prefill_samples"]
+            rate = (toks - toks_last) / max(now - t_last, 1e-9)
+            t_last, toks_last = now, toks
+            ms = router.migration_stats()
+            print(f"[metrics] step={steps} "
+                  f"prefill_active="
+                  f"{sum(s is not None for s in router.prefill.slots)} "
+                  f"decode_active="
+                  f"{sum(s is not None for s in router.decode.slots)} "
+                  f"waiting={len(router.prefill.scheduler.waiting)} "
+                  f"tok/s={rate:.1f} "
+                  f"migrated={ms['migrated_requests']} "
+                  f"deferrals={ms['deferrals']}")
+        if done:
+            break
+    out = {}
+    for st in router.prefill._finished + router.decode._finished:
+        out[st.request.rid] = st.generated
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -87,6 +124,21 @@ def main(argv=None) -> int:
                     help="run prefill grants batch-1 (one forward call per "
                          "grant) instead of packing same-bucket grants into "
                          "one batched call per scheduler tick")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: one prefill engine + one "
+                         "decode engine, requests migrate by KV-page "
+                         "transfer the moment their prompt is resident "
+                         "(serving/disagg.py; with --tp N the two engines "
+                         "run on disjoint N-device meshes — needs 2N "
+                         "devices)")
+    ap.add_argument("--decode-pool-pages", type=int, default=0,
+                    help="decode-side page-pool size under --disagg "
+                         "(0 = same as the prefill pool); a full decode "
+                         "pool defers migration, it never drops requests")
+    ap.add_argument("--migrate-batch", type=int, default=0,
+                    help="max requests migrated per router step under "
+                         "--disagg (0 = all that fit); batched transfers "
+                         "keep CoW page sharing across the move")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: verify a (k+1)-token "
                          "self-drafted window per decode step (greedy only; "
@@ -128,6 +180,12 @@ def main(argv=None) -> int:
                  "has no cost-model decision points)")
     if args.spec_k and args.temperature > 0:
         ap.error("--spec-k is greedy-only (needs --temperature 0)")
+    if args.disagg and not args.paged:
+        ap.error("--disagg requires --paged (migration moves KV pages)")
+    if args.disagg and (args.probe_overlap or args.autotune):
+        ap.error("--disagg does not combine with --probe-overlap/--autotune")
+    if (args.decode_pool_pages or args.migrate_batch) and not args.disagg:
+        ap.error("--decode-pool-pages/--migrate-batch require --disagg")
 
     cfg = reduce_cfg(get_model_config(args.arch), args.preset)
     if args.paged and cfg.family == "audio":
@@ -146,7 +204,10 @@ def main(argv=None) -> int:
                             prefill_batching=not args.no_batched_prefill,
                             spec_k=args.spec_k,
                             cost_table="" if args.autotune
-                            else args.cost_table)
+                            else args.cost_table,
+                            disagg=args.disagg,
+                            decode_pool_pages=args.decode_pool_pages,
+                            migrate_batch=args.migrate_batch)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
                     serving=serving)
@@ -154,7 +215,7 @@ def main(argv=None) -> int:
     params = api.init_params(key, cfg, tp=args.tp)
     if args.paged:
         mesh = None
-        if args.tp > 1:
+        if args.tp > 1 and not args.disagg:
             from repro.launch.mesh import make_mesh
             mesh = make_mesh(config.parallel)
         if args.autotune:
@@ -168,8 +229,17 @@ def main(argv=None) -> int:
                              log=lambda msg: print(f"[autotune] {msg}"))
             config = config.replace(serving=dataclasses.replace(
                 serving, cost_model=CostModel(table)))
-        eng = PagedEngine(config, params, mesh=mesh)
-        if eng.cost_model is not None:
+        if args.disagg:
+            from repro.serving.disagg import DisaggRouter
+            pmesh = dmesh = None
+            if args.tp > 1:
+                from repro.launch.mesh import disagg_meshes
+                pmesh, dmesh = disagg_meshes(config.parallel)
+            eng = DisaggRouter(config, params, prefill_mesh=pmesh,
+                               decode_mesh=dmesh)
+        else:
+            eng = PagedEngine(config, params, mesh=mesh)
+        if not args.disagg and eng.cost_model is not None:
             print(f"[costmodel] active: platform={eng.cost_model.platform} "
                   f"tp={eng.cost_model.tp} "
                   f"alpha={eng.cost_model.alpha_s:.3e}s "
@@ -207,8 +277,38 @@ def main(argv=None) -> int:
         from repro.obs import jaxprof
         jaxprof.stop()
 
-    m = eng.metrics
     total_new = sum(len(v) for v in outs.values())
+    if args.disagg:
+        pm, dm = eng.prefill.metrics, eng.decode.metrics
+        ms = eng.migration_stats()
+        ttft = pm["ttft_sum"] / max(pm["ttft_n"], 1)
+        tpot = eng.decode.registry.histogram("tpot")
+        print(f"arch={cfg.name} iso={'off' if args.iso_off else 'on'} "
+              f"disagg requests={len(outs)} new_tokens={total_new} "
+              f"wall={wall:.2f}s")
+        print(f"prefill phase: {pm['prefill_tokens']} tok in "
+              f"{pm['prefill_s']:.2f}s calls={pm['prefill_calls']} "
+              f"grants={pm['prefill_grants']} ttft={ttft * 1e3:.1f}ms")
+        print(f"decode phase: {dm['decode_tokens']} tok in "
+              f"{dm['decode_s']:.2f}s calls={dm['decode_calls']} "
+              f"tpot={tpot.mean * 1e3:.2f}ms "
+              f"preemptions={dm['preemptions']}")
+        print(f"migration: transfers={ms['migrations']} "
+              f"requests={ms['migrated_requests']} "
+              f"pages={ms['migrated_pages']} "
+              f"us={ms['migration_us']:.0f} "
+              f"deferrals={ms['deferrals']} "
+              f"bounce_backs={ms['bounce_backs']}")
+        if args.trace_out:
+            from repro.obs import write_chrome_trace
+            ev = eng.prefill.trace.events() + eng.decode.trace.events()
+            n = write_chrome_trace(ev, args.trace_out)
+            print(f"trace: {n} events -> {args.trace_out} (both engines)")
+        for rid in sorted(outs)[:3]:
+            print(f"  rid {rid}: {outs[rid][:10]}"
+                  f"{'...' if len(outs[rid]) > 10 else ''}")
+        return 0
+    m = eng.metrics
     print(f"arch={cfg.name} iso={'off' if args.iso_off else 'on'} "
           f"requests={len(outs)} new_tokens={total_new} wall={wall:.2f}s")
     print(f"prefill: {m['prefill_tokens']} tok in {m['prefill_s']:.2f}s | "

@@ -19,7 +19,7 @@ REPLAYABLE = (
     "prefill_grants", "resumed_grants", "prefill_calls", "prefill_tokens",
     "decode_calls", "spec_calls", "decode_tokens", "spec_tokens",
     "prefill_samples", "ttft_n", "preemptions", "completed", "cow_copies",
-    "prefix_shared_tokens",
+    "prefix_shared_tokens", "migrations", "migrated_pages",
 )
 
 
@@ -67,4 +67,10 @@ def replay_counters(events: Sequence[TraceEvent]) -> Dict[str, int]:
             c["pages_allocated"] += p.get("n", 0)
         elif k == "free":
             c["pages_freed"] += p.get("n", 0)
+        elif k == "migrate":
+            # one span per PageTransfer on the DETACHING engine; n = distinct
+            # pages moved.  The per-rid detach/attach instants and the
+            # refcount-drop narration (rc_drop) are bookkeeping-neutral.
+            c["migrations"] += 1
+            c["migrated_pages"] += p.get("n", 0)
     return dict(c)

@@ -12,6 +12,8 @@ Event vocabulary (payload keys in parentheses; -1 rid/slot = not applicable):
               ``defer``   ()                            packmate-sharing defer
   allocator   ``alloc``   (n, free, used)               pages from free list
               ``free``    (n, free, used)               pages released
+              ``rc_drop`` (n)                           sharer refcount drops
+                                                        (no physical release)
               ``cow``     (old, new)                    copy-on-write copy
               ``adopt``   (n_pages, tokens)             prefix-share adoption
   engine      ``admit``   ()                            request -> slot
@@ -24,6 +26,10 @@ Event vocabulary (payload keys in parentheses; -1 rid/slot = not applicable):
               ``evict``   ()                            preemption victim
               ``finish``  ()                            request completed
               ``pool``    (used, free, frag)            per-step occupancy
+  disagg      ``detach``  ()                            request exported out
+              ``attach``  ()                            request imported in
+              ``migrate`` (n, rids, us)                 one per PageTransfer,
+                                                        n = distinct pages
   cost model  ``decision`` (point, chosen, static, ...) model-driven choice
               ``warning``  (what, reason, path)         degradation notice
 

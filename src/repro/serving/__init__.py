@@ -1,5 +1,7 @@
+from repro.serving.disagg import DisaggRouter, PageTransfer  # noqa: F401
 from repro.serving.engine import Engine  # noqa: F401
 from repro.serving.kvcache import PageAllocator, PagedKVCache  # noqa: F401
+from repro.serving.kvstate import KVPool  # noqa: F401
 from repro.serving.paged_engine import PagedEngine  # noqa: F401
 from repro.serving.requests import Request, RequestState  # noqa: F401
 from repro.serving.scheduler import TokenBudgetScheduler  # noqa: F401

@@ -191,6 +191,7 @@ class PageAllocator:
         table = self.tables.pop(rid, [])
         self.lengths.pop(rid, None)
         released = []
+        rc_drops = 0
         for pg in table:
             assert pg not in self._free_set, f"double free of page {pg}"
             rc = self.refcount.get(pg, 0)
@@ -202,9 +203,98 @@ class PageAllocator:
                 released.append(pg)
             else:
                 self.refcount[pg] = rc - 1
+                rc_drops += 1
         if released:
             self._emit("free", rid, n=len(released))
+        if rc_drops:
+            # a sharer dropping its refcount releases nothing, so it is
+            # invisible to the free/alloc conservation pair — narrate it as
+            # its own (replay-neutral) event so cross-allocator accounting
+            # can balance shared pages (tests/test_disagg.py)
+            self._emit("rc_drop", rid, n=rc_drops)
         return released
+
+    def import_tables(self, tables: Dict[int, List[int]],
+                      lengths: Dict[int, int]) -> Dict[int, int]:
+        """Adopt exported block tables into THIS pool (serving/kvstate.py
+        page migration): ``tables`` reference export-local page ids; every
+        distinct id gets one fresh page from the free list (so sharing
+        structure among the imported requests is preserved, refcounts equal
+        to the number of importing tables).  Returns the local-id -> new-page
+        mapping for the device-side payload scatter.  Raises OutOfPages
+        (mutating nothing) when the free list can't cover the distinct-page
+        count — the disagg router's defer-and-retry path."""
+        local_ids = sorted({pg for t in tables.values() for pg in t})
+        for rid in tables:
+            assert rid not in self.tables, f"import into live request {rid}"
+            assert rid in lengths, rid
+        if len(local_ids) > len(self._free):
+            raise OutOfPages(f"import needs {len(local_ids)} pages, "
+                             f"{len(self._free)} free")
+        mapping: Dict[int, int] = {}
+        for lid in local_ids:
+            pg = self._free.pop()
+            self._free_set.discard(pg)
+            assert self.refcount.get(pg, 0) == 0, \
+                f"free list handed out live page {pg}"
+            mapping[lid] = pg
+        for rid, t in tables.items():
+            new_t = [mapping[lid] for lid in t]
+            for pg in new_t:
+                self.refcount[pg] = self.refcount.get(pg, 0) + 1
+            self.tables[rid] = new_t
+            self.lengths[rid] = lengths[rid]
+            assert self.lengths[rid] <= len(new_t) * self.page_size
+        self._emit("alloc", next(iter(tables), -1), n=len(local_ids))
+        return mapping
+
+    # ---- serialization ----------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Full allocator state as a plain JSON-able dict (dict keys become
+        strings; ``restore`` converts back).  Free-list ORDER is preserved so
+        a restored allocator hands out pages in the identical sequence."""
+        return {"num_pages": self.num_pages, "page_size": self.page_size,
+                "free": list(self._free),
+                "tables": {str(r): list(t) for r, t in self.tables.items()},
+                "lengths": {str(r): n for r, n in self.lengths.items()},
+                "refcount": {str(p): rc for p, rc in self.refcount.items()}}
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Overwrite this allocator's state from a ``snapshot()`` dict (the
+        geometry must match) and re-check the structural invariants."""
+        assert snap["num_pages"] == self.num_pages, \
+            (snap["num_pages"], self.num_pages)
+        assert snap["page_size"] == self.page_size, \
+            (snap["page_size"], self.page_size)
+        self._free = [int(p) for p in snap["free"]]
+        self._free_set = set(self._free)
+        self.tables = {int(r): [int(p) for p in t]
+                       for r, t in snap["tables"].items()}
+        self.lengths = {int(r): int(n) for r, n in snap["lengths"].items()}
+        self.refcount = {int(p): int(rc)
+                         for p, rc in snap["refcount"].items()}
+        self.check()
+
+    def check(self) -> None:
+        """Structural invariants (asserted after ``restore`` and by the
+        round-trip property tests): free + unique-allocated == num_pages, a
+        page's refcount equals the number of tables referencing it, no page
+        is both free and referenced, and every request's committed tokens
+        fit its capacity."""
+        allocated = {pg for t in self.tables.values() for pg in t}
+        assert not (allocated & self._free_set), \
+            f"pages both free and allocated: {allocated & self._free_set}"
+        assert len(self._free) == len(self._free_set), "free-list duplicates"
+        assert len(self._free) + len(allocated) == self.num_pages, \
+            (len(self._free), len(allocated), self.num_pages)
+        refs: Dict[int, int] = {}
+        for t in self.tables.values():
+            for pg in t:
+                refs[pg] = refs.get(pg, 0) + 1
+        assert refs == self.refcount, (refs, self.refcount)
+        for rid, n in self.lengths.items():
+            assert n <= len(self.tables.get(rid, ())) * self.page_size, \
+                (rid, n)
 
     def block_table(self, rid: int, max_blocks: int) -> np.ndarray:
         """Padded (-1) block table row of static width ``max_blocks``."""
@@ -268,6 +358,23 @@ class PrefixCache:
                 rids.remove(rid)
             if not rids:
                 self._by_hash.pop(h, None)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Registered prompts as a JSON-able dict.  The hash index is NOT
+        serialized: ``hash(bytes)`` is salted per process, so ``restore``
+        rebuilds it from the prompts (re-registration is the one canonical
+        index constructor — a stale serialized index could never be
+        verified)."""
+        return {"page_size": self.ps,
+                "prompts": {str(r): [int(t) for t in p]
+                            for r, p in self._prompts.items()}}
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        assert snap["page_size"] == self.ps, (snap["page_size"], self.ps)
+        self._prompts = {}
+        self._by_hash = {}
+        for r, toks in snap["prompts"].items():
+            self.register(int(r), np.asarray(toks, np.int32))
 
     def lookup(self, prompt: np.ndarray, alloc: "PageAllocator",
                exclude: int = -1):

@@ -1,0 +1,142 @@
+"""Engine-external KV state: the page pools + allocator as one portable object.
+
+``PagedEngine`` used to construct its ``PageAllocator`` and ``PagedKVCache``
+privately, which trapped every request's KV inside the engine that prefilled
+it.  ``KVPool`` bundles the two behind an export/import surface so KV state
+can MOVE:
+
+  * ``export_pages(rids)`` materializes the requests' pages (k/v payloads and
+    the shared ``pos`` page), block tables and committed lengths as HOST
+    arrays — the payload half of a ``serving/disagg.PageTransfer``.  Page ids
+    are remapped to a dense export-local namespace, and a page shared by
+    several exported requests (CoW prefix sharing) is exported ONCE and
+    referenced by each table, so sharing survives the move.
+  * ``import_pages(blob)`` re-adopts an export into a different pool: every
+    distinct exported page gets a fresh page from the target's free list
+    (``PageAllocator.import_tables`` — refcount-correct, atomic on
+    ``OutOfPages``), and the payloads are scattered into the device arrays at
+    the remapped ids.  ``pos`` metadata moves verbatim, so attention validity
+    (``pos >= 0``, ``pos < length``) is exactly what it was at export time —
+    including CoW-divergent pages and speculatively-rolled-back positions.
+
+The same surface is what later unlocks KV offload/restore (export to host or
+disk, import back), elastic pool resizing (export everything, rebuild, import)
+and multi-host transfer (the blob is plain numpy + JSON-able tables).  The
+pure-bookkeeping halves (``PageAllocator``/``PrefixCache``) serialize
+independently via their ``snapshot()``/``restore()``.  See docs/serving.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.serving.kvcache import PageAllocator, PagedKVCache
+
+
+class KVPool:
+    """Allocator + device page pools, engine-external.
+
+    Composition, not inheritance: ``pool.alloc`` is the ``PageAllocator`` and
+    ``pool.kv`` the ``PagedKVCache`` — the engine keeps using both directly
+    (``kv.arrays`` is the jit-visible pytree) and the pool adds the
+    migration/serialization surface on top.
+    """
+
+    def __init__(self, alloc: PageAllocator, kv: PagedKVCache):
+        assert alloc.page_size == kv.page_size, (alloc.page_size, kv.page_size)
+        assert alloc.num_pages == kv.num_pages, (alloc.num_pages, kv.num_pages)
+        self.alloc = alloc
+        self.kv = kv
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, num_pages: int, page_size: int, *,
+               tp: int = 1, dtype=jnp.bfloat16, trace=None) -> "KVPool":
+        return cls(PageAllocator(num_pages, page_size, trace=trace),
+                   PagedKVCache(cfg, num_pages, page_size, tp=tp, dtype=dtype))
+
+    @property
+    def page_size(self) -> int:
+        return self.alloc.page_size
+
+    # ------------------------------------------------------------------
+    # export / import
+    # ------------------------------------------------------------------
+    def export_pages(self, rids: Sequence[int]) -> Dict[str, Any]:
+        """Host-array blob of ``rids``' KV state.
+
+        Returns ``{"page_size", "tables", "lengths", "n_pages", "pages"}``
+        where ``tables`` maps rid -> export-local page ids (0..n_pages-1,
+        first-reference order), ``lengths`` the committed token counts, and
+        ``pages`` holds one gathered array per pool buffer: ``k``/``v`` are
+        per-attention-position lists of ``(Pd, n_pages, ps, Hkv, hd)`` and
+        ``pos`` is ``(n_pages, ps)``.  The source pool is NOT mutated — the
+        caller decides whether the export is a move (free the pages) or a
+        copy (KV offload)."""
+        local_of: Dict[int, int] = {}
+        tables: Dict[int, List[int]] = {}
+        for rid in rids:
+            assert rid in self.alloc.tables, f"export of pageless request {rid}"
+            row = []
+            for pg in self.alloc.tables[rid]:
+                if pg not in local_of:
+                    local_of[pg] = len(local_of)
+                row.append(local_of[pg])
+            tables[rid] = row
+        src = np.fromiter(local_of.keys(), np.int32, count=len(local_of))
+        pages = {
+            "k": [np.asarray(k[:, src]) for k in self.kv.arrays["k"]],
+            "v": [np.asarray(v[:, src]) for v in self.kv.arrays["v"]],
+            "pos": np.asarray(self.kv.arrays["pos"][src]),
+        }
+        return {"page_size": self.page_size, "tables": tables,
+                "lengths": {rid: self.alloc.tokens(rid) for rid in rids},
+                "n_pages": len(local_of), "pages": pages}
+
+    def import_pages(self, blob: Dict[str, Any]) -> Dict[int, int]:
+        """Adopt an ``export_pages`` blob into THIS pool.
+
+        Allocates one fresh page per distinct exported page (raising
+        ``OutOfPages`` atomically — nothing mutated — when the free list
+        can't cover it), installs the remapped block tables with refcounts
+        equal to the number of importing tables, and scatters the payloads
+        into the device arrays.  Returns the export-local-id -> new-page
+        mapping."""
+        assert blob["page_size"] == self.page_size, \
+            (blob["page_size"], self.page_size)
+        mapping = self.alloc.import_tables(blob["tables"], blob["lengths"])
+        n = blob["n_pages"]
+        if n == 0:
+            return mapping
+        new_ids = jnp.asarray([mapping[lid] for lid in range(n)], jnp.int32)
+        arrays = dict(self.kv.arrays)
+        arrays["k"] = tuple(
+            k.at[:, new_ids].set(jnp.asarray(payload, k.dtype))
+            for k, payload in zip(arrays["k"], blob["pages"]["k"]))
+        arrays["v"] = tuple(
+            v.at[:, new_ids].set(jnp.asarray(payload, v.dtype))
+            for v, payload in zip(arrays["v"], blob["pages"]["v"]))
+        arrays["pos"] = arrays["pos"].at[new_ids].set(
+            jnp.asarray(blob["pages"]["pos"], jnp.int32))
+        self.kv.arrays = arrays
+        return mapping
+
+    # ------------------------------------------------------------------
+    def scrub(self, pages: Sequence[int]) -> None:
+        """Invalidate the ``pos`` entries of released pages: attention
+        validity derives from ``pos >= 0``, so a reused page that is only
+        partially overwritten must not expose a dead request's tail KV."""
+        if not len(pages):
+            return
+        arrays = dict(self.kv.arrays)
+        arrays["pos"] = arrays["pos"].at[
+            jnp.asarray(list(pages), jnp.int32)].set(-1)
+        self.kv.arrays = arrays
+
+    def stats(self) -> Dict[str, Any]:
+        s = self.alloc.stats()
+        s["kv_bytes_live"] = self.kv.kv_bytes(self.alloc)
+        s["kv_bytes_reserved"] = self.kv.total_bytes()
+        return s

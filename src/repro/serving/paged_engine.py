@@ -60,9 +60,9 @@ from repro.obs.registry import (ACCEPT_LEN_BUCKETS, GRANT_SIZE_BUCKETS,
                                 TTFT_BUCKETS_S)
 from repro.obs.trace import TraceRing
 from repro.models.decoder import cache_specs, decoder_param_specs
-from repro.serving.kvcache import (OutOfPages, PageAllocator, PagedKVCache,
-                                   PrefixCache, pages_for, token_page_coords,
-                                   window_page_coords)
+from repro.serving.kvcache import (OutOfPages, PrefixCache, pages_for,
+                                   token_page_coords, window_page_coords)
+from repro.serving.kvstate import KVPool
 from repro.serving.requests import Request, RequestState
 from repro.serving.sampler import sample
 from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
@@ -70,9 +70,10 @@ from repro.serving.scheduler import TokenBudgetScheduler, plan_chunks
 
 class PagedEngine:
     def __init__(self, config: Config, params, *, serving: ServingConfig = None,
-                 mesh=None):
+                 mesh=None, phase: str = "mixed", kv_pool: KVPool = None):
         assert config.model.family != "audio", \
             "enc-dec (whisper) serving stays on the dense Engine"
+        assert phase in ("mixed", "prefill", "decode"), phase
         self.config = config
         self.cfg = config.model
         self.params = params
@@ -129,9 +130,23 @@ class PagedEngine:
                 sv.cost_table, platform=jax.default_backend(), tp=self.tp,
                 trace=self.trace)
 
-        self.alloc = PageAllocator(num_pages, self.ps, trace=self.trace)
-        self.kv = PagedKVCache(self.cfg, num_pages, self.ps, tp=self.tp,
-                               dtype=cache_dtype)
+        # KV ownership lives OUTSIDE the engine (serving/kvstate.KVPool):
+        # allocator + device page pools travel as one object, so KV state can
+        # be exported/imported across engines (disaggregated serving, KV
+        # offload/restore).  An injected pool is re-pointed at this engine's
+        # trace ring so the replay-conservation oracle stays per-engine.
+        if kv_pool is None:
+            kv_pool = KVPool.create(self.cfg, num_pages, self.ps, tp=self.tp,
+                                    dtype=cache_dtype, trace=self.trace)
+        else:
+            assert kv_pool.page_size == self.ps, (kv_pool.page_size, self.ps)
+            kv_pool.alloc.trace = self.trace
+        self.pool = kv_pool
+        self.alloc = kv_pool.alloc
+        self.kv = kv_pool.kv
+        # phase routing (disagg): "prefill" never runs the decode phase,
+        # "decode" never admits/prefills; "mixed" = the single-engine default
+        self.phase = phase
         self.states = api.init_state_caches(self.cfg, sv.max_batch, tp=self.tp,
                                             dtype=cache_dtype)
         # grant-size bucketing: pad every prefill grant up to a bucket length
@@ -151,7 +166,7 @@ class PagedEngine:
             policy=sv.scheduler_policy,
             prefill_token_budget=sv.prefill_token_budget,
             grant_buckets=self._buckets, trace=self.trace,
-            cost_model=self.cost_model)
+            cost_model=self.cost_model, phase=phase)
         # batched multi-request prefill grants: pack same-padded-length grants
         # into ONE forward call per tick (per-row pos_offset/prefix_len/
         # valid_len threaded through StageCtx into the paged prefill kernel).
@@ -202,7 +217,8 @@ class PagedEngine:
             "preemptions", "ttft_sum", "ttft_n", "prefix_shared_tokens",
             "cow_copies", "peak_used_pages", "prefill_pad_tokens",
             "prefill_samples", "spec_calls", "spec_tokens", "prefill_grants",
-            "resumed_grants", "prefill_pad_rows"))
+            "resumed_grants", "prefill_pad_rows", "migrations",
+            "migrated_pages", "migration_us"))
         self.metrics = self.registry.view()
 
     # ------------------------------------------------------------------
@@ -213,6 +229,8 @@ class PagedEngine:
 
     def add_request(self, req: Request) -> int:
         assert req.frames is None, "audio requests need the dense Engine"
+        assert self.phase != "decode", \
+            "decode-phase engine: requests arrive via attach_requests only"
         eff = len(req.prompt) + self._eff_extra(req)
         if eff + req.sampling.max_new_tokens > self.max_len:
             raise ValueError(f"request {req.rid}: {eff} prompt + "
@@ -1145,9 +1163,11 @@ class PagedEngine:
         batched decode.  Returns (rid, token) events."""
         events: List[Tuple[int, int]] = []
         self.metrics["steps"] += 1
-        self._admit()
-        self._prefill_phase(events)
-        self._decode_phase(events)
+        if self.scheduler.runs_prefill:
+            self._admit()
+            self._prefill_phase(events)
+        if self.scheduler.runs_decode:
+            self._decode_phase(events)
         used = self.alloc.used_pages
         frag = self.alloc.fragmentation()
         self.registry.gauge("pool_occupancy").set(used)
@@ -1168,6 +1188,102 @@ class PagedEngine:
         for st in self._finished:
             out[st.request.rid] = st.generated
         return out
+
+    # ------------------------------------------------------------------
+    # disaggregated serving: detach / attach (serving/disagg.py)
+    # ------------------------------------------------------------------
+    def detach_requests(self, rids: List[int]) -> "Any":
+        """Export ``rids``' KV pages + lifecycle state as a ``PageTransfer``
+        and REMOVE the requests from this engine (slots cleared, pages freed,
+        scheduler/prefix-cache entries dropped).
+
+        The requests must be resident (slot >= 0) with their prompts fully
+        committed — the disagg router migrates exactly that set.  Pages shared
+        across the detached group are exported once (sharing survives the
+        move); pages shared with a request that STAYS are copied by the
+        export, and the stayer keeps its originals.  The transfer is pure
+        host state — numpy payloads, plain-python records — so the receiving
+        engine can live on another mesh."""
+        from repro.serving.disagg import PageTransfer, RequestRecord
+        t0 = time.perf_counter()
+        blob = self.pool.export_pages(rids)
+        records = []
+        for rid in rids:
+            st = self._by_rid[rid]
+            slot = st.slot
+            assert slot >= 0, f"detach of non-resident request {rid}"
+            assert st.prefilled >= sum(st.chunk_plan), \
+                f"detach of mid-prefill request {rid}"
+            d = self._drafts[slot]
+            records.append(RequestRecord(
+                request=st.request, generated=list(st.generated),
+                prompt_len=st.prompt_len, prefilled=st.prefilled,
+                chunk_plan=tuple(st.chunk_plan), t_submit=st.t_submit,
+                t_first=st.t_first, last_token=int(self.last_tokens[slot]),
+                draft_table=dict(d.table) if d is not None else None,
+                draft_last=d.last if d is not None else -1))
+            self.trace.emit("detach", rid=rid, slot=slot)
+            self._release_pages(rid)
+            if self.prefix_cache is not None:
+                self.prefix_cache.forget(rid)
+            self.scheduler.forget(rid)
+            self._by_rid.pop(rid, None)
+            self.slots[slot] = None
+            self.lengths[slot] = 0
+            self.last_tokens[slot] = 0
+            self._drafts[slot] = None
+            st.slot = -1
+        us = (time.perf_counter() - t0) * 1e6
+        # one span per transfer, n = DISTINCT pages moved (a page shared by
+        # several detached requests counts once) — replay reconstructs
+        # migrations/migrated_pages from exactly these events
+        self.trace.emit("migrate", n=blob["n_pages"], rids=len(rids), us=us)
+        self.metrics["migrations"] += 1
+        self.metrics["migrated_pages"] += blob["n_pages"]
+        self.metrics["migration_us"] += us
+        return PageTransfer(records=records, blob=blob)
+
+    def attach_requests(self, transfer: "Any") -> None:
+        """Adopt a ``PageTransfer``: import its pages into this pool and
+        install the requests into free slots, decode-ready.
+
+        Raises ``OutOfPages`` — atomically, nothing mutated — when the free
+        list can't host the transfer's distinct pages; the router keeps the
+        transfer queued and retries (defer-and-retry, never preemption: an
+        attach must not evict a decode-resident request to make room).
+        Free slots must cover the records (the router checks first)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        assert len(free) >= len(transfer.records), \
+            (len(free), len(transfer.records))
+        t0 = time.perf_counter()
+        self.pool.import_pages(transfer.blob)   # may raise OutOfPages: atomic
+        from repro.serving.speculative import BigramDraft
+        for rec in transfer.records:
+            rid = rec.request.rid
+            slot = free.pop(0)
+            st = RequestState(request=rec.request, slot=slot,
+                              generated=list(rec.generated),
+                              prompt_len=rec.prompt_len,
+                              t_submit=rec.t_submit)
+            st.prefilled = rec.prefilled
+            st.chunk_plan = tuple(rec.chunk_plan)
+            st.t_first = rec.t_first
+            self.slots[slot] = st
+            self._by_rid[rid] = st
+            # committed tokens came over in the blob's lengths; the first
+            # generated token is NOT in KV yet (it is the next decode input)
+            self.lengths[slot] = self.alloc.tokens(rid)
+            self.last_tokens[slot] = rec.last_token
+            if self.spec_k and rec.draft_table is not None:
+                d = BigramDraft()
+                d.table = dict(rec.draft_table)
+                d.last = rec.draft_last
+                self._drafts[slot] = d
+            # arrival bookkeeping without queueing: pick_victim/order need a
+            # key for migrated-in rids (router attaches in policy order)
+            self.scheduler.register(rid, priority=rec.request.priority)
+            self.trace.emit("attach", rid=rid, slot=slot)
+        self.metrics["migration_us"] += (time.perf_counter() - t0) * 1e6
 
     def accepted_per_call(self) -> float:
         """Mean tokens emitted per speculative verify call (>= 1 once any

@@ -51,10 +51,19 @@ class TokenBudgetScheduler:
 
     def __init__(self, policy: str = "fcfs", prefill_token_budget: int = 512,
                  grant_buckets: Optional[Tuple[int, ...]] = None, trace=None,
-                 cost_model=None):
+                 cost_model=None, phase: str = "mixed"):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown scheduler policy {policy!r}")
+        if phase not in ("mixed", "prefill", "decode"):
+            raise ValueError(f"unknown scheduler phase {phase!r}")
         self.policy = policy
+        # phase routing (disaggregated serving — serving/disagg.py): a
+        # "prefill" scheduler grants prefill chunks but its engine never runs
+        # the decode phase (finished-prefill requests are DETACHED and
+        # migrated out); a "decode" scheduler issues no grants and its engine
+        # never admits (requests arrive via attach).  "mixed" is the
+        # single-engine default — both phases, unchanged behaviour.
+        self.phase = phase
         self.budget = max(1, prefill_token_budget)
         # optional obs.TraceRing: grant/pack decisions narrate themselves
         self.trace = trace
@@ -81,6 +90,15 @@ class TokenBudgetScheduler:
         self._clock = 0
         self.waiting: List[int] = []          # rids, un-ordered; sorted on use
 
+    # ---- phase routing ----------------------------------------------------
+    @property
+    def runs_prefill(self) -> bool:
+        return self.phase != "decode"
+
+    @property
+    def runs_decode(self) -> bool:
+        return self.phase != "prefill"
+
     # ---- queue ------------------------------------------------------------
     def add(self, rid: int, priority: int = 0) -> None:
         if rid not in self._arrival:          # preserve arrival on re-queue
@@ -88,6 +106,16 @@ class TokenBudgetScheduler:
             self._clock += 1
         self._priority[rid] = priority
         self.waiting.append(rid)
+
+    def register(self, rid: int, priority: int = 0) -> None:
+        """Arrival/priority bookkeeping WITHOUT queueing: an attached
+        (migrated-in) request is already resident, but ``pick_victim``/
+        ``order`` need its ``_key`` — registration order is the migration
+        order, which the router keeps in policy order."""
+        if rid not in self._arrival:
+            self._arrival[rid] = self._clock
+            self._clock += 1
+        self._priority[rid] = priority
 
     def forget(self, rid: int) -> None:
         """Drop every trace of ``rid`` — including its waiting-queue entry.
@@ -138,6 +166,8 @@ class TokenBudgetScheduler:
         order of ``prefill_states`` (``pack_grants`` re-sorts by the same
         key, so grant PACKING is deterministic too).
         """
+        if not self.runs_prefill:
+            return []                         # decode-phase engine: no grants
         by_rid = {rid: (done, plan) for rid, done, plan in prefill_states}
         grants: List[PrefillGrant] = []
         remaining = self.budget

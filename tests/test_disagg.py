@@ -1,0 +1,390 @@
+"""Disaggregated prefill/decode serving (serving/disagg.py): the router's
+two-engine pipeline must emit token streams BYTE-IDENTICAL to single-engine
+serving — under prefix sharing, speculation, batched prefill, both scheduler
+policies, capped migration batches, forced decode-side preemption and a
+decode pool too small to accept migrations promptly.
+
+Also pinned here:
+
+  * phase purity: the prefill engine never compiles a decode closure, the
+    decode engine never compiles a prefill closure, and the decode-side
+    closure key set stays the single-engine compile-guard shape;
+  * replay conservation PER ENGINE across migration: replaying each engine's
+    trace reproduces its registry (including ``migrations``/
+    ``migrated_pages`` from ``migrate`` spans), page conservation holds on
+    both allocators, and both pools drain to zero;
+  * defer-and-retry (never preemption): a full decode pool defers migration
+    — requests queue on the prefill side, nothing crashes, no tokens
+    diverge, and no decode-resident request is evicted to make room;
+  * decode-side eviction victims bounce BACK to the prefill engine in
+    recompute mode and still finish with the exact stream.
+
+The two-mesh variant (prefill and decode engines on disjoint 4-device
+shard_map meshes) runs in the CI multi-device lane via a subprocess, like
+tests/test_tp_paged.py.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, iso_cfg
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.models import api
+from repro.obs.replay import REPLAYABLE, replay_counters
+from repro.serving import PagedEngine, Request
+from repro.serving.disagg import DisaggRouter
+from repro.serving.requests import SamplingParams
+
+CFG = tiny_dense(vocab_size=64)
+ISO = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(jax.random.PRNGKey(0), CFG, tp=1,
+                           dtype=jnp.float32)
+
+
+def _config(**sv):
+    kw = dict(page_size=8, max_batch=2, max_len=160, prefill_token_budget=16)
+    kw.update(sv)
+    return Config(model=CFG, parallel=ParallelConfig(data=1, model=1),
+                  iso=ISO, serving=ServingConfig(**kw))
+
+
+def _single(params, **sv):
+    return PagedEngine(_config(**sv), params)
+
+
+def _disagg(params, **sv):
+    sv.setdefault("disagg", True)
+    return DisaggRouter(_config(**sv), params)
+
+
+def _repetitive(rng, n, period=6):
+    base = rng.integers(2, 64, period).astype(np.int32)
+    return np.tile(base, -(-n // period))[:n]
+
+
+def _mixed_prompts(rng):
+    """Repetitive (draft-friendly), random, and a prefix-sharing pair."""
+    shared = rng.integers(2, 64, 24).astype(np.int32)
+    return [
+        _repetitive(rng, 30),
+        rng.integers(2, 64, 33).astype(np.int32),
+        np.concatenate([shared, rng.integers(2, 64, 9).astype(np.int32)]),
+        np.concatenate([shared, rng.integers(2, 64, 5).astype(np.int32)]),
+    ]
+
+
+def _submit(eng, prompts, new=8, priorities=None):
+    rids = []
+    for i, p in enumerate(prompts):
+        pr = priorities[i] if priorities else 0
+        rids.append(eng.add_request(Request(
+            prompt=p.copy(), priority=pr,
+            sampling=SamplingParams(max_new_tokens=new, eos_id=-1))))
+    return rids
+
+
+def _assert_conserved(eng):
+    """Replay the engine's trace; every replayable counter must equal the
+    registry's, and allocator conservation must hold."""
+    assert eng.trace.dropped == 0
+    rep = replay_counters(eng.trace.events())
+    m = eng.metrics
+    for name in REPLAYABLE:
+        if name in m:
+            assert rep[name] == m[name], (name, rep[name], m[name])
+    assert rep["pages_allocated"] - rep["pages_freed"] == \
+        eng.alloc.used_pages
+
+
+def _assert_router_invariants(router, spec_k=0):
+    for eng in (router.prefill, router.decode):
+        _assert_conserved(eng)
+        assert eng.alloc.used_pages == 0            # both pools drained
+        eng.alloc.check()
+    # phase purity: no decode closure on the prefill engine, no prefill
+    # closure on the decode engine, decode keys stay the pinned shape
+    assert set(router.prefill._decode_fns) == set()
+    assert set(router.decode._prefill_fns) == set()
+    allowed = {(1, 1)} | ({(spec_k + 1, 1)} if spec_k else set())
+    assert set(router.decode._decode_fns) <= allowed, \
+        set(router.decode._decode_fns)
+    assert router.decode._decode_fns, "decode engine never decoded"
+    cap = router.prefill.max_prefill_compiles()
+    if cap is not None:
+        assert router.prefill.prefill_compile_count() <= cap
+    assert not router._pending
+    # every request that migrated is accounted: detach-side span total ==
+    # attach-side import total is implied by per-engine conservation; here
+    # pin the request-level books
+    assert router.stats["migrated_requests"] == \
+        sum(1 for e in router.prefill.trace.events() if e.kind == "detach")
+    assert router.stats["migrated_requests"] == \
+        sum(1 for e in router.decode.trace.events() if e.kind == "attach")
+
+
+# ---------------------------------------------------------------------------
+# differential battery: disagg == single engine, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [0, 2])
+def test_disagg_matches_single_engine_mixed_traffic(params, spec_k):
+    rng = np.random.default_rng(11)
+    prompts = _mixed_prompts(rng)
+
+    single = _single(params, spec_k=spec_k)
+    s_rids = _submit(single, prompts)
+    s_outs = single.run_until_complete()
+
+    router = _disagg(params, spec_k=spec_k)
+    d_rids = _submit(router, prompts)
+    d_outs = router.run_until_complete()
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr], (sr, s_outs[sr], d_outs[dr])
+    assert router.stats["migrated_requests"] == len(prompts)
+    assert router.prefill.metrics["migrations"] > 0
+    assert router.prefill.metrics["migrated_pages"] > 0
+    # prefix sharing engaged on the prefill side and survived migration
+    assert router.prefill.metrics["prefix_shared_tokens"] > 0
+    if spec_k:
+        # the transferred draft state kept speculation alive on the decode
+        # engine (without it the repetitive prompt would verify nothing)
+        assert router.decode.metrics["spec_calls"] > 0
+        assert router.decode.accepted_per_call() > 1.0
+    _assert_router_invariants(router, spec_k=spec_k)
+
+
+def test_disagg_priority_policy_and_migrate_batch(params):
+    """Priority traffic under a migrate_batch=1 cap: transfers trickle one
+    request per router step, in policy order, with identical tokens."""
+    rng = np.random.default_rng(7)
+    prompts = _mixed_prompts(rng)
+    prios = [0, 2, 1, 3]
+
+    single = _single(params, scheduler_policy="priority")
+    s_rids = _submit(single, prompts, priorities=prios)
+    s_outs = single.run_until_complete()
+
+    router = _disagg(params, scheduler_policy="priority", migrate_batch=1)
+    d_rids = _submit(router, prompts, priorities=prios)
+    d_outs = router.run_until_complete()
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr], (sr, s_outs[sr], d_outs[dr])
+    # the cap really bit: one request per transfer
+    n_mig = router.prefill.metrics["migrations"]
+    assert n_mig == router.stats["migrated_requests"] == len(prompts)
+    _assert_router_invariants(router)
+
+
+def test_disagg_batched_transfer_keeps_sharing(params):
+    """max_batch large enough that the sharing pair migrates in ONE
+    transfer: the shared page must be exported once and still be shared
+    (same physical page, refcount 2) on the decode side."""
+    rng = np.random.default_rng(19)
+    shared = rng.integers(2, 64, 24).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(2, 64, 5).astype(np.int32)]),
+               np.concatenate([shared, rng.integers(2, 64, 9).astype(np.int32)])]
+
+    single = _single(params, max_batch=4, prefill_token_budget=128)
+    s_rids = _submit(single, prompts)
+    s_outs = single.run_until_complete()
+
+    router = _disagg(params, max_batch=4, prefill_token_budget=128)
+    shared_seen = []
+    orig_attach = router.decode.attach_requests
+
+    def spy(transfer):
+        orig_attach(transfer)
+        if len(transfer.records) == 2:
+            t = router.decode.alloc.tables
+            r0, r1 = transfer.rids
+            shared_seen.append(sum(1 for a, b in zip(t[r0], t[r1])
+                                   if a == b))
+    router.decode.attach_requests = spy
+    d_rids = _submit(router, prompts)
+    d_outs = router.run_until_complete()
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr]
+    assert shared_seen and shared_seen[0] >= 3, shared_seen
+    _assert_router_invariants(router)
+
+
+# ---------------------------------------------------------------------------
+# flow control: full decode pool, decode-side eviction
+# ---------------------------------------------------------------------------
+
+def test_full_decode_pool_defers_never_preempts(params):
+    """Decode pool sized for ONE resident request: migration of the rest
+    must DEFER (requests hold their pages on the prefill side) — no crash,
+    no decode-side preemption, no token divergence."""
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (30, 26, 21)]
+
+    single = _single(params, max_batch=3, num_pages=24)
+    s_rids = _submit(single, prompts)
+    s_outs = single.run_until_complete()
+
+    # 30 prompt + 8 new @ ps=8 -> 5 pages; 6-page decode pool fits one
+    router = _disagg(params, max_batch=3, num_pages=24, decode_pool_pages=6)
+    d_rids = _submit(router, prompts)
+    d_outs = router.run_until_complete(max_steps=2_000)
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr], (sr, s_outs[sr], d_outs[dr])
+    assert router.stats["deferrals"] > 0
+    assert router.decode.metrics["preemptions"] == 0, \
+        "attach pressure must defer, never evict a decode-resident request"
+    assert router.stats["bounce_backs"] == 0
+    _assert_router_invariants(router)
+
+
+def test_full_decode_pool_rejects_oversized_request(params):
+    router = _disagg(params, decode_pool_pages=2)
+    with pytest.raises(ValueError, match="decode pool"):
+        router.add_request(Request(
+            prompt=np.arange(2, 60, dtype=np.int32),
+            sampling=SamplingParams(max_new_tokens=8, eos_id=-1)))
+
+
+def test_decode_side_eviction_bounces_back(params):
+    """A decode pool that fits both prompts but NOT both decode windows
+    forces a decode-side eviction; the victim must bounce back to the
+    prefill engine (recompute mode), re-migrate, and finish with the exact
+    single-engine stream."""
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(2, 64, 16).astype(np.int32),
+               rng.integers(2, 64, 16).astype(np.int32)]
+
+    single = _single(params, page_size=4, max_len=80, num_pages=40)
+    s_rids = _submit(single, prompts, new=12)
+    s_outs = single.run_until_complete()
+
+    # 16-token prompts -> 4 pages each; 12 new tokens -> up to 7 pages each.
+    # 10 decode pages: both attach, growth collides mid-decode.
+    router = _disagg(params, page_size=4, max_len=80, num_pages=40,
+                     decode_pool_pages=10)
+    d_rids = _submit(router, prompts, new=12)
+    d_outs = router.run_until_complete(max_steps=2_000)
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr], (sr, s_outs[sr], d_outs[dr])
+    assert router.stats["bounce_backs"] > 0
+    assert router.decode.metrics["preemptions"] == \
+        router.stats["bounce_backs"]
+    # the victim migrated at least twice: initial + after recompute
+    assert router.stats["migrated_requests"] > len(prompts)
+    _assert_router_invariants(router)
+
+
+# ---------------------------------------------------------------------------
+# preemption on the PREFILL side (pool pressure before migration)
+# ---------------------------------------------------------------------------
+
+def test_disagg_with_prefill_side_preemption(params):
+    """A prefill pool too small for all requests at once forces recompute
+    preemption BEFORE migration; streams still match the single engine run
+    with the same tight pool."""
+    rng = np.random.default_rng(31)
+    # three 30-token prompts (4 pages each) against an 8-page pool with a
+    # budget that grants two whole prompts in one step: the third grant's
+    # page growth must evict mid-prefill, on both sides of the comparison
+    prompts = [rng.integers(2, 64, 30).astype(np.int32) for _ in range(3)]
+
+    single = _single(params, num_pages=8, max_batch=3,
+                     prefill_token_budget=64)
+    s_rids = _submit(single, prompts, new=6)
+    s_outs = single.run_until_complete()
+    assert single.metrics["preemptions"] > 0, "scenario must actually evict"
+
+    router = _disagg(params, num_pages=8, max_batch=3,
+                     prefill_token_budget=64)
+    d_rids = _submit(router, prompts, new=6)
+    d_outs = router.run_until_complete(max_steps=2_000)
+
+    for sr, dr in zip(s_rids, d_rids):
+        assert s_outs[sr] == d_outs[dr], (sr, s_outs[sr], d_outs[dr])
+    assert router.prefill.metrics["preemptions"] > 0
+    _assert_router_invariants(router)
+
+
+# ---------------------------------------------------------------------------
+# two-mesh variant: CI multi-device lane (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import (Config, ISOConfig, ModelConfig, ParallelConfig,
+                          ServingConfig)
+from repro.launch.mesh import disagg_meshes
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.disagg import DisaggRouter
+from repro.serving.requests import SamplingParams
+
+key = jax.random.PRNGKey(0)
+iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=8, chunk_align=8)
+cfg = ModelConfig(name="t-dense", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  qk_norm=True)
+sp = lambda n=6: SamplingParams(max_new_tokens=n, eos_id=-1)
+rng = np.random.default_rng(3)
+shared = rng.integers(2, 64, 24).astype(np.int32)
+# the sharing pair FIRST: both admit together, so the donor is still
+# resident on the prefill engine when the sharee's first grant runs
+# (a migrated donor's pages leave the prefill pool with it)
+prompts = [np.concatenate([shared, rng.integers(2, 64, 9).astype(np.int32)]),
+           np.concatenate([shared, rng.integers(2, 64, 5).astype(np.int32)]),
+           rng.integers(2, 64, 33).astype(np.int32)]
+# budget covers both sharers in ONE step: under disagg a finished donor
+# migrates (pages and all) the same step, so cross-step sharing windows
+# close — same-step packmate sharing is the one that must survive
+sv = ServingConfig(page_size=8, max_batch=2, max_len=160,
+                   prefill_token_budget=64, disagg=True)
+
+# single-device paged reference
+cfg1 = Config(model=cfg, parallel=ParallelConfig(data=1, model=1), iso=iso,
+              serving=sv)
+params1 = api.init_params(key, cfg, tp=1, dtype=jnp.float32)
+ref = PagedEngine(cfg1, params1)
+r_rids = [ref.add_request(Request(prompt=p.copy(), sampling=sp()))
+          for p in prompts]
+r_out = ref.run_until_complete()
+
+# disaggregated: prefill engine on devices[:4], decode engine on devices[4:]
+pc = ParallelConfig(data=1, model=4)
+pmesh, dmesh = disagg_meshes(pc)
+assert set(pmesh.devices.flat).isdisjoint(set(dmesh.devices.flat))
+params4 = api.init_params(key, cfg, tp=4, dtype=jnp.float32)
+router = DisaggRouter(Config(model=cfg, parallel=pc, iso=iso, serving=sv),
+                      params4, prefill_mesh=pmesh, decode_mesh=dmesh)
+d_rids = [router.add_request(Request(prompt=p.copy(), sampling=sp()))
+          for p in prompts]
+d_out = router.run_until_complete()
+for rr, dr in zip(r_rids, d_rids):
+    assert r_out[rr] == d_out[dr], (rr, r_out[rr], d_out[dr])
+assert router.stats["migrated_requests"] == len(prompts)
+assert router.prefill.metrics["prefix_shared_tokens"] > 0
+assert set(router.prefill._decode_fns) == set()
+assert set(router.decode._prefill_fns) == set()
+print("ALL_DISAGG_TP_OK")
+"""
+
+
+def test_disagg_two_meshes_subprocess():
+    res = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "ALL_DISAGG_TP_OK" in res.stdout

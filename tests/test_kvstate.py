@@ -1,0 +1,283 @@
+"""Engine-external KV state (serving/kvstate.py + kvcache serialization):
+
+  * ``PageAllocator.snapshot()/restore()`` is an exact round trip THROUGH
+    JSON — tables, lengths, refcounts and the free list (order included)
+    survive ``json.dumps``/``loads`` into a fresh allocator, and the
+    structural invariants (``check()``) hold after restore.  Pinned both on
+    a hand-built state and on random admission/grant/CoW/free walks
+    (seeded always; hypothesis when installed).
+  * ``PrefixCache.snapshot()/restore()`` round-trips the registered prompts
+    and REBUILDS the hash index (``hash(bytes)`` is process-salted, so a
+    serialized index would be garbage in the next process) — lookups after
+    restore find the same donors.
+  * ``KVPool.export_pages``/``import_pages`` move KV across pools:
+    payloads land verbatim at remapped page ids, CoW sharing structure and
+    refcounts are preserved, the source pool is untouched, the target's
+    scratch page stays all-(-1), and an import that doesn't fit raises
+    ``OutOfPages`` atomically (target bit-identical afterwards).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.serving.kvcache import OutOfPages, PageAllocator, PrefixCache
+from repro.serving.kvstate import KVPool
+
+CFG = tiny_dense(vocab_size=64)
+
+
+def _alloc_state(a: PageAllocator):
+    return (dict(a.tables), dict(a.lengths), dict(a.refcount),
+            list(a._free), set(a._free_set))
+
+
+def _walk_step(a: PageAllocator, rng) -> None:
+    """One random allocator op: grow+commit / free / adopt / CoW."""
+    op = rng.integers(0, 4)
+    live = sorted(a.tables)
+    if op == 0:
+        rid = int(rng.integers(0, 6))
+        try:
+            want = a.tokens(rid) + int(rng.integers(1, 9))
+            a.ensure(rid, want)
+            a.commit(rid, want - a.tokens(rid))
+        except OutOfPages:
+            pass
+    elif op == 1 and live:
+        a.free(int(rng.choice(live)))
+    elif op == 2 and live:
+        donor = int(rng.choice(live))
+        rid = 100 + int(rng.integers(0, 1000))
+        if rid not in a.tables and a.tables[donor]:
+            k = int(rng.integers(1, len(a.tables[donor]) + 1))
+            a.adopt(rid, a.tables[donor][:k],
+                    min(a.tokens(donor), k * a.page_size))
+    elif op == 3 and live:
+        rid = int(rng.choice(live))
+        if a.tables[rid]:
+            try:
+                a.cow(rid, int(rng.integers(0, len(a.tables[rid]))))
+            except OutOfPages:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator snapshot/restore
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_exact_through_json():
+    a = PageAllocator(num_pages=12, page_size=4)
+    a.ensure(1, 7)
+    a.commit(1, 7)
+    a.ensure(2, 10)
+    a.commit(2, 10)
+    a.adopt(3, a.tables[1][:1], 4)            # shared page: refcount 2
+    a.cow(3, 0)                               # ...then diverged
+    a.free(2)
+    snap = json.loads(json.dumps(a.snapshot()))
+    b = PageAllocator(num_pages=12, page_size=4)
+    b.restore(snap)
+    assert _alloc_state(b) == _alloc_state(a)
+    b.check()
+
+
+def test_restore_preserves_free_list_order():
+    """A restored allocator must hand out pages in the identical sequence —
+    free-list ORDER is state, not just the free set (the differential
+    batteries rely on allocation determinism)."""
+    a = PageAllocator(num_pages=10, page_size=4)
+    a.ensure(1, 12)
+    a.commit(1, 12)
+    a.free(1)                                 # free list now has history
+    b = PageAllocator(num_pages=10, page_size=4)
+    b.restore(json.loads(json.dumps(a.snapshot())))
+    for rid in (7, 8):
+        a.ensure(rid, 8)
+        b.ensure(rid, 8)
+        assert a.tables[rid] == b.tables[rid]
+
+
+def test_restore_rejects_geometry_mismatch():
+    a = PageAllocator(num_pages=8, page_size=4)
+    snap = a.snapshot()
+    with pytest.raises(AssertionError):
+        PageAllocator(num_pages=9, page_size=4).restore(snap)
+    with pytest.raises(AssertionError):
+        PageAllocator(num_pages=8, page_size=8).restore(snap)
+
+
+def test_random_walk_round_trip_seeded():
+    """400-op random walk; after every 25 ops the snapshot restores into a
+    fresh allocator exactly and the invariants hold."""
+    rng = np.random.default_rng(5)
+    a = PageAllocator(num_pages=12, page_size=4)
+    for i in range(400):
+        _walk_step(a, rng)
+        if i % 25 == 0:
+            a.check()
+            b = PageAllocator(num_pages=12, page_size=4)
+            b.restore(json.loads(json.dumps(a.snapshot())))
+            assert _alloc_state(b) == _alloc_state(a)
+
+
+def test_random_walk_round_trip_hypothesis():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(5, 80))
+    def walk(seed, n_ops):
+        rng = np.random.default_rng(seed)
+        a = PageAllocator(num_pages=10, page_size=4)
+        for _ in range(n_ops):
+            _walk_step(a, rng)
+        a.check()
+        b = PageAllocator(num_pages=10, page_size=4)
+        b.restore(json.loads(json.dumps(a.snapshot())))
+        assert _alloc_state(b) == _alloc_state(a)
+        b.check()
+        # no double-free latent in the restored state: freeing every live
+        # request drains back to a full free list
+        for rid in sorted(b.tables):
+            b.free(rid)
+        assert b.used_pages == 0 and b.free_pages == b.num_pages
+
+    walk()
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache snapshot/restore
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_round_trip_rebuilds_index():
+    ps = 4
+    a = PageAllocator(num_pages=12, page_size=ps)
+    pc = PrefixCache(ps)
+    prompt = np.arange(2, 14, dtype=np.int32)          # 12 tokens = 3 pages
+    a.ensure(1, len(prompt))
+    a.commit(1, len(prompt))
+    pc.register(1, prompt)
+    pc2 = PrefixCache(ps)
+    pc2.restore(json.loads(json.dumps(pc.snapshot())))
+    probe = np.concatenate([prompt[:8], np.asarray([50, 51], np.int32)])
+    hit = pc.lookup(probe, a, exclude=2)
+    hit2 = pc2.lookup(probe, a, exclude=2)
+    assert hit is not None and hit2 is not None
+    assert hit[0] == hit2[0] == 1 and hit[1] == hit2[1]
+
+
+# ---------------------------------------------------------------------------
+# KVPool export/import
+# ---------------------------------------------------------------------------
+
+def _pool(num_pages=8, ps=4):
+    return KVPool.create(CFG, num_pages, ps, dtype=jnp.float32)
+
+
+def _fill(pool, rid, n_tokens, rng):
+    """Allocate + commit and write recognizable payloads into rid's pages."""
+    pool.alloc.ensure(rid, n_tokens)
+    pool.alloc.commit(rid, n_tokens)
+    arrays = dict(pool.kv.arrays)
+    pgs = jnp.asarray(pool.alloc.tables[rid], jnp.int32)
+    arrays["k"] = tuple(
+        k.at[:, pgs].set(jnp.asarray(
+            rng.standard_normal((k.shape[0], len(pool.alloc.tables[rid]))
+                                + k.shape[2:]), k.dtype))
+        for k in arrays["k"])
+    arrays["v"] = tuple(
+        v.at[:, pgs].set(jnp.asarray(
+            rng.standard_normal((v.shape[0], len(pool.alloc.tables[rid]))
+                                + v.shape[2:]), v.dtype))
+        for v in arrays["v"])
+    pos = np.full((len(pool.alloc.tables[rid]), pool.page_size), -1, np.int32)
+    flat = np.arange(n_tokens)
+    pos[flat // pool.page_size, flat % pool.page_size] = flat
+    arrays["pos"] = arrays["pos"].at[pgs].set(jnp.asarray(pos))
+    pool.kv.arrays = arrays
+
+
+def _rid_payload(pool, rid):
+    """(k, v, pos) host arrays gathered through rid's block table."""
+    pgs = np.asarray(pool.alloc.tables[rid])
+    return ([np.asarray(k[:, pgs]) for k in pool.kv.arrays["k"]],
+            [np.asarray(v[:, pgs]) for v in pool.kv.arrays["v"]],
+            np.asarray(pool.kv.arrays["pos"])[pgs])
+
+
+def test_export_import_round_trip_payloads_and_sharing():
+    rng = np.random.default_rng(3)
+    src = _pool()
+    _fill(src, 1, 7, rng)
+    # rid 2 shares rid 1's first page (CoW prefix sharing), then has its own
+    src.alloc.adopt(2, src.alloc.tables[1][:1], 4)
+    src.alloc.ensure(2, 6)
+    src.alloc.commit(2, 2)
+    before = _alloc_state(src.alloc)
+    kv_before = [np.asarray(k) for k in src.kv.arrays["k"]]
+
+    blob = src.export_pages([1, 2])
+    # shared page exported ONCE: 2 (rid1) + 1 extra (rid2) distinct pages
+    assert blob["n_pages"] == len({*src.alloc.tables[1],
+                                   *src.alloc.tables[2]})
+    # source untouched by export
+    assert _alloc_state(src.alloc) == before
+    for k0, k1 in zip(kv_before, src.kv.arrays["k"]):
+        assert np.array_equal(k0, np.asarray(k1))
+
+    dst = _pool()
+    dst.import_pages(blob)
+    # sharing preserved: same page object backs both tables' first block
+    assert dst.alloc.tables[1][0] == dst.alloc.tables[2][0]
+    assert dst.alloc.refcount[dst.alloc.tables[1][0]] == 2
+    assert dst.alloc.tokens(1) == 7 and dst.alloc.tokens(2) == 6
+    dst.alloc.check()
+    # payloads land verbatim at the remapped ids
+    for rid in (1, 2):
+        sk, sv, sp = _rid_payload(src, rid)
+        dk, dv, dp = _rid_payload(dst, rid)
+        for a, b in zip(sk, dk):
+            assert np.array_equal(a, b)
+        for a, b in zip(sv, dv):
+            assert np.array_equal(a, b)
+        assert np.array_equal(sp, dp)
+    # scratch page still fully invalid on the target
+    assert np.all(np.asarray(dst.kv.arrays["pos"])[dst.kv.scratch_page] == -1)
+
+
+def test_import_out_of_pages_is_atomic():
+    rng = np.random.default_rng(4)
+    src = _pool(num_pages=8)
+    _fill(src, 1, 13, rng)                     # 4 pages
+    blob = src.export_pages([1])
+
+    dst = _pool(num_pages=8)
+    _fill(dst, 9, 21, rng)                     # 6 pages -> only 2 free
+    before = _alloc_state(dst.alloc)
+    pos_before = np.asarray(dst.kv.arrays["pos"])
+    with pytest.raises(OutOfPages):
+        dst.import_pages(blob)
+    assert _alloc_state(dst.alloc) == before
+    assert np.array_equal(np.asarray(dst.kv.arrays["pos"]), pos_before)
+    # after the blocker clears, the SAME transfer imports cleanly
+    dst.scrub(dst.alloc.free(9))
+    dst.import_pages(blob)
+    assert dst.alloc.tokens(1) == 13
+    dst.alloc.check()
+
+
+def test_import_rejects_live_rid_and_page_size_mismatch():
+    rng = np.random.default_rng(6)
+    src = _pool()
+    _fill(src, 1, 5, rng)
+    blob = src.export_pages([1])
+    dst = _pool()
+    _fill(dst, 1, 5, rng)                      # rid 1 already live
+    with pytest.raises(AssertionError):
+        dst.import_pages(blob)
+    other = KVPool.create(CFG, 8, 8, dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        other.import_pages(blob)
