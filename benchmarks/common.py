@@ -67,6 +67,17 @@ HEADLINE_FIELDS: Dict[str, Dict[str, Any]] = {
         "rel_tol": 1.0, "abs_tol": 15.0},
     # informational (better=None): latency/occupancy depend on runner load;
     # recorded per push for the trajectory, never gated
+    "ladder_speedup": {
+        # sequential/ladder decode-step ratio from the schedule probe; a
+        # PROXY on the standard-wired bench engine (the probe times the
+        # ladder-rewired twin at identical shapes) and noise-bound on a CPU
+        # runner where there is no collective to hide — informational until
+        # a multi-device perf lane exists to gate it
+        "row": "engine/observability", "key": "ladder_speedup",
+        "cast": float, "default": 0.0, "better": None},
+    "overlap_efficiency_ladder": {
+        "row": "engine/observability", "key": "overlap_efficiency_ladder",
+        "cast": float, "default": 0.0, "better": None},
     "ttft_p50": {
         "row": "engine/observability", "key": "ttft_p50",
         "cast": float, "default": 0.0, "better": None},

@@ -396,5 +396,7 @@ def _obs_section(cfg, iso2, params, emit):
          f"ttft_p99={ttft.percentile(0.99):.4f};"
          f"pool_occupancy_peak={eng_on.metrics['peak_used_pages']};"
          f"overlap_efficiency={ovl['overlap_efficiency']:.4f};"
+         f"ladder_speedup={ovl['ladder_speedup']:.4f};"
+         f"overlap_efficiency_ladder={ovl['overlap_efficiency_ladder']:.4f};"
          f"exposed_comm_ms={(-1.0 if exp is None else exp * 1e3):.3f};"
          f"trace_events={len(eng_on.trace.events())};tokens_equal=True")

@@ -72,6 +72,15 @@ class ModelConfig:
     encoder_frames: int = 1500       # stub frontend sequence length
     # vlm
     num_patches: int = 0             # stub vision tokens prepended to text
+    # residual-stream wiring: "standard" (block k reads the residual as of
+    # block k-1) or "ladder" (Ladder-residual, PAPERS.md arXiv 2501.06589:
+    # stage k reads the residual as of stage k-2, so stage k-1's TP
+    # all-reduce completes behind stage k's compute).  Ladder is a DIFFERENT
+    # model function — a train-from-scratch/adapted architecture, not a
+    # schedule — and applies to prefill and decode consistently
+    # (core/iso.run_layer ladder=True / run_stack_decode_ladder).  Build
+    # ladder twins of registered configs with ``ladder_variant``.
+    residual_wiring: str = "standard"
     source: str = ""                 # citation bracket from the assignment
 
     @property
@@ -225,6 +234,22 @@ class ServingConfig:
     decode_kv_splits: int = 0
     decode_split_factor: int = 4     # S chosen when auto mode decides to split
     decode_split_min_pages: int = 16 # auto splits only at/past this page depth
+    # decode collective schedule (core/iso.py).  "auto": batch_split under a
+    # mesh with decode_overlap on (max_batch >= 2), sequential otherwise.
+    # Explicit values force one of "sequential" | "batch_split" |
+    # "cross_block" (deferred reduces resolve at the next stage top, riding
+    # the scan carry across block boundaries — token-identical to
+    # sequential, built for the latency-hiding scheduler below).  Ladder-
+    # wired configs (ModelConfig.residual_wiring="ladder") ignore this: the
+    # wiring fixes the driver, and ``decode_overlap`` picks deferred vs
+    # immediate collectives inside it.
+    decode_schedule: str = "auto"
+    # append the XLA async-collective / latency-hiding-scheduler flag recipe
+    # (SNIPPETS.md set_platform) to XLA_FLAGS via
+    # launch/mesh.enable_latency_hiding.  ONLY effective when set before the
+    # first jax backend init — launch/serve.py applies it right after arg
+    # parsing; engines cannot apply it retroactively.
+    latency_hiding: bool = False
     # observability (src/repro/obs): the typed metrics registry is ALWAYS on
     # (counter bumps are host-side nanoseconds); this flag gates the
     # structured trace-event ring (scheduler/allocator/engine narration,
@@ -343,6 +368,21 @@ INPUT_SHAPES: Dict[str, InputShape] = {
     "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
     "long_500k": InputShape("long_500k", 524288, 1, "decode"),
 }
+
+
+def ladder_variant(cfg: ModelConfig, name: str = "") -> ModelConfig:
+    """Ladder-residual twin of a standard-wired config: same shapes and
+    parameter layout, residual stream rewired (``residual_wiring="ladder"``)
+    so each stage's TP all-reduce hides behind the next stage's compute.
+    Attention-style stacks only — every stage must end in a reduce
+    (models/blocks.pattern_all_reduces)."""
+    from repro.models.blocks import pattern_all_reduces
+    assert cfg.residual_wiring == "standard", cfg.name
+    assert all(k in (BLOCK_ATTN_MLP, BLOCK_ATTN_MOE) for k in
+               cfg.block_pattern) and pattern_all_reduces(cfg.block_pattern), \
+        f"ladder wiring needs an all-reducing attention stack: {cfg.name}"
+    return dataclasses.replace(cfg, name=name or f"ladder-{cfg.name}",
+                               residual_wiring="ladder")
 
 
 # ---------------------------------------------------------------------------

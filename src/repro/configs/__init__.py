@@ -1,7 +1,8 @@
 """Assigned-architecture registry: importing this package registers every config.
 
 10 assigned archs (public pool, citations in each file) + the paper's own two
-evaluation models (30B MHA / 70B GQA dense, Table 1).
+evaluation models (30B MHA / 70B GQA dense, Table 1) + ladder-residual twins
+of the dense serving configs (configs/ladder.py).
 """
 from repro.configs import (  # noqa: F401
     codeqwen1_5_7b,
@@ -17,6 +18,10 @@ from repro.configs import (  # noqa: F401
     whisper_medium,
     xlstm_350m,
 )
+# after the dense bases above: each ladder twin re-derives its base config
+from repro.configs import ladder  # noqa: E402,F401
+
+LADDER = ["ladder-qwen3-4b", "ladder-qwen3-8b", "ladder-paper-30b"]
 
 ASSIGNED = [
     "granite-moe-3b-a800m", "qwen3-4b", "hymba-1.5b", "kimi-k2-1t-a32b",

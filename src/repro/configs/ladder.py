@@ -1,0 +1,33 @@
+"""Ladder-residual twins of registered dense configs (PAPERS.md,
+arXiv 2501.06589).
+
+Same shapes, parameter layout and head counts as the base config; only the
+residual-stream wiring differs (``ModelConfig.residual_wiring="ladder"``):
+stage k reads the residual as of stage k-2, so stage k-1's TP all-reduce
+completes behind stage k's compute (core/iso.run_layer ``ladder=True`` for
+prefill, ``run_stack_decode_ladder`` for decode).  A ladder config is a
+DIFFERENT model function from its base — a train-from-scratch/adapted
+architecture — so the differential battery (tests/test_ladder.py) proves
+schedule-equality (deferred vs immediate collectives of the SAME ladder
+function), not equality to the standard wiring.
+
+The twin of ``ladder-<name>`` is ``<name>``: strip the prefix to recover the
+standard-residual config with identical shapes.
+"""
+from repro.config import ladder_variant, register
+from repro.configs import paper_30b, qwen3_4b, qwen3_8b
+
+
+@register("ladder-qwen3-4b")
+def config_ladder_qwen3_4b():
+    return ladder_variant(qwen3_4b.config())
+
+
+@register("ladder-qwen3-8b")
+def config_ladder_qwen3_8b():
+    return ladder_variant(qwen3_8b.config())
+
+
+@register("ladder-paper-30b")
+def config_ladder_paper_30b():
+    return ladder_variant(paper_30b.config())

@@ -50,10 +50,26 @@ def _init_seq_state(kind: str) -> Any:
 def run_layer(p_layer, kind: str, state: PipeState, sctx: StageCtx,
               ctx: AxisCtx, layer_cache=None,
               pattern_ends_reduce: bool = True,
-              starts: Sequence[int] = (0,)) -> Tuple[PipeState, Dict]:
-    """Run one layer over all chunks in ISO order; returns extras for caches."""
+              starts: Sequence[int] = (0,),
+              ladder: bool = False) -> Tuple[PipeState, Dict]:
+    """Run one layer over all chunks in ISO order; returns extras for caches.
+
+    ``ladder=True`` switches to the Ladder-residual wiring (PAPERS.md,
+    arXiv 2501.06589): the pre-resolve branch below is skipped, so every
+    stage computes on the residual stream as of TWO stages ago — stage k's
+    input is ``x + sum_{j<=k-2} AR(out_j)`` and ``AR(out_{k-1})`` completes
+    behind stage k's compute (the existing post-compute resolve).  This is a
+    DIFFERENT model function from the standard wiring, not a schedule: it
+    must be selected by the config (``ModelConfig.residual_wiring``) for
+    prefill and decode consistently.  Ladder runs single-chunk — the lagged
+    residual already supplies the overlap window, and an ISO chunk
+    interleave would resolve each chunk's pending during the *other* chunk's
+    unit, silently restoring the standard wiring per chunk."""
     stages = BLOCK_STAGES[kind]
     n_chunks = len(state.xs)
+    assert not ladder or n_chunks == 1, "ladder wiring runs single-chunk"
+    assert not ladder or all(r for _, r in stages), \
+        "ladder wiring needs every stage reducing (attention-style blocks)"
     xs = list(state.xs)
     pend_partial, pend_base = state.pend_partial, state.pend_base
     pend_chunk = n_chunks - 1                 # invariant at layer entry
@@ -76,8 +92,10 @@ def run_layer(p_layer, kind: str, state: PipeState, sctx: StageCtx,
             # baseline (1 chunk) — or any unit whose own chunk still owes a
             # residual: resolve the pending collective FIRST (serial schedule,
             # paper Figure 1(a)).  With >=2 chunks this branch never triggers:
-            # the interleave resolves (s-1,c) during unit (s-1,c+1).
-            if pend_partial is not None and pend_chunk == c:
+            # the interleave resolves (s-1,c) during unit (s-1,c+1).  Ladder
+            # wiring skips it on purpose: the stage computes on the lagged
+            # residual and the pending resolves AFTER, behind this compute.
+            if not ladder and pend_partial is not None and pend_chunk == c:
                 pend = psum_start(pend_partial, ctx)
                 reduced, _ = psum_wait(pend)
                 xs[pend_chunk] = pend_base + reduced
@@ -157,7 +175,7 @@ def init_pipe_state(x_chunks: Sequence[jnp.ndarray], pattern: Sequence[str]
 def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
                       starts: Sequence[int], sctx: StageCtx, ctx: AxisCtx,
                       layer_statics=None, remat: bool = False,
-                      unroll: bool = False):
+                      unroll: bool = False, ladder: bool = False):
     """Scan over pattern periods.
 
     params_periods: pytree list, one entry per position in ``pattern``; each leaf
@@ -187,7 +205,7 @@ def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
             state, extras = run_layer(
                 p_layers[i], kind, state, sctx, ctx, layer_cache=cache_i,
                 pattern_ends_reduce=_kind_reduces_last(pattern[-1]),
-                starts=starts)
+                starts=starts, ladder=ladder)
             extras_list.append(extras)
         return (state.xs, state.pend_partial, state.pend_base), tuple(extras_list)
 
@@ -200,60 +218,191 @@ def run_stack_prefill(params_periods, pattern: Sequence[str], x_chunks,
     return final, extras
 
 
-def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
-                     sctx: StageCtx, ctx: AxisCtx, unroll: bool = False):
-    """Decode (x: (B,K,D), K=1 plain / K>1 speculative verify): sequential
-    collectives (paper: overlap doesn't pay at decode), cache read+update per
-    layer.  caches: per-position pytrees stacked over periods, each with
-    optional k/v (+pos handled by caller), ssm/mlstm/slstm states, cross_k/v.
-    ``sctx.kv_splits`` > 1 runs each paged attention's page walk as that many
-    split-KV spans (kernels/flash_decode.py) — static, so it is part of the
-    caller's compile key."""
-    from repro.core.overlap import psum_now
-    n_pos = len(pattern)
+def _apply_decode_cache_update(new_cache, extras, sctx: StageCtx) -> None:
+    """Fold one stage's decode extras into its cache (in place).
 
-    def period_body(x, scanned):
+    Shared by every decode driver so paged scatter / dense ring insert /
+    recurrent-state advance stay byte-identical across schedules: page pools
+    (``k_pages``/``v_pages``) take the window's KV through the block tables,
+    dense ring caches insert the K new tokens at ``lengths % ring``, and
+    recurrent states (ssm/mlstm/slstm) are replaced wholesale."""
+    if new_cache is None:
+        return
+    if "kv" in extras and "k_pages" in new_cache:
+        _scatter_token_to_pages(new_cache, extras["kv"], sctx.lengths,
+                                sctx.block_tables, sctx.decode_mask)
+    elif "kv" in extras and "k" in new_cache:
+        # insert the K new tokens (K=1 decode / K>1 speculative verify;
+        # multi-token inserts must not straddle the ring boundary — the
+        # engine aligns slots)
+        k_new, v_new = extras["kv"]
+        K = k_new.shape[1]
+        slot = (sctx.lengths % new_cache["k"].shape[1]).astype(jnp.int32)
+        upd = lambda c, n, s: jax.vmap(
+            lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+                cb, nb.astype(cb.dtype), (sb, 0, 0)))(c, n, s)
+        new_cache["k"] = upd(new_cache["k"], k_new, slot)
+        new_cache["v"] = upd(new_cache["v"], v_new, slot)
+        if "pos" in new_cache:
+            new_cache["pos"] = jax.vmap(
+                lambda pb, sb, lb: jax.lax.dynamic_update_slice(
+                    pb, (lb + jnp.arange(K)).astype(pb.dtype),
+                    (sb,)))(new_cache["pos"], slot, sctx.lengths)
+    for sk in ("ssm", "mlstm", "slstm"):
+        if sk in extras:
+            new_cache[sk] = extras[sk]
+
+
+def run_stack_decode(params_periods, pattern: Sequence[str], x, caches,
+                     sctx: StageCtx, ctx: AxisCtx, unroll: bool = False,
+                     schedule: str = "sequential"):
+    """Decode (x: (B,K,D), K=1 plain / K>1 speculative verify), cache
+    read+update per layer.  caches: per-position pytrees stacked over
+    periods, each with optional k/v (+pos handled by caller),
+    ssm/mlstm/slstm states, cross_k/v.  ``sctx.kv_splits`` > 1 runs each
+    paged attention's page walk as that many split-KV spans
+    (kernels/flash_decode.py) — static, so it is part of the caller's
+    compile key.
+
+    ``schedule``:
+
+    * ``"sequential"`` — immediate ``psum_now`` per reducing stage (paper:
+      batch-split overlap doesn't pay at decode without a second chunk).
+    * ``"cross_block"`` — every reduce is DEFERRED and resolves at the top
+      of the next stage, riding the scan carry across the block/period
+      boundary.  The KV page scatter (dataflow-independent of the reduce)
+      lands inside the start→wait window, and the window around the
+      trailing reduce spans the next period's parameter gathers.  Token
+      streams are bit-identical to sequential at fp32 (same reduces, same
+      residual adds, in the same order — the barrier is an identity; at
+      bf16 the restructured graph may fuse differently and round one ulp
+      apart, as any schedule change does); the win is structural: each
+      all-reduce becomes an independent schedulable unit
+      XLA's latency-hiding scheduler (launch/mesh.enable_latency_hiding)
+      can start early and complete late.  Without those flags it is a
+      numeric and scheduling no-op.
+    """
+    from repro.core.overlap import psum_now
+    assert schedule in ("sequential", "cross_block"), schedule
+    defer = schedule == "cross_block"
+    ends_reduce = _kind_reduces_last(pattern[-1])
+
+    def resolve(x, pend):
+        if pend is None:
+            return x
+        reduced, _ = psum_wait(psum_start(pend, ctx))
+        return x + reduced
+
+    def period_body(carry, scanned):
+        x, pend = carry if defer else (carry, None)
         p_layers, caches_in = scanned
         caches_out = []
         for i, kind in enumerate(pattern):
             cache_i = caches_in[i]
             new_cache = dict(cache_i) if cache_i is not None else None
             for fn, reduces in BLOCK_STAGES[kind]:
+                # cross-block: the previous stage's pending resolves HERE,
+                # after a window that covered the previous stage's KV
+                # scatter (and, across the period boundary, the scan's
+                # parameter gathers for this period)
+                x = resolve(x, pend)
+                pend = None
                 out, _, extras = fn(p_layers[i], x, 0, _init_seq_state(kind),
                                     sctx, cache_i)
-                if reduces:
-                    out = psum_now(out, ctx)
-                x = x + out
-                if "kv" in extras and new_cache is not None \
-                        and "k_pages" in new_cache:
-                    _scatter_token_to_pages(new_cache, extras["kv"],
-                                            sctx.lengths, sctx.block_tables,
-                                            sctx.decode_mask)
-                elif "kv" in extras and new_cache is not None and "k" in new_cache:
-                    # insert the K new tokens (K=1 decode / K>1 speculative
-                    # verify; multi-token inserts must not straddle the ring
-                    # boundary — the engine aligns slots)
-                    k_new, v_new = extras["kv"]
-                    K = k_new.shape[1]
-                    slot = (sctx.lengths % new_cache["k"].shape[1]).astype(jnp.int32)
-                    upd = lambda c, n, s: jax.vmap(
-                        lambda cb, nb, sb: jax.lax.dynamic_update_slice(
-                            cb, nb.astype(cb.dtype), (sb, 0, 0)))(c, n, s)
-                    new_cache["k"] = upd(new_cache["k"], k_new, slot)
-                    new_cache["v"] = upd(new_cache["v"], v_new, slot)
-                    if "pos" in new_cache:
-                        new_cache["pos"] = jax.vmap(
-                            lambda pb, sb, lb: jax.lax.dynamic_update_slice(
-                                pb, (lb + jnp.arange(K)).astype(pb.dtype),
-                                (sb,)))(new_cache["pos"], slot, sctx.lengths)
-                for sk in ("ssm", "mlstm", "slstm"):
-                    if sk in extras and new_cache is not None:
-                        new_cache[sk] = extras[sk]
+                if reduces and defer:
+                    pend = out                      # defer past the scatter
+                elif reduces:
+                    x = x + psum_now(out, ctx)
+                else:
+                    x = x + out
+                _apply_decode_cache_update(new_cache, extras, sctx)
             caches_out.append(new_cache)
+        if defer:
+            assert (pend is not None) == ends_reduce
+            return (x, pend), tuple(caches_out)
         return x, tuple(caches_out)
 
-    x, new_caches = jax.lax.scan(period_body, x, (params_periods, caches),
-                                 unroll=unroll or 1)
+    if defer and ends_reduce:
+        # zero pending: the first period's first resolve is an exact no-op
+        carry0 = (x, jnp.zeros_like(x))
+    elif defer:
+        carry0 = (x, None)
+    else:
+        carry0 = x
+    carry, new_caches = jax.lax.scan(period_body, carry0,
+                                     (params_periods, caches),
+                                     unroll=unroll or 1)
+    if defer:
+        x, pend = carry
+        x = resolve(x, pend)
+    else:
+        x = carry
+    return x, new_caches
+
+
+def run_stack_decode_ladder(params_periods, pattern: Sequence[str], x, caches,
+                            sctx: StageCtx, ctx: AxisCtx,
+                            unroll: bool = False, defer: bool = True):
+    """Ladder-residual decode (PAPERS.md, arXiv 2501.06589).
+
+    Stage k consumes the residual stream as of stage k-2:
+
+        input_k = x_emb + sum_{j <= k-2} AR(out_j)
+
+    so ``AR(out_{k-1})`` is dataflow-independent of stage k's compute and
+    completes behind it — across block AND period boundaries, since the
+    pending partial rides the scan carry.  Unlike the batch-split schedule
+    this needs no second batch half (works at B=1) and no sequence chunk:
+    the lag IS the overlap window.
+
+    This is a different model function from the standard wiring (the RMSNorm
+    between stages is nonlinear, so the one-stage lag cannot be folded
+    away); it must be selected by the config (``ModelConfig.residual_wiring
+    = "ladder"``) consistently for prefill (run_layer ``ladder=True``) and
+    decode, or preemption-recompute would diverge from the decode stream.
+
+    ``defer=False`` is the schedule-differential twin: the SAME ladder
+    function with every collective resolved immediately (``psum_now``).
+    Deferred vs immediate is bit-identical at fp32 — same reduces, same
+    residual adds, same order; the barrier is an identity — which is what
+    tests/test_ladder.py pins.  Works on paged and dense ring caches (the
+    cache fold is shared with ``run_stack_decode``).
+    """
+    from repro.core.overlap import psum_now
+    for kind in pattern:
+        assert all(r for _, r in BLOCK_STAGES[kind]), \
+            "ladder wiring needs every stage reducing (attention-style blocks)"
+
+    def period_body(carry, scanned):
+        x, pend = carry
+        p_layers, caches_in = scanned
+        caches_out = []
+        for i, kind in enumerate(pattern):
+            cache_i = caches_in[i]
+            new_cache = dict(cache_i) if cache_i is not None else None
+            for fn, reduces in BLOCK_STAGES[kind]:
+                # compute on the LAGGED residual (excludes the pending reduce)
+                out, _, extras = fn(p_layers[i], x, 0, _init_seq_state(kind),
+                                    sctx, cache_i)
+                # resolve the previous stage's collective behind this compute
+                if defer:
+                    reduced, (out,) = psum_wait(psum_start(pend, ctx), (out,))
+                else:
+                    reduced = psum_now(pend, ctx)
+                x = x + reduced
+                # the scatter sits inside the NEW pending's window (it
+                # resolves during the next stage's compute)
+                _apply_decode_cache_update(new_cache, extras, sctx)
+                pend = out
+            caches_out.append(new_cache)
+        return (x, pend), tuple(caches_out)
+
+    # zero pending: the first stage's resolve is an exact no-op (x += psum(0))
+    carry0 = (x, jnp.zeros_like(x))
+    (x, pend), new_caches = jax.lax.scan(period_body, carry0,
+                                         (params_periods, caches),
+                                         unroll=unroll or 1)
+    x = x + psum_now(pend, ctx)               # trailing flush
     return x, new_caches
 
 
@@ -321,7 +470,13 @@ def run_stack_decode_overlap(params_periods, pattern: Sequence[str], x, caches,
     from dataclasses import replace as _dc_replace
 
     B = x.shape[0]
-    assert B >= 2, "batch-split decode needs at least 2 requests"
+    if B < 2:
+        # a single resident request has no second half to overlap with —
+        # degrade to the sequential schedule instead of crashing (the
+        # engine normally falls back before reaching here; this keeps
+        # direct callers safe too)
+        return run_stack_decode(params_periods, pattern, x, caches, sctx,
+                                ctx, unroll=unroll)
     B2 = B // 2
     bounds = ((0, B2), (B2, B))
 
@@ -361,18 +516,29 @@ def run_stack_decode_overlap(params_periods, pattern: Sequence[str], x, caches,
                     ch = _slice_cache_half(new_cache, lo, hi)
                     out, _, extras = fn(p_layers[i], xs[h], 0,
                                         _init_seq_state(kind), sctxs[h], ch)
+                    # this half's KV scatter is dataflow-independent of the
+                    # other half's pending reduce — land it BEFORE the
+                    # resolve so it sits inside the overlap window too
+                    scattered = "kv" in extras and new_cache is not None \
+                        and "k_pages" in new_cache
+                    if scattered:
+                        _scatter_token_to_pages(
+                            new_cache, extras["kv"], sctxs[h].lengths,
+                            sctxs[h].block_tables, sctxs[h].decode_mask)
                     # resolve the OTHER half's pending collective behind this
                     # half's compute (unit order of Figure 1(d))
                     if pend_partial is not None:
                         pend = psum_start(pend_partial, ctx)
-                        reduced, (out,) = psum_wait(pend, (out,))
+                        pins = (out,) + ((new_cache["k_pages"],
+                                          new_cache["v_pages"])
+                                         if scattered else ())
+                        reduced, rebound = psum_wait(pend, pins)
+                        out = rebound[0]
+                        if scattered:
+                            new_cache["k_pages"] = rebound[1]
+                            new_cache["v_pages"] = rebound[2]
                         xs[pend_h] = pend_base + reduced
                         pend_partial = pend_base = None
-                    if "kv" in extras and new_cache is not None \
-                            and "k_pages" in new_cache:
-                        _scatter_token_to_pages(
-                            new_cache, extras["kv"], sctxs[h].lengths,
-                            sctxs[h].block_tables, sctxs[h].decode_mask)
                     for sk in _BATCHED_STATE_KEYS:
                         if sk in extras and new_cache is not None:
                             state_halves[h] = state_halves[h] or {}

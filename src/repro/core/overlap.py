@@ -76,15 +76,42 @@ def _reduce(x, ctx: AxisCtx):
     return jax.lax.psum(x, ctx.tp_axis)
 
 
+@jax.custom_jvp
+def _self_barrier(x):
+    """``optimization_barrier`` on a single value, differentiation-transparent.
+
+    ``optimization_barrier`` has no JVP rule (this jaxlib), and the trailing
+    reduce of a pattern-final stage sits inside the *training* forward pass
+    too (run_stack_prefill -> flush_pending).  The barrier only pins the
+    forward schedule; the tangent/cotangent of an identity is the identity,
+    so differentiation passes through unbarriered."""
+    return jax.lax.optimization_barrier((x,))[0]
+
+
+@_self_barrier.defjvp
+def _self_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _self_barrier(x), t
+
+
 def psum_wait(pend: Pending, overlap_outputs: Sequence = ()) -> Tuple:
     """Complete the collective; pin it against the overlap work.
 
     Returns (reduced, rebound_overlap_outputs).  Downstream code must use the
     rebound versions (see module docstring).
+
+    With no overlap outputs the reduce is still SELF-barriered (unless the
+    ctx is a no-op): a bare trailing ``lax.psum`` is fair game for XLA's
+    all-reduce combiner/motion passes, which may merge it with a neighbouring
+    collective and re-serialize a schedule the caller deliberately staged
+    (e.g. the cross-block decode pending that resolves at the next stage
+    top).  The barrier keeps each reduce an independent schedulable unit.
     """
     reduced = _reduce(pend.partial, pend.ctx)
     if not overlap_outputs:
-        return reduced, ()
+        if pend.noop:
+            return reduced, ()            # identity reduce: nothing to pin
+        return _self_barrier(reduced), ()
     flat, tree = jax.tree_util.tree_flatten(tuple(overlap_outputs))
     pinned = jax.lax.optimization_barrier((reduced, *flat))
     return pinned[0], jax.tree_util.tree_unflatten(tree, list(pinned[1:]))

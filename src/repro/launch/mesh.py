@@ -2,12 +2,74 @@
 jax device state — required by the dry-run's XLA_FLAGS bootstrap ordering."""
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax
 
 from repro import compat
 from repro.config import ParallelConfig
+
+# The async-collective recipe: make each all-reduce an independently
+# schedulable unit and let the latency-hiding scheduler start it early /
+# complete it late.  The deferred decode schedules (core/iso.py
+# ``cross_block`` and the ladder driver) open the start→wait window; these
+# flags are what lets the compiler actually fill it on GPU backends.  On
+# TPU the latency-hiding scheduler is the default.  NOT every build
+# registers every flag (XLA aborts at backend init on an unknown flag —
+# e.g. CPU-only jaxlibs drop the two async-stream flags), so
+# ``enable_latency_hiding`` probes each one in a subprocess first and only
+# applies the accepted subset.
+LATENCY_HIDING_XLA_FLAGS = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def _flags_accepted(flags, timeout: float = 120.0) -> bool:
+    """True iff this install's XLA parses ``flags`` (throwaway subprocess —
+    XLA aborts the whole process on an unknown flag, so probing in-process
+    would kill the caller; flag registration also varies per XLA release,
+    e.g. async collectives became default and lost their flag)."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = " ".join(
+        filter(None, [env.get("XLA_FLAGS", ""), *flags]))
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", "import jax; jax.devices()"],
+            env=env, capture_output=True, timeout=timeout)
+        return res.returncode == 0
+    except Exception:
+        return False
+
+
+def enable_latency_hiding() -> bool:
+    """Append the async-collective XLA flags to ``os.environ["XLA_FLAGS"]``.
+
+    MUST run before the first jax backend touch (first jax.devices() /
+    make_mesh / jit call) — XLA reads the env once at backend init; that is
+    why this module keeps device state out of import time.  Idempotent: a
+    flag already present (either value) is left alone so explicit user
+    overrides win.  Each missing flag is validated against this install's
+    XLA before it lands (subprocess probe, a few seconds per round) —
+    unknown flags would otherwise abort the process at backend init.
+    Returns True when any flag was newly appended.
+    """
+    current = os.environ.get("XLA_FLAGS", "")
+    have = {f.split("=")[0] for f in current.split() if f.startswith("--")}
+    missing = [f for f in LATENCY_HIDING_XLA_FLAGS
+               if f.split("=")[0] not in have]
+    if not missing:
+        return False
+    if not _flags_accepted(missing):
+        missing = [f for f in missing if _flags_accepted([f])]
+    if not missing:
+        return False
+    os.environ["XLA_FLAGS"] = " ".join(filter(None, [current, *missing]))
+    return True
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -170,9 +170,32 @@ def main(argv=None) -> int:
                          "are TraceAnnotation'd)")
     ap.add_argument("--probe-overlap", action="store_true",
                     help="after the run, measure decode overlap efficiency "
-                         "(overlapped vs sequential ISO schedule on "
-                         "identical synthetic batches; paged engine only)")
+                         "per collective schedule (sequential vs batch-split "
+                         "vs ladder vs cross-block on identical synthetic "
+                         "batches; paged engine only)")
+    ap.add_argument("--decode-schedule", default="auto",
+                    choices=["auto", "sequential", "batch_split",
+                             "cross_block"],
+                    help="decode collective schedule (core/iso.py): auto "
+                         "picks batch_split when the mesh + batch allow it; "
+                         "cross_block defers every all-reduce to the next "
+                         "stage top (token-identical; pays off with "
+                         "--latency-hiding).  Ladder wiring is an ARCH "
+                         "(--arch ladder-qwen3-4b ...), not a schedule flag")
+    ap.add_argument("--latency-hiding", action="store_true",
+                    help="set the async-collective XLA flags "
+                         "(launch/mesh.LATENCY_HIDING_XLA_FLAGS) before "
+                         "backend init so the latency-hiding scheduler can "
+                         "fill the deferred-collective windows the "
+                         "cross_block/ladder schedules open")
     args = ap.parse_args(argv)
+    if args.latency_hiding:
+        # must land in XLA_FLAGS before the first backend touch below
+        # (jax.random.PRNGKey init); mesh.py keeps imports side-effect-free
+        # precisely so this ordering works
+        from repro.launch.mesh import enable_latency_hiding
+        if enable_latency_hiding():
+            print("[xla] async-collective latency-hiding flags enabled")
     if args.probe_overlap and not args.paged:
         ap.error("--probe-overlap requires --paged")
     if (args.autotune or args.cost_table) and not args.paged:
@@ -207,7 +230,9 @@ def main(argv=None) -> int:
                             else args.cost_table,
                             disagg=args.disagg,
                             decode_pool_pages=args.decode_pool_pages,
-                            migrate_batch=args.migrate_batch)
+                            migrate_batch=args.migrate_batch,
+                            decode_schedule=args.decode_schedule,
+                            latency_hiding=args.latency_hiding)
     config = Config(model=cfg, parallel=ParallelConfig(data=1, model=args.tp),
                     iso=iso, runtime=RuntimeConfig(mode="serve"),
                     serving=serving)
@@ -344,11 +369,13 @@ def main(argv=None) -> int:
         res = eng.measure_overlap_efficiency()
         exp = res["exposed_comm_s"]
         print(f"overlap probe: efficiency={res['overlap_efficiency']:.3f} "
-              f"t_seq={res['t_sequential_s'] * 1e3:.2f}ms "
-              f"t_ovl={res['t_overlap_s'] * 1e3:.2f}ms "
+              f"ladder_speedup={res['ladder_speedup']:.3f}"
+              f"{' (proxy)' if res['ladder_proxy'] else ''} "
               f"exposed_comm="
               f"{'n/a' if exp is None else f'{exp * 1e3:.2f}ms'} "
               f"(tp={res['tp']}, B={res['batch']})")
+        for name, t in sorted(res["schedules"].items()):
+            print(f"  schedule {name:<12} {t * 1e3:.2f} ms/step")
     if args.trace_out:
         from repro.obs import write_chrome_trace
         n = write_chrome_trace(eng.trace.events(), args.trace_out)

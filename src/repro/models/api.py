@@ -44,11 +44,14 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig,
 
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
                 unroll: bool = False, block_tables=None, decode_mask=None,
-                overlap_batch: bool = False, kv_splits: int = 1):
+                overlap_batch: bool = False, kv_splits: int = 1,
+                schedule: str = None):
     """tokens: (B,K) — K=1 plain decode, K>1 a speculative verify window
     (dense caches AND the paged path via ``block_tables``; see
     models/decoder.decode_step for the full contract).  ``kv_splits`` (static)
-    selects split-KV flash-decode for the paged path."""
+    selects split-KV flash-decode for the paged path; ``schedule`` picks the
+    collective schedule (sequential / batch_split / cross_block / ladder /
+    ladder_seq — ``overlap_batch`` is the legacy batch_split spelling)."""
     if cfg.family == "audio":
         assert block_tables is None, "paged decode does not support enc-dec"
         return whisper_lib.whisper_decode_step(params, cfg, ctx, tokens, caches,
@@ -57,7 +60,7 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches, lengths,
                                unroll=unroll, block_tables=block_tables,
                                decode_mask=decode_mask,
                                overlap_batch=overlap_batch,
-                               kv_splits=kv_splits)
+                               kv_splits=kv_splits, schedule=schedule)
 
 
 def init_caches(cfg: ModelConfig, batch: int, cache_len: int, tp: int,

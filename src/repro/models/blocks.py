@@ -253,6 +253,15 @@ BLOCK_STAGES = {
 }
 
 
+def pattern_all_reduces(pattern) -> bool:
+    """True when every stage of every block kind in ``pattern`` ends in a TP
+    all-reduce — the precondition for the ladder-residual wiring
+    (core/iso.run_stack_decode_ladder): a non-reducing stage (sLSTM) has no
+    collective to lag behind the next stage's compute, so the one-stage
+    residual lag would change the function for no overlap win."""
+    return all(r for kind in pattern for _, r in BLOCK_STAGES[kind])
+
+
 # --------------------------------------------------------------------------
 # per-layer param init
 # --------------------------------------------------------------------------

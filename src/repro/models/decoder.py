@@ -146,6 +146,14 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     B, S, D = embeds.shape
 
     lengths = split_chunks(S, iso, cfg, tp=ctx.tp)
+    ladder = cfg.residual_wiring == "ladder"
+    if ladder:
+        # ladder wiring supplies the overlap itself (stage k-1's reduce
+        # hides behind stage k's compute); an ISO chunk interleave would
+        # resolve each chunk's pending during the OTHER chunk's unit and
+        # silently restore the standard wiring per chunk — single-chunk
+        # schedule, always, so chunked/resumed grants stay function-equal
+        lengths = [S]
     starts, acc = [], 0
     for l in lengths:
         starts.append(acc)
@@ -165,7 +173,7 @@ def prefill(params, cfg: ModelConfig, ctx: AxisCtx, iso: ISOConfig, *,
     xs_final, extras = run_stack_prefill(
         params["periods"], cfg.block_pattern, x_chunks, tuple(starts), sctx, ctx,
         layer_statics=layer_statics if prefix_caches is None else prefix_caches,
-        remat=remat, unroll=unroll)
+        remat=remat, unroll=unroll, ladder=ladder)
     x = jnp.concatenate(xs_final, axis=1) if len(xs_final) > 1 else xs_final[0]
     x = _final(params, x, cfg)
 
@@ -226,10 +234,15 @@ def _build_caches(extras: Sequence[Dict], cfg: ModelConfig, B: int, S: int,
 # decode
 # ---------------------------------------------------------------------------
 
+DECODE_SCHEDULES = ("sequential", "batch_split", "cross_block", "ladder",
+                    "ladder_seq")
+
+
 def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
                 lengths, unroll: bool = False, block_tables=None,
                 decode_mask=None, overlap_batch: bool = False,
-                kv_splits: int = 1) -> Tuple[jnp.ndarray, Any]:
+                kv_splits: int = 1,
+                schedule: str = None) -> Tuple[jnp.ndarray, Any]:
     """tokens: (B,K) int32 — K=1 plain decode, K>1 a speculative verify
     window whose token qi sits at position ``lengths[b] + qi``; lengths:
     (B,) tokens already processed.
@@ -239,15 +252,36 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
     (B, MB) maps positions to pages; ``decode_mask`` (B,) marks the slots
     really decoding (others scatter to the scratch page).  The K-token
     window runs through the same kernel grid (see kernels/flash_decode.py)
-    and scatters all K positions' KV.  ``overlap_batch`` switches to the
-    batch-split ISO schedule (core/iso.py) so each half's TP all-reduce
-    hides behind the other half's compute.  ``kv_splits`` (static) runs the
+    and scatters all K positions' KV.  ``kv_splits`` (static) runs the
     paged attention's page walk as that many sequence-parallel spans
-    (split-KV flash-decode) — it rides through StageCtx into both decode
-    drivers, orthogonal to ``overlap_batch``.
+    (split-KV flash-decode) — it rides through StageCtx into every decode
+    driver, orthogonal to the schedule.
+
+    ``schedule`` picks the collective schedule (core/iso.py):
+
+    * ``"sequential"`` — immediate reduce per stage (run_stack_decode);
+    * ``"batch_split"`` — each batch half's reduce hides behind the other
+      half's compute (run_stack_decode_overlap; falls back to sequential
+      at B < 2);
+    * ``"cross_block"`` — deferred reduces resolve at the next stage top,
+      riding the scan carry across block boundaries (token-identical to
+      sequential);
+    * ``"ladder"`` / ``"ladder_seq"`` — the ladder-residual driver with
+      deferred / immediate collectives (run_stack_decode_ladder).
+
+    A ladder-wired config (``cfg.residual_wiring == "ladder"``) always runs
+    the ladder driver — the wiring is part of the model function — with any
+    non-sequential schedule mapping to deferred collectives.  Conversely,
+    forcing ``schedule="ladder"`` on a standard-wired config runs the
+    REWIRED function (the overlap probe uses this as a timing proxy; never
+    serve with it).  ``overlap_batch=True`` is the legacy spelling of
+    ``schedule="batch_split"``.
 
     Returns (logits_local (B,K,V_loc), updated caches).
     """
+    if schedule is None:
+        schedule = "batch_split" if overlap_batch else "sequential"
+    assert schedule in DECODE_SCHEDULES, schedule
     K = tokens.shape[1]
     x = embed_tokens(params, tokens, cfg, ctx)
     if cfg.pos_type == "sinusoidal":
@@ -260,14 +294,21 @@ def decode_step(params, cfg: ModelConfig, ctx: AxisCtx, tokens, caches,
     sctx.block_tables = block_tables
     sctx.decode_mask = decode_mask
     sctx.kv_splits = kv_splits
-    if overlap_batch:
+    if cfg.residual_wiring == "ladder" or schedule in ("ladder", "ladder_seq"):
+        from repro.core.iso import run_stack_decode_ladder
+        x, new_caches = run_stack_decode_ladder(
+            params["periods"], cfg.block_pattern, x, caches, sctx, ctx,
+            unroll=unroll,
+            defer=schedule not in ("sequential", "ladder_seq"))
+    elif schedule == "batch_split":
         from repro.core.iso import run_stack_decode_overlap
         x, new_caches = run_stack_decode_overlap(
             params["periods"], cfg.block_pattern, x, caches, sctx, ctx,
             unroll=unroll)
     else:
         x, new_caches = run_stack_decode(params["periods"], cfg.block_pattern,
-                                         x, caches, sctx, ctx, unroll=unroll)
+                                         x, caches, sctx, ctx, unroll=unroll,
+                                         schedule=schedule)
     x = _final(params, x, cfg)
     logits = emb_lib.lm_head_local(params["embed"], x)
     return logits, new_caches

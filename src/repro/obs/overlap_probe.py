@@ -1,29 +1,50 @@
-"""Overlap-efficiency probe: how much decode all-reduce does ISO hide?
+"""Overlap-efficiency probe: how much decode all-reduce does each schedule hide?
 
-Times the batch-split overlapped decode schedule
-(``core/iso.run_stack_decode_overlap``) against the sequential one
-(``run_stack_decode``) on IDENTICAL synthetic batches through the paged
-engine's real jitted decode closure, and decomposes the step:
+Times the decode collective schedules (core/iso.py) against each other on
+IDENTICAL synthetic batches through the paged engine's real jitted decode
+closure machinery:
 
-    overlap_efficiency = 1 - t_overlap / t_sequential
-    hidden_comm        = max(0, t_sequential - t_overlap)
-    exposed_comm       = max(0, t_overlap - t_compute)       (per step)
+  * ``sequential``  — immediate reduce per stage (the baseline);
+  * ``batch_split`` — each batch half's reduce hides behind the other half's
+    compute (``run_stack_decode_overlap``; needs B >= 2);
+  * ``ladder``      — the ladder-residual driver with deferred collectives
+    (``run_stack_decode_ladder``): stage k-1's reduce completes behind stage
+    k's compute, across block boundaries, at any B;
+  * ``cross_block`` — deferred reduces resolving at the next stage top
+    (``run_stack_decode`` schedule="cross_block"): token-identical to
+    sequential, a structural window for the XLA latency-hiding scheduler.
 
-``t_compute`` comes from a third closure with collectives DISABLED
-(``AxisCtx()`` — tp_axis None degrades psum to identity inside the same
-shard_map), i.e. the compute-only floor; the gap between the sequential path
-and that floor is the step's total communication time.  Without a mesh there
-is no collective to hide, all three paths coincide and efficiency reports
-~0 — the probe is still exercised (tests), it just measures nothing.
+and decomposes the step:
+
+    overlap_efficiency        = 1 - t_batch_split / t_sequential
+    overlap_efficiency_ladder = 1 - t_ladder / t_sequential
+    ladder_speedup            = t_sequential / t_ladder
+    hidden_comm               = max(0, t_sequential - t_batch_split)
+    exposed_comm              = max(0, t_batch_split - t_compute)
+
+``t_compute`` comes from a closure with collectives DISABLED (``AxisCtx()``
+— tp_axis None degrades psum to identity inside the same shard_map), i.e.
+the compute-only floor; the gap between the sequential path and that floor
+is the step's total communication time.  Without a mesh there is no
+collective to hide, the schedules coincide and every efficiency reports ~0
+— the probe is still exercised (tests), it just measures nothing.
+
+On a STANDARD-wired engine the ladder number is a proxy: it times the
+ladder-REWIRED function (a different model — see configs/ladder.py) at this
+engine's exact shapes, which is legitimate for timing because the two twins
+are FLOP-identical; ``ladder_proxy=True`` flags it.  On a ladder-wired
+engine, "sequential" is the immediate-collective twin of the same ladder
+function, so ``ladder_speedup`` is a true schedule speedup and
+``batch_split`` is skipped (the ladder driver owns the overlap).
 
 Safety: the probe builds its OWN closures in ``engine._probe_decode_fns``
 (never ``_decode_fns`` — the CI compile-guard lane pins that cache's key
 set), none of the engine's decode closures donate their buffers, and every
-output is discarded after a ``jax.block_until_ready`` fence — engine KV/state
-arrays are untouched, so the probe can run before, between or after real
-traffic.  Inputs are synthetic: a full batch of fake block tables pointing at
-real pool pages with near-full lengths (the memory-bound regime the paper's
-decode claim is about).
+output is discarded after a ``jax.block_until_ready`` fence — engine
+KV/state arrays are untouched, so the probe can run before, between or
+after real traffic.  Inputs are synthetic: a full batch of fake block
+tables pointing at real pool pages with near-full lengths (the memory-bound
+regime the paper's decode claim is about).
 """
 from __future__ import annotations
 
@@ -34,6 +55,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.models.blocks import pattern_all_reduces
 
 
 def _median_time(call, iters: int, warmup: int) -> float:
@@ -49,23 +72,28 @@ def _median_time(call, iters: int, warmup: int) -> float:
 
 def decode_overlap_probe(engine, iters: int = 10, warmup: int = 3
                          ) -> Dict[str, Any]:
-    """Measure the engine's decode-step overlap efficiency.
+    """Measure the engine's per-schedule decode-step times.
 
-    Returns ``{overlap_efficiency, t_sequential_s, t_overlap_s, t_compute_s,
-    exposed_comm_s, hidden_comm_s, comm_total_s, batch, tokens_resident,
-    tp, iters}``.  ``t_compute_s``/``exposed_comm_s`` are None when the
-    collectives-disabled variant cannot run (exotic shard_map spec mismatch).
-    """
+    Returns ``{overlap_efficiency, overlap_efficiency_ladder,
+    ladder_speedup, ladder_proxy, schedules, t_sequential_s, t_overlap_s,
+    t_ladder_s, t_cross_block_s, t_compute_s, exposed_comm_s,
+    hidden_comm_s, comm_total_s, batch, tokens_resident, tp, iters}``.
+    ``t_overlap_s`` keeps its historic meaning (the batch-split time; 0.0
+    when B < 2).  ``t_compute_s``/``exposed_comm_s`` are None when the
+    collectives-disabled variant cannot run (exotic shard_map spec
+    mismatch)."""
     B = engine.max_batch
     ps, MB = engine.ps, engine.max_blocks
+    ladder_wired = engine.cfg.residual_wiring == "ladder"
     result: Dict[str, Any] = {
-        "overlap_efficiency": 0.0, "t_sequential_s": 0.0, "t_overlap_s": 0.0,
+        "overlap_efficiency": 0.0, "overlap_efficiency_ladder": 0.0,
+        "ladder_speedup": 0.0, "ladder_proxy": not ladder_wired,
+        "schedules": {}, "t_sequential_s": 0.0, "t_overlap_s": 0.0,
+        "t_ladder_s": 0.0, "t_cross_block_s": 0.0,
         "t_compute_s": None, "exposed_comm_s": None, "hidden_comm_s": 0.0,
         "comm_total_s": None, "batch": B, "tokens_resident": 0,
         "tp": engine.tp, "iters": iters,
     }
-    if B < 2:
-        return result                     # batch-split needs two halves
 
     # synthetic resident state: every slot holds as many pages as an even
     # pool split allows, lengths one short of capacity (the +1 decode token
@@ -90,21 +118,38 @@ def decode_overlap_probe(engine, iters: int = 10, warmup: int = 3
         with engine._mesh_ctx():
             return _median_time(call, iters, warmup)
 
-    t_seq = run(engine._get_probe_decode(overlap=False))
-    t_ovl = run(engine._get_probe_decode(overlap=True))
-    result["t_sequential_s"] = t_seq
-    result["t_overlap_s"] = t_ovl
-    if t_seq > 0:
+    # schedule sweep: on a ladder-wired engine "sequential"/"ladder" resolve
+    # (via models/decoder.decode_step) to the immediate/deferred twins of
+    # the ladder function, and batch_split is skipped — the ladder driver
+    # owns the overlap; cross_block only applies to the standard wiring
+    names = ["sequential", "ladder"] if ladder_wired else \
+        ["sequential", "batch_split", "ladder", "cross_block"]
+    if B < 2 and "batch_split" in names:
+        names.remove("batch_split")       # batch-split needs two halves
+    if not pattern_all_reduces(engine.cfg.block_pattern):
+        names.remove("ladder")            # ladder needs all-reducing stages
+    for name in names:
+        result["schedules"][name] = run(engine._get_probe_decode(name))
+    t_seq = result["t_sequential_s"] = result["schedules"]["sequential"]
+    t_ovl = result["t_overlap_s"] = result["schedules"].get("batch_split",
+                                                            0.0)
+    t_lad = result["t_ladder_s"] = result["schedules"].get("ladder", 0.0)
+    result["t_cross_block_s"] = result["schedules"].get("cross_block", 0.0)
+    if t_seq > 0 and t_ovl > 0:
         result["overlap_efficiency"] = 1.0 - t_ovl / t_seq
-    result["hidden_comm_s"] = max(0.0, t_seq - t_ovl)
+    if t_seq > 0 and t_lad > 0:
+        result["overlap_efficiency_ladder"] = 1.0 - t_lad / t_seq
+        result["ladder_speedup"] = t_seq / t_lad
+    result["hidden_comm_s"] = max(0.0, t_seq - t_ovl) if t_ovl > 0 else 0.0
     try:
-        t_cmp = run(engine._get_probe_decode(overlap=False, comm=False))
+        t_cmp = run(engine._get_probe_decode("sequential", comm=False))
         result["t_compute_s"] = t_cmp
-        result["exposed_comm_s"] = max(0.0, t_ovl - t_cmp)
+        if t_ovl > 0:
+            result["exposed_comm_s"] = max(0.0, t_ovl - t_cmp)
         result["comm_total_s"] = max(0.0, t_seq - t_cmp)
     except Exception:
         # the no-comm variant is best-effort: identity collectives inside a
         # sharded closure can trip spec checks on some JAX versions; the
-        # headline efficiency number above never depends on it
+        # headline efficiency numbers above never depend on it
         pass
     return result

@@ -247,7 +247,7 @@ def measure_decode_depths(engine, Ks: Sequence[int] = (1,),
                     continue                   # span wider than the walk
                 if (K, S) not in fns:
                     fns[(K, S)] = engine._build_decode_fn(
-                        K, overlap=engine._decode_overlap, ctx=engine._ctx,
+                        K, schedule=engine._decode_schedule, ctx=engine._ctx,
                         kv_splits=S)
                 fn = fns[(K, S)]
 

@@ -98,10 +98,29 @@ class PagedEngine:
         else:
             self.tp = 1
             self._ctx = AxisCtx()
-        # decode all-reduces hide behind the other batch half's attention
-        # (core/iso.run_stack_decode_overlap) — only meaningful under TP
-        self._decode_overlap = (mesh is not None and sv.decode_overlap
-                                and sv.max_batch >= 2)
+        # decode collective schedule (core/iso.py).  Ladder-wired configs
+        # always run the ladder driver (the wiring is part of the model
+        # function); decode_overlap only picks deferred vs immediate
+        # collectives inside it.  Standard wiring: "auto" means the
+        # batch-split schedule under TP (each half's all-reduce hides behind
+        # the other half's attention), sequential otherwise; explicit
+        # ServingConfig.decode_schedule forces sequential / batch_split /
+        # cross_block.  A batch-split engine additionally falls back to a
+        # sequential closure per step when < 2 requests are resident
+        # (_decode_phase) — one active request has no second half.
+        if self.cfg.residual_wiring == "ladder":
+            self._decode_schedule = "ladder" if sv.decode_overlap \
+                else "ladder_seq"
+        elif sv.decode_schedule == "auto":
+            self._decode_schedule = "batch_split" \
+                if (mesh is not None and sv.decode_overlap
+                    and sv.max_batch >= 2) else "sequential"
+        else:
+            assert sv.decode_schedule in ("sequential", "batch_split",
+                                          "cross_block"), sv.decode_schedule
+            self._decode_schedule = sv.decode_schedule
+        # legacy view, pinned by tests: True iff batch-split is the schedule
+        self._decode_overlap = self._decode_schedule == "batch_split"
 
         # observability (src/repro/obs): typed registry behind the legacy
         # dict view, structured trace ring the scheduler/allocator/phase
@@ -203,9 +222,13 @@ class PagedEngine:
         self._finished: List[RequestState] = []
         self._prefill_fns: Dict[Tuple, Any] = {}
         self._decode_fns: Dict[Tuple[int, int], Any] = {}  # (K, kv_splits) -> fn
+        # sequential fallback closures for a batch-split engine running with
+        # < 2 resident requests — kept OUT of _decode_fns so the CI
+        # compile-guard lane's pinned key set stays schedule-pure
+        self._decode_fallback_fns: Dict[Tuple[int, int], Any] = {}
         # overlap-probe closures live OUTSIDE _decode_fns: the CI
         # compile-guard lane pins that cache's key set to real traffic
-        self._probe_decode_fns: Dict[Tuple[bool, bool], Any] = {}
+        self._probe_decode_fns: Dict[Tuple[str, bool], Any] = {}
         self._copy_page_fn = None
         # legacy counter key set, pre-registered so `metrics[k] == 0` holds
         # before first use; timed sums are fenced EXECUTION time, the
@@ -627,36 +650,53 @@ class PagedEngine:
     def _get_decode(self, K: int = 1, S: int = 1):
         """Jitted decode closure for a K-token window (K=1 plain decode,
         K=spec_k+1 speculative verify) walking the pages in S split-KV
-        spans — one compiled closure per (K, S)."""
+        spans — one compiled closure per (K, S), all built on the engine's
+        decode schedule (``_decode_schedule``)."""
         key = (K, S)
         if key not in self._decode_fns:
             self._decode_fns[key] = self._build_decode_fn(
-                K, overlap=self._decode_overlap, ctx=self._ctx, kv_splits=S)
+                K, schedule=self._decode_schedule, ctx=self._ctx,
+                kv_splits=S)
         return self._decode_fns[key]
 
-    def _get_probe_decode(self, overlap: bool, comm: bool = True):
+    def _get_fallback_decode(self, K: int = 1, S: int = 1):
+        """Sequential decode closure for a batch-split engine step with < 2
+        resident requests (one active slot has no second half to overlap
+        with — core/iso.run_stack_decode_overlap would degrade anyway, and
+        running two half-calls where one is pure scratch wastes the step).
+        Cached apart from ``_decode_fns`` so the compile-guard key pins
+        stay schedule-pure."""
+        key = (K, S)
+        if key not in self._decode_fallback_fns:
+            self._decode_fallback_fns[key] = self._build_decode_fn(
+                K, schedule="sequential", ctx=self._ctx, kv_splits=S)
+        return self._decode_fallback_fns[key]
+
+    def _get_probe_decode(self, schedule: str, comm: bool = True):
         """Decode closure variants for the overlap-efficiency probe
-        (obs/overlap_probe.py): sequential vs batch-split schedule, plus a
+        (obs/overlap_probe.py): one per collective schedule (sequential /
+        batch_split / cross_block / ladder / ladder_seq), plus a
         collectives-disabled compute floor (``comm=False`` swaps in a bare
         AxisCtx — psum degrades to identity inside the same shard_map).
         Cached in ``_probe_decode_fns``, never ``_decode_fns``, whose key
         set the compile-guard lane pins to real traffic."""
-        key = (overlap, comm)
+        key = (schedule, comm)
         if key not in self._probe_decode_fns:
             ctx = self._ctx if comm else AxisCtx()
             # probes always walk sequentially (kv_splits=1): the probe
             # measures overlap efficiency, not split-KV reduce cost
             self._probe_decode_fns[key] = self._build_decode_fn(
-                1, overlap=overlap, ctx=ctx, kv_splits=1)
+                1, schedule=schedule, ctx=ctx, kv_splits=1)
         return self._probe_decode_fns[key]
 
     def measure_overlap_efficiency(self, iters: int = 10, warmup: int = 3):
-        """Time overlapped vs sequential decode on identical synthetic
-        batches; see obs/overlap_probe.decode_overlap_probe."""
+        """Time the decode collective schedules (sequential vs batch-split
+        vs ladder vs cross-block) on identical synthetic batches; see
+        obs/overlap_probe.decode_overlap_probe."""
         from repro.obs.overlap_probe import decode_overlap_probe
         return decode_overlap_probe(self, iters=iters, warmup=warmup)
 
-    def _build_decode_fn(self, K: int, overlap: bool, ctx: AxisCtx,
+    def _build_decode_fn(self, K: int, schedule: str, ctx: AxisCtx,
                          kv_splits: int = 1):
         cfg = self.cfg
         scratch = self.kv.scratch_page
@@ -676,7 +716,7 @@ class PagedEngine:
                 caches.append(c)
             logits, new_caches = api.decode_step(
                 params, cfg, ctx, toks, tuple(caches), lengths,
-                block_tables=bt, decode_mask=active, overlap_batch=overlap,
+                block_tables=bt, decode_mask=active, schedule=schedule,
                 kv_splits=kv_splits)
             B = toks.shape[0]
             page, off, ok, positions = window_page_coords(
@@ -1089,9 +1129,18 @@ class PagedEngine:
                 toks[i, 1:] = drafts[i]
         lens = jnp.asarray(self.lengths.astype(np.int32))
         S = self._kv_splits(K)
+        if self._decode_schedule == "batch_split" and len(active) < 2:
+            # a single resident request has no second batch half to overlap
+            # with — run the sequential closure for this step instead of a
+            # batch-split call whose other half is pure scratch work
+            decode_fn = self._get_fallback_decode(K, S)
+            self.trace.emit("decision", point="decode_schedule",
+                            fallback=1, active=len(active), k=int(K))
+        else:
+            decode_fn = self._get_decode(K, S)
         t0 = time.perf_counter()
         with self._mesh_ctx(), jaxprof.annotate(f"decode/K={K}/S={S}"):
-            logits, new_kv, new_states = self._get_decode(K, S)(
+            logits, new_kv, new_states = decode_fn(
                 self.params, jnp.asarray(toks), jnp.asarray(bt), lens,
                 self.kv.arrays, self.states, jnp.asarray(mask))
         # fence EVERY output inside the timed region: the logits transfer

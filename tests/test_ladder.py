@@ -1,0 +1,298 @@
+"""Ladder-residual wiring (configs/ladder.py + core/iso.py ladder drivers).
+
+The ladder variant REWIRES the residual stream (stage k reads the stream as
+of stage k-2) so each stage's all-reduce completes behind the next stage's
+compute.  That is a different model function from the standard wiring —
+so the correctness contract here is a SCHEDULE differential: the deferred-
+collective ladder drivers must be token-equal at fp32 to their immediate-
+collective twins (``ladder_seq`` / ``run_layer`` post-compute resolve) of
+the SAME ladder function, across prefill chunking, preemption-recompute,
+prefix sharing, speculation, paged vs dense caches, and tp=1 vs tp=4
+(subprocess lane).  Runs in the CI multi-device job alongside
+tests/test_tp_paged.py."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import iso_cfg, tiny_dense, tiny_xlstm
+from repro.config import Config, ISOConfig, ParallelConfig, ServingConfig, \
+    get_model_config, ladder_variant
+from repro.models import api
+from repro.serving import Engine, PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+
+def _ladder_tiny(**kw):
+    return ladder_variant(tiny_dense(vocab_size=64, **kw))
+
+
+def _params(cfg, tp=1):
+    return api.init_params(jax.random.PRNGKey(0), cfg, tp=tp,
+                           dtype=jnp.float32)
+
+
+def _paged(cfg, iso, params, *, max_batch=3, num_pages=0, decode_overlap=True,
+           max_len=96, budget=48, spec_k=0, prefix_sharing=True):
+    sv = ServingConfig(page_size=8, max_batch=max_batch, max_len=max_len,
+                       prefill_token_budget=budget, num_pages=num_pages,
+                       decode_overlap=decode_overlap, spec_k=spec_k,
+                       prefix_sharing=prefix_sharing)
+    return PagedEngine(Config(model=cfg,
+                              parallel=ParallelConfig(data=1, model=1),
+                              iso=iso, serving=sv), params, mesh=None)
+
+
+def _serve(eng, prompts, max_new=8):
+    rids = [eng.add_request(Request(
+        prompt=p.copy(),
+        sampling=SamplingParams(max_new_tokens=max_new, eos_id=-1)))
+        for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_ladder_configs_registered():
+    for name in ("ladder-qwen3-4b", "ladder-qwen3-8b", "ladder-paper-30b"):
+        cfg = get_model_config(name)
+        assert cfg.residual_wiring == "ladder"
+        twin = get_model_config(name[len("ladder-"):])
+        assert twin.residual_wiring == "standard"
+        assert cfg.block_pattern == twin.block_pattern
+        assert cfg.num_layers == twin.num_layers
+
+
+def test_ladder_variant_guards():
+    lad = _ladder_tiny()
+    assert lad.residual_wiring == "ladder"
+    assert lad.name == "ladder-t-dense"
+    with pytest.raises(AssertionError):
+        ladder_variant(lad)                     # already ladder-wired
+    with pytest.raises(AssertionError):
+        ladder_variant(tiny_xlstm())            # sLSTM stage never reduces
+
+
+# ---------------------------------------------------------------------------
+# model-function level
+# ---------------------------------------------------------------------------
+
+def test_ladder_prefill_forces_single_chunk():
+    """ISO chunking would restore the standard wiring per chunk, so the
+    ladder prefill runs single-chunk regardless of ISOConfig — a chunked
+    call must produce bit-identical logits to an unchunked one (and not
+    trip run_layer's single-chunk assert)."""
+    cfg = _ladder_tiny()
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 2, 64,
+                              jnp.int32)
+    from repro.core.overlap import AxisCtx
+    ctx = AxisCtx()
+    out_chunked = api.prefill(params, cfg, ctx,
+                              iso_cfg(4, min_chunk_tokens=2, chunk_align=4),
+                              {"tokens": toks})
+    out_plain = api.prefill(params, cfg, ctx, ISOConfig(enabled=False),
+                            {"tokens": toks})
+    assert jnp.array_equal(out_chunked["logits_local"],
+                           out_plain["logits_local"])
+
+
+def test_ladder_decode_defer_equals_immediate_stack():
+    """run_stack_decode_ladder(defer=True) vs its psum_now twin: bit-equal
+    at fp32 on dense ring caches, K=1 and a K=3 speculative window."""
+    cfg = _ladder_tiny()
+    params = _params(cfg)
+    from repro.core.overlap import AxisCtx
+    ctx = AxisCtx()
+    caches = api.init_caches(cfg, 2, 32, 1, dtype=jnp.float32)
+    lens = jnp.array([4, 9], jnp.int32)
+    for K in (1, 3):
+        toks = jnp.arange(2 * K, dtype=jnp.int32).reshape(2, K) + 2
+        l_d, c_d = api.decode_step(params, cfg, ctx, toks, caches, lens,
+                                   schedule="ladder")
+        l_i, c_i = api.decode_step(params, cfg, ctx, toks, caches, lens,
+                                   schedule="ladder_seq")
+        assert jnp.array_equal(l_d, l_i), K
+        assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+            jnp.array_equal, c_d, c_i))
+
+
+def test_ladder_differs_from_standard_function():
+    """Sanity that the ladder variant is really a different function — the
+    differential above would pass trivially if the rewiring were a no-op."""
+    std = tiny_dense(vocab_size=64)
+    lad = ladder_variant(std)
+    params = _params(std)                 # same param pytree shape
+    from repro.core.overlap import AxisCtx
+    ctx = AxisCtx()
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 2, 64,
+                              jnp.int32)
+    o_std = api.prefill(params, std, ctx, ISOConfig(enabled=False),
+                        {"tokens": toks})
+    o_lad = api.prefill(params, lad, ctx, ISOConfig(enabled=False),
+                        {"tokens": toks})
+    assert not jnp.allclose(o_std["logits_local"], o_lad["logits_local"])
+
+
+# ---------------------------------------------------------------------------
+# engine level (tp=1, fp32)
+# ---------------------------------------------------------------------------
+
+def test_ladder_engine_defer_equals_immediate_mixed_traffic():
+    """The full serving differential: ladder engine with deferred
+    collectives (decode_overlap=True -> "ladder") vs immediate
+    ("ladder_seq"), under prefix sharing + a pool tight enough to force
+    preemption-recompute.  Token streams must match exactly — this is what
+    guarantees ladder prefill and ladder decode are the same function (a
+    recomputed prompt replays through prefill, then decode resumes)."""
+    cfg = _ladder_tiny()
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    system = rng.integers(2, 64, 16).astype(np.int32)
+    prompts = [np.concatenate([system,
+                               rng.integers(2, 64, n).astype(np.int32)])
+               for n in (20, 6, 13)]
+
+    def run(decode_overlap, num_pages):
+        eng = _paged(cfg, iso, params, max_batch=2, num_pages=num_pages,
+                     decode_overlap=decode_overlap, max_len=64, budget=32)
+        toks = _serve(eng, prompts, max_new=8)
+        return toks, eng
+
+    tight = 7                                   # forces eviction+recompute
+    t_defer, e_defer = run(True, tight)
+    t_imm, e_imm = run(False, tight)
+    t_roomy, e_roomy = run(True, 0)
+    assert e_defer._decode_schedule == "ladder"
+    assert e_imm._decode_schedule == "ladder_seq"
+    assert e_defer.metrics["preemptions"] > 0
+    assert e_roomy.metrics["preemptions"] == 0
+    assert t_defer == t_imm, "deferred vs immediate ladder twins diverged"
+    assert t_defer == t_roomy, "preemption-recompute diverged"
+    assert e_defer.metrics["prefix_shared_tokens"] > 0
+
+
+def test_ladder_paged_equals_dense_engine():
+    """Paged ladder serving (deferred) vs the dense Engine on the same
+    ladder config (immediate collectives through the default sequential
+    schedule): same tokens at fp32."""
+    cfg = _ladder_tiny()
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, 64, n).astype(np.int32) for n in (18, 7, 25)]
+    dense = Engine(Config(model=cfg, parallel=ParallelConfig(data=1, model=1),
+                          iso=iso), params, mesh=None, max_batch=2,
+                   max_len=96, bucket=16)
+    d = _serve(dense, prompts, max_new=6)
+    p = _serve(_paged(cfg, iso, params, max_batch=2), prompts, max_new=6)
+    assert d == p
+
+
+def test_ladder_engine_single_request_b1():
+    """Ladder needs no second batch half: a max_batch=1 engine (decode
+    B=1) must serve, deferred == immediate."""
+    cfg = _ladder_tiny()
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = _params(cfg)
+    prompt = np.random.default_rng(9).integers(2, 64, 14).astype(np.int32)
+    t1 = _serve(_paged(cfg, iso, params, max_batch=1), [prompt], max_new=10)
+    t2 = _serve(_paged(cfg, iso, params, max_batch=1, decode_overlap=False),
+                [prompt], max_new=10)
+    assert t1 == t2 and len(t1[0]) == 10
+
+
+def test_ladder_engine_speculative_twin():
+    """spec_k=2 verify windows ride the ladder driver (K=3 decode calls);
+    deferred vs immediate must accept identical windows."""
+    cfg = _ladder_tiny()
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(2, 8, 20).astype(np.int32) for _ in range(2)]
+
+    def run(decode_overlap):
+        eng = _paged(cfg, iso, params, max_batch=2, spec_k=2, max_len=96,
+                     decode_overlap=decode_overlap)
+        toks = _serve(eng, prompts, max_new=10)
+        return toks, eng
+
+    t_d, e_d = run(True)
+    t_i, e_i = run(False)
+    assert t_d == t_i
+    assert e_d.metrics["spec_calls"] > 0
+    assert (3, 1) in e_d._decode_fns          # K = spec_k + 1 ladder closure
+
+
+# ---------------------------------------------------------------------------
+# tp=4 subprocess differential (CI multi-device lane, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import (Config, ISOConfig, ModelConfig, ParallelConfig,
+                          ServingConfig, ladder_variant)
+from repro.launch.mesh import make_mesh
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+cfg = ladder_variant(ModelConfig(
+    name="t-dense", family="dense", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=64, qk_norm=True))
+iso = ISOConfig(enabled=True, num_chunks=2, min_chunk_tokens=8, chunk_align=8)
+pc = ParallelConfig(data=1, model=4)
+mesh = make_mesh(pc)
+params = api.init_params(jax.random.PRNGKey(0), cfg, tp=4, dtype=jnp.float32)
+
+rng = np.random.default_rng(3)
+system = rng.integers(2, 64, 16).astype(np.int32)
+prompts = [np.concatenate([system, rng.integers(2, 8, n).astype(np.int32)])
+           for n in (30, 9, 17)]
+
+def run(decode_overlap, num_pages):
+    sv = ServingConfig(page_size=8, max_batch=2, max_len=96,
+                       prefill_token_budget=32, num_pages=num_pages,
+                       decode_overlap=decode_overlap, spec_k=2)
+    eng = PagedEngine(Config(model=cfg, parallel=pc, iso=iso, serving=sv),
+                      params, mesh=mesh)
+    rids = [eng.add_request(Request(prompt=p.copy(),
+            sampling=SamplingParams(max_new_tokens=8, eos_id=-1)))
+            for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids], eng
+
+# mixed traffic: prefix sharing on by default, spec_k=2 verify windows, and
+# a tight pool forcing preemption-recompute — deferred vs immediate ladder
+# collectives must be token-equal at fp32 under real tp=4 psums
+t_defer, e_defer = run(True, 8)
+t_imm, e_imm = run(False, 8)
+assert e_defer._decode_schedule == "ladder" and \
+    e_imm._decode_schedule == "ladder_seq"
+assert e_defer.metrics["preemptions"] > 0, "pool was meant to force eviction"
+assert e_defer.metrics["prefix_shared_tokens"] > 0
+assert e_defer.metrics["spec_calls"] > 0
+assert t_defer == t_imm, (t_defer, t_imm)
+print("ok ladder-tp4-defer==immediate", flush=True)
+
+t_roomy, _ = run(True, 0)
+assert t_roomy == t_defer, "preemption-recompute diverged under tp=4"
+print("ALL_LADDER_TP_OK")
+"""
+
+
+def test_ladder_tp4_subprocess():
+    res = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "ALL_LADDER_TP_OK" in res.stdout

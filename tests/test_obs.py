@@ -488,3 +488,90 @@ def test_overlap_probe_reports_unbatchable():
     eng = _paged_engine(cfg, iso, params, max_batch=1)
     res = eng.measure_overlap_efficiency(iters=1, warmup=0)
     assert res["overlap_efficiency"] == 0.0 and res["batch"] < 2
+
+
+def test_overlap_probe_reports_all_schedules():
+    """The probe now sweeps sequential / batch_split / ladder / cross_block
+    and derives the ladder headline numbers (a proxy on this standard-wired
+    engine)."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params)
+    res = eng.measure_overlap_efficiency(iters=2, warmup=1)
+    assert set(res["schedules"]) == {"sequential", "batch_split", "ladder",
+                                     "cross_block"}
+    assert all(t > 0 for t in res["schedules"].values())
+    assert res["ladder_proxy"] is True
+    assert res["ladder_speedup"] > 0
+    assert res["t_ladder_s"] == res["schedules"]["ladder"]
+    assert res["t_cross_block_s"] == res["schedules"]["cross_block"]
+    assert abs(res["overlap_efficiency_ladder"]
+               - (1 - res["t_ladder_s"] / res["t_sequential_s"])) < 1e-12
+    assert set(eng._probe_decode_fns) == {
+        ("sequential", True), ("batch_split", True), ("ladder", True),
+        ("cross_block", True), ("sequential", False)}
+
+
+def test_overlap_probe_under_split_kv_engine():
+    """An engine serving with decode_kv_splits > 1 keeps its probe
+    closures at kv_splits=1 (the probe measures collective schedules, not
+    split-KV reduces) and its serving state/closure keys untouched."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params, decode_kv_splits=2)
+    ref = _paged_engine(cfg, iso, params, decode_kv_splits=2)
+    rng = np.random.default_rng(17)
+    reqs = _requests(rng, (30, 12), new=4)
+    for e in (eng, ref):
+        for r in reqs:
+            e.add_request(Request(prompt=r.prompt.copy(),
+                                  sampling=r.sampling))
+    outs = eng.run_until_complete()
+    keys_after_traffic = set(eng._decode_fns)
+    assert any(k[1] > 1 for k in keys_after_traffic), \
+        "traffic was meant to exercise a split-KV closure"
+    pages_after_traffic = eng.alloc.used_pages
+    res = eng.measure_overlap_efficiency(iters=1, warmup=1)
+    assert res["t_sequential_s"] > 0
+    assert set(eng._decode_fns) == keys_after_traffic, \
+        "probe must not add serving decode closures"
+    assert all(isinstance(k[0], str) and isinstance(k[1], bool)
+               for k in eng._probe_decode_fns), \
+        "probe closures are keyed (schedule, comm), apart from (K, S)"
+    assert eng.alloc.used_pages == pages_after_traffic, "probe leaked pages"
+    refs = ref.run_until_complete()
+    assert [outs[r] for r in sorted(outs)] == [refs[r] for r in sorted(refs)]
+
+
+def test_overlap_probe_on_ladder_engine():
+    """On a ladder-wired engine the probe times the real schedule twins
+    (no batch_split/cross_block — the ladder driver owns the overlap),
+    reports ladder_proxy=False, and leaves engine state untouched."""
+    from repro.config import ladder_variant
+    cfg = ladder_variant(tiny_dense(vocab_size=64))
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    eng = _paged_engine(cfg, iso, params)
+    ref = _paged_engine(cfg, iso, params)
+    assert eng._decode_schedule == "ladder"
+    res = eng.measure_overlap_efficiency(iters=2, warmup=1)
+    assert set(res["schedules"]) == {"sequential", "ladder"}
+    assert res["ladder_proxy"] is False
+    assert res["ladder_speedup"] > 0
+    assert set(eng._decode_fns) == set(), "probe polluted serving closures"
+    assert set(eng._probe_decode_fns) == {
+        ("sequential", True), ("ladder", True), ("sequential", False)}
+    assert eng.alloc.used_pages == 0, "probe leaked pages"
+    reqs = _requests(np.random.default_rng(23), (18, 9), new=4)
+    for e in (eng, ref):
+        for r in reqs:
+            e.add_request(Request(prompt=r.prompt.copy(),
+                                  sampling=r.sampling))
+    outs = eng.run_until_complete()
+    refs = ref.run_until_complete()
+    assert [outs[r] for r in sorted(outs)] == [refs[r] for r in sorted(refs)]

@@ -1,0 +1,253 @@
+"""Decode collective schedules (core/iso.py) + psum_wait barrier semantics.
+
+Covers the decode-overlap bugfix sweep: the ``psum_wait`` self-barrier on
+trailing reduces, cross-block token identity vs sequential, odd-batch
+batch-split grids, and the B < 2 fallbacks (both the iso-level delegate in
+``run_stack_decode_overlap`` and the engine's per-step sequential closure
+when traffic drains to one resident request)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, iso_cfg
+from repro import compat
+from repro.config import Config, ParallelConfig, ServingConfig
+from repro.core.overlap import AxisCtx, Pending, psum_now, psum_start, \
+    psum_wait
+from repro.models import api
+from repro.serving import PagedEngine, Request
+from repro.serving.requests import SamplingParams
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# psum_wait barrier semantics (satellite: empty-overlap self-barrier)
+# ---------------------------------------------------------------------------
+
+def test_psum_wait_noop_empty_is_identity_no_barrier():
+    """tp_axis=None + no overlap outputs: identity value, and no barrier in
+    the jaxpr — the no-op ctx has nothing to pin."""
+    ctx = AxisCtx()
+    x = jnp.arange(4.0)
+    pend = psum_start(x, ctx)
+    assert isinstance(pend, Pending) and pend.noop
+    reduced, rebound = psum_wait(pend)
+    assert rebound == ()
+    assert jnp.array_equal(reduced, x)
+    jaxpr = jax.make_jaxpr(lambda y: psum_wait(psum_start(y, ctx))[0])(x)
+    assert "optimization_barrier" not in str(jaxpr)
+
+
+def test_psum_wait_noop_with_overlap_still_pins():
+    """Even a no-op reduce pins against overlap outputs (the schedule shape
+    must not depend on the mesh, or tp=1 oracles compile different graphs)."""
+    ctx = AxisCtx()
+    x = jnp.arange(4.0)
+    jaxpr = jax.make_jaxpr(
+        lambda y: psum_wait(psum_start(y, ctx), (y * 2,)))(x)
+    assert "optimization_barrier" in str(jaxpr)
+    reduced, (other,) = psum_wait(psum_start(x, ctx), (x * 2,))
+    assert jnp.array_equal(reduced, x) and jnp.array_equal(other, x * 2)
+
+
+def _tp1_mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def _sharded_jaxpr(fn, x, mesh):
+    wrapped = compat.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P(),
+                               check_vma=False)
+    return str(jax.make_jaxpr(wrapped)(x))
+
+
+def test_psum_wait_empty_overlap_self_barriers_real_reduce():
+    """A REAL (mesh-backed) trailing reduce with no overlap outputs must
+    stay behind a barrier: without it XLA's all-reduce combiner may merge
+    the deferred cross-block reduce with a neighbour, re-serializing the
+    schedule the caller staged."""
+    mesh = _tp1_mesh()
+    ctx = AxisCtx(tp_axis="model", tp=1)
+    x = jnp.arange(4.0)
+
+    def wait_only(y):
+        return psum_wait(psum_start(y, ctx))[0]
+
+    s = _sharded_jaxpr(wait_only, x, mesh)
+    assert "psum" in s and "optimization_barrier" in s
+    out = jax.jit(compat.shard_map(wait_only, mesh=mesh, in_specs=P(),
+                                   out_specs=P(), check_vma=False))(x)
+    assert jnp.array_equal(out, x)        # tp=1: reduce is value-identity
+
+
+def test_psum_wait_quantized_ctx_routes_and_barriers():
+    mesh = _tp1_mesh()
+    ctx = AxisCtx(tp_axis="model", tp=1, quantized_comm=True)
+    x = jnp.linspace(-2.0, 2.0, 8)
+
+    def wait_only(y):
+        return psum_wait(psum_start(y, ctx))[0]
+
+    s = _sharded_jaxpr(wait_only, x, mesh)
+    assert "optimization_barrier" in s
+    out = jax.jit(compat.shard_map(wait_only, mesh=mesh, in_specs=P(),
+                                   out_specs=P(), check_vma=False))(x)
+    # quantization round-trips through int8 blocks — close, not exact
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=0.05)
+
+
+def test_psum_now_matches_wait_value():
+    ctx = AxisCtx()
+    x = jnp.arange(6.0).reshape(2, 3)
+    assert jnp.array_equal(psum_now(x, ctx), psum_wait(psum_start(x, ctx))[0])
+
+
+# ---------------------------------------------------------------------------
+# schedule drivers through the engine (fp32: schedules must be token-equal)
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, iso, params, *, max_batch, schedule="auto", page_size=8,
+            max_len=96, budget=48, decode_overlap=True):
+    sv = ServingConfig(page_size=page_size, max_batch=max_batch,
+                       max_len=max_len, prefill_token_budget=budget,
+                       decode_schedule=schedule,
+                       decode_overlap=decode_overlap)
+    return PagedEngine(Config(model=cfg,
+                              parallel=ParallelConfig(data=1, model=1),
+                              iso=iso, serving=sv), params, mesh=None)
+
+
+def _serve(eng, prompts, max_new=8):
+    rids = [eng.add_request(Request(
+        prompt=p.copy(),
+        sampling=SamplingParams(max_new_tokens=max_new, eos_id=-1)))
+        for p in prompts]
+    outs = eng.run_until_complete()
+    return [outs[r] for r in rids]
+
+
+def _mixed_prompts(rng, n, lo=8, hi=24):
+    return [rng.integers(2, 64, int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+def test_cross_block_tokens_equal_sequential():
+    """Deferring every reduce to the next stage top must not change tokens
+    (fp32; the barrier is an identity and no mesh means identity reduces)."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    prompts = _mixed_prompts(np.random.default_rng(7), 5)
+    seq = _serve(_engine(cfg, iso, params, max_batch=3,
+                         schedule="sequential"), prompts)
+    xb = _serve(_engine(cfg, iso, params, max_batch=3,
+                        schedule="cross_block"), prompts)
+    assert seq == xb
+
+
+@pytest.mark.parametrize("max_batch", [3, 5, 7])
+def test_batch_split_odd_batch_tokens_equal_sequential(max_batch):
+    """Odd B splits as (B//2, B - B//2); every odd grid must stay
+    token-equal to the sequential schedule (fp32, identity collectives)."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    prompts = _mixed_prompts(np.random.default_rng(max_batch), max_batch + 2)
+    seq = _serve(_engine(cfg, iso, params, max_batch=max_batch,
+                         schedule="sequential"), prompts)
+    ovl = _serve(_engine(cfg, iso, params, max_batch=max_batch,
+                         schedule="batch_split"), prompts)
+    assert seq == ovl
+
+
+def test_overlap_stack_b1_falls_back_to_sequential():
+    """Direct iso-level call at B=1: run_stack_decode_overlap must degrade
+    to the sequential driver instead of crashing (pre-fix: assert B >= 2)."""
+    cfg = tiny_dense(vocab_size=64)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    caches = api.init_caches(cfg, 1, 32, 1, dtype=jnp.float32)
+    toks = jnp.array([[5]], jnp.int32)
+    lens = jnp.array([4], jnp.int32)
+    ctx = AxisCtx()
+    l_seq, _ = api.decode_step(params, cfg, ctx, toks, caches, lens,
+                               schedule="sequential")
+    l_ovl, _ = api.decode_step(params, cfg, ctx, toks, caches, lens,
+                               schedule="batch_split")
+    assert jnp.array_equal(l_seq, l_ovl)
+
+
+def test_engine_drain_to_one_uses_fallback_and_matches_sequential():
+    """Regression (the B < 2 crash): a batch-split engine whose traffic
+    drains to ONE resident decode must fall back to a sequential closure
+    for those steps — cached in ``_decode_fallback_fns`` so the main
+    ``_decode_fns`` key set stays schedule-pure — and still emit the same
+    tokens as an all-sequential engine."""
+    cfg = tiny_dense(vocab_size=64)
+    iso = iso_cfg(2, min_chunk_tokens=8, chunk_align=8)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, 64, 12).astype(np.int32) for _ in range(2)]
+
+    def run(schedule):
+        eng = _engine(cfg, iso, params, max_batch=2, schedule=schedule)
+        rids = []
+        for i, mn in enumerate((4, 40)):   # req 1 decodes long alone
+            rids.append(eng.add_request(Request(
+                prompt=prompts[i].copy(),
+                sampling=SamplingParams(max_new_tokens=mn, eos_id=-1))))
+        outs = eng.run_until_complete()
+        return [outs[r] for r in rids], eng
+
+    toks_ovl, eng_ovl = run("batch_split")
+    toks_seq, eng_seq = run("sequential")
+    assert toks_ovl == toks_seq
+    assert set(eng_ovl._decode_fallback_fns) == {(1, 1)}, \
+        "drained steps must compile the sequential fallback closure"
+    assert set(eng_ovl._decode_fns) == {(1, 1)}
+    assert not eng_seq._decode_fallback_fns
+    falls = [e for e in eng_ovl.trace.events()
+             if e.kind == "decision"
+             and e.payload.get("point") == "decode_schedule"]
+    assert falls and all(e.payload["active"] < 2 for e in falls)
+
+
+def test_enable_latency_hiding_idempotent(monkeypatch):
+    """All three flag names already present (any value): nothing is
+    appended, the env is untouched, and no subprocess probe runs."""
+    from repro.launch import mesh
+    preset = " ".join(f.split("=")[0] + "=false"
+                      for f in mesh.LATENCY_HIDING_XLA_FLAGS)
+    monkeypatch.setenv("XLA_FLAGS", preset)
+    monkeypatch.setattr(mesh, "_flags_accepted",
+                        lambda *a, **k: pytest.fail("probe must not run"))
+    assert mesh.enable_latency_hiding() is False
+    assert os.environ["XLA_FLAGS"] == preset
+
+
+def test_enable_latency_hiding_filters_rejected_flags(monkeypatch):
+    """Flags the installed XLA rejects must be filtered, not applied (a
+    CPU-only jaxlib aborts at backend init on an unknown flag)."""
+    from repro.launch import mesh
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+    ok = {"--xla_gpu_enable_latency_hiding_scheduler=true"}
+    monkeypatch.setattr(mesh, "_flags_accepted",
+                        lambda flags, **k: set(flags) <= ok)
+    assert mesh.enable_latency_hiding() is True
+    flags = os.environ["XLA_FLAGS"].split()
+    assert flags == ["--xla_force_host_platform_device_count=2",
+                     "--xla_gpu_enable_latency_hiding_scheduler=true"]
+
+
+def test_decode_schedule_validation():
+    cfg = tiny_dense(vocab_size=64)
+    params = api.init_params(jax.random.PRNGKey(0), cfg, tp=1,
+                             dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        _engine(cfg, iso_cfg(), params, max_batch=2, schedule="bogus")
